@@ -1,0 +1,40 @@
+"""Shared helpers for the paper-reproduction benchmarks."""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+RESULTS = pathlib.Path(__file__).resolve().parent / "results"
+
+
+def save(name: str, payload) -> pathlib.Path:
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    p = RESULTS / f"{name}.json"
+    p.write_text(json.dumps(payload, indent=1))
+    return p
+
+
+def maybe_plot(name: str, draw):
+    """Render a figure if matplotlib is available; never fail the bench."""
+    try:
+        import matplotlib
+        matplotlib.use("Agg")
+        import matplotlib.pyplot as plt
+        fig = plt.figure(figsize=(7, 4.5))
+        draw(plt)
+        RESULTS.mkdir(parents=True, exist_ok=True)
+        fig.tight_layout()
+        fig.savefig(RESULTS / f"{name}.png", dpi=110)
+        plt.close(fig)
+    except Exception as e:        # pragma: no cover
+        print(f"[plot skipped: {e}]")
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.time() - self.t0

@@ -1,0 +1,151 @@
+"""Roofline analysis over the dry-run artifacts (deliverable g).
+
+Reads benchmarks/results/dryrun/*.json (written by repro.launch.dryrun),
+computes the three per-device roofline terms against TPU v5e constants,
+identifies the dominant bottleneck, and emits the EXPERIMENTS.md tables.
+
+  compute    = HLO_dot_flops / PEAK_FLOPS          (197 TFLOP/s bf16 / chip)
+  memory     = HLO_hbm_bytes / HBM_BW              (819 GB/s / chip)
+  collective = wire_bytes    / ICI_BW              (50 GB/s / link)
+
+MODEL_FLOPS (useful work): 6*N*D train / 2*N*D prefill / 2*N*B decode, with
+N = active params (MoE: top-k experts' worth). The ratio
+MODEL_FLOPS / HLO_FLOPs exposes remat/dispatch overheads.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--dir ...] [--md out.md]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+from typing import Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+HERE = pathlib.Path(__file__).resolve().parent
+DEFAULT_DIR = HERE / "results" / "dryrun"
+
+_PCOUNT_CACHE = {}
+
+
+def _model_flops(rec) -> Optional[float]:
+    """Analytic useful FLOPs per device for this cell."""
+    arch, shape = rec["arch"], rec.get("shape", "")
+    if arch == "paper-svm":
+        return None
+    from repro.configs import get_config
+    from repro.launch.specs import SHAPES
+    from repro.models.model import count_params
+    if arch not in _PCOUNT_CACHE:
+        cfg = get_config(arch)
+        _PCOUNT_CACHE[arch] = (count_params(cfg),
+                               count_params(cfg, active_only=True))
+    total, active = _PCOUNT_CACHE[arch]
+    info = SHAPES[shape]
+    B, S = info["batch"], info["seq"]
+    if rec["kind"] == "train":
+        D = B * S
+        f = 6.0 * active * D
+    elif rec["kind"] == "prefill":
+        f = 2.0 * active * B * S
+    else:                                     # decode: one token per seq
+        f = 2.0 * active * B
+    return f / rec["n_devices"]
+
+
+def analyze(rec) -> dict:
+    t_c = rec["flops_per_device"] / PEAK_FLOPS
+    t_m = rec["hbm_bytes_per_device"] / HBM_BW
+    t_x = rec["collective_wire_bytes_per_device"] / ICI_BW
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+              key=lambda kv: kv[1])
+    mf = _model_flops(rec)
+    useful = (mf / rec["flops_per_device"]
+              if mf and rec["flops_per_device"] > 0 else None)
+    # roofline fraction: useful compute time / bound (perfect overlap model)
+    bound = max(t_c, t_m, t_x)
+    frac = (mf / PEAK_FLOPS) / bound if (mf and bound > 0) else None
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
+        "dominant": dom[0], "bound_s": bound,
+        "model_flops_per_dev": mf, "useful_flops_ratio": useful,
+        "roofline_fraction": frac,
+        "compile_s": rec.get("compile_s"),
+    }
+
+
+def load_records(d: pathlib.Path):
+    recs, skips, fails = [], [], []
+    for p in sorted(d.glob("*.json")):
+        r = json.loads(p.read_text())
+        if "skipped" in r:
+            skips.append(r)
+        elif "error" in r:
+            fails.append(r)
+        else:
+            recs.append(r)
+    return recs, skips, fails
+
+
+def _fmt(x, width=9):
+    if x is None:
+        return " " * (width - 3) + "n/a"
+    if x == 0:
+        return f"{'0':>{width}}"
+    return f"{x:>{width}.3g}"
+
+
+def render_tables(recs, skips, fails) -> str:
+    rows = [analyze(r) for r in recs]
+    out = []
+    for mesh in ("single", "multi"):
+        out.append(f"\n### Roofline — {mesh} pod mesh "
+                   f"({'16x16=256' if mesh == 'single' else '2x16x16=512'} chips)\n")
+        out.append("| arch | shape | compute s | memory s | collect s | "
+                   "dominant | useful F ratio | roofline frac |")
+        out.append("|---|---|---|---|---|---|---|---|")
+        for r in sorted((x for x in rows if x["mesh"] == mesh),
+                        key=lambda x: (x["arch"], x["shape"])):
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {_fmt(r['t_compute_s'])} | "
+                f"{_fmt(r['t_memory_s'])} | {_fmt(r['t_collective_s'])} | "
+                f"{r['dominant']} | {_fmt(r['useful_flops_ratio'], 6)} | "
+                f"{_fmt(r['roofline_fraction'], 6)} |")
+    if skips:
+        out.append("\n### Skipped cells (assignment rules; per mesh)\n")
+        seen = set()
+        for s in skips:
+            key = (s["arch"], s["shape"])
+            if key in seen:
+                continue
+            seen.add(key)
+            out.append(f"- **{s['arch']} x {s['shape']}**: {s['skipped']}")
+    if fails:
+        out.append("\n### FAILED cells\n")
+        for f in fails:
+            out.append(f"- {f['arch']} x {f['shape']} ({f['mesh']}): "
+                       f"{f['error']}")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=str(DEFAULT_DIR))
+    ap.add_argument("--md", default=str(HERE / "results" / "roofline.md"))
+    ap.add_argument("--json", default=str(HERE / "results" / "roofline.json"))
+    args = ap.parse_args()
+    recs, skips, fails = load_records(pathlib.Path(args.dir))
+    rows = [analyze(r) for r in recs]
+    pathlib.Path(args.json).write_text(json.dumps(rows, indent=1))
+    md = render_tables(recs, skips, fails)
+    pathlib.Path(args.md).write_text(md)
+    print(md)
+    print(f"\n{len(recs)} analyzed, {len(skips)} skipped, {len(fails)} failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Exact CoCoA+ on top of the LM stack: train a linear probe (binary SVM) on
+frozen transformer features, distributed over K workers -- the paper's convex
+machinery attached to a modern model (DESIGN.md section 5, point (a)).
+
+    PYTHONPATH=src python examples/linear_probe.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.core import CoCoAConfig, solve
+from repro.data import partition
+from repro.models import model as M
+
+# 1) frozen LM features: final hidden states of a tiny gemma on synthetic
+#    token sequences; the probe predicts whether token id sums are even.
+cfg = smoke_config("gemma-7b")
+params = M.init_params(jax.random.PRNGKey(0), cfg)
+rng = np.random.default_rng(0)
+n, S = 2048, 32
+toks = rng.integers(1, cfg.vocab, (n, S)).astype(np.int32)
+labels = np.where(toks.sum(axis=1) % 2 == 0, 1.0, -1.0).astype(np.float32)
+
+
+@jax.jit
+def features(tokens):
+    x = M._embed_inputs(params, {"tokens": tokens}, cfg)
+    ctx = {"positions": M._positions(cfg, {}, tokens.shape[0], S),
+           "pos": None, "decode": False}
+    h, _, _ = M._run_stack(params, x, cfg, ctx, None)
+    return h[:, -1]                      # last-token pooled feature
+
+
+feats = np.concatenate([np.asarray(features(toks[i:i + 256]))
+                        for i in range(0, n, 256)])
+feats = feats / np.maximum(np.linalg.norm(feats, axis=1, keepdims=True), 1e-9)
+
+# 2) distributed convex probe training with the duality-gap certificate
+K = 8
+Xp, yp, mk = partition(feats.astype(np.float32), labels, K, seed=0)
+r = solve(CoCoAConfig.adding(K, loss="smooth_hinge1", lam=1e-3, H=512),
+          Xp, yp, mk, rounds=50, eps_gap=1e-3, gap_every=5)
+z = np.asarray(jnp.einsum("kid,d->ki", Xp, r.state.w))
+acc = float((np.sign(z) == np.asarray(yp))[np.asarray(mk) > 0].mean())
+print(f"probe: rounds={r.history['round'][-1]} "
+      f"gap={r.history['gap'][-1]:.2e} train_acc={acc:.3f}")
+print("certificate: primal suboptimality <=", f"{r.history['gap'][-1]:.2e}")

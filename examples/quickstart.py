@@ -1,0 +1,39 @@
+"""Quickstart: distributed hinge-loss SVM with CoCoA+ (the paper, end to end).
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Solves a synthetic covtype-like problem on K=8 (simulated) workers with the
+duality-gap certificate as the stopping rule, then compares against original
+CoCoA (averaging) and naive adding (diverges).
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CoCoAConfig, solve
+from repro.data import load, partition
+
+K = 8
+X, y = load("tiny")
+Xp, yp, mk = partition(X, y, K, seed=0)
+
+print(f"n={X.shape[0]} d={X.shape[1]} K={K}")
+for name, cfg in [
+    ("CoCoA+  (adding, sigma'=K)", CoCoAConfig.adding(K, loss="hinge",
+                                                      lam=1e-3, H=512)),
+    ("CoCoA   (averaging)       ", CoCoAConfig.averaging(K, loss="hinge",
+                                                         lam=1e-3, H=512)),
+    ("naive add (sigma'=1)      ", CoCoAConfig(gamma=1.0, sigma_p=1.0,
+                                               loss="hinge", lam=1e-3, H=512)),
+]:
+    r = solve(cfg, Xp, yp, mk, rounds=40, eps_gap=1e-3, gap_every=5)
+    z = np.asarray(jnp.einsum("kid,d->ki", Xp, r.state.w))
+    acc = float((np.sign(z) == np.asarray(yp))[np.asarray(mk) > 0].mean())
+    print(f"{name}: rounds={r.history['round'][-1]:3d} "
+          f"gap={r.history['gap'][-1]:9.2e} train_acc={acc:.3f}")
+
+print("\nThe duality gap is a *certificate*: primal error <= gap, no oracle "
+      "needed (paper section 2).")

@@ -1,0 +1,166 @@
+"""Checkpointing: sharded npz + JSON manifest, async writer, remesh restore.
+
+Layout per step:
+    <dir>/step_<N>/manifest.json     tree structure, shapes, dtypes, mesh meta
+    <dir>/step_<N>/host<h>.npz       flat {path: array} for this host's shards
+
+On multi-host TPU each process saves only its addressable shards (path +
+shard index in the manifest); this repo runs single-process, so host0 holds
+everything -- the format and restore path are the same. Restore accepts a
+different mesh/sharding than the save (elastic remesh): arrays are loaded
+globally and device_put against the new shardings.
+
+Async mode pushes the device_get + write onto a daemon thread so the train
+loop never blocks on disk (bounded queue depth 2 to cap host memory).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import queue
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+try:
+    import ml_dtypes
+    _EXT_DTYPES = {"bfloat16": ml_dtypes.bfloat16,
+                   "float8_e4m3fn": ml_dtypes.float8_e4m3fn,
+                   "float8_e5m2": ml_dtypes.float8_e5m2}
+except ImportError:            # pragma: no cover
+    _EXT_DTYPES = {}
+
+
+def _to_storable(a: np.ndarray):
+    """npz can't hold ml_dtypes -> view as uint bits + record the dtype."""
+    name = a.dtype.name
+    if name in _EXT_DTYPES:
+        return a.view(np.dtype(f"uint{a.dtype.itemsize * 8}")), name
+    return a, name
+
+
+def _from_storable(a: np.ndarray, name: str):
+    if name in _EXT_DTYPES:
+        return a.view(_EXT_DTYPES[name])
+    return a
+
+
+def _flatten(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k))))
+                       for k in path)
+        out[key] = leaf
+    return out
+
+
+def save_tree(path: pathlib.Path, step: int, tree, extra: Optional[dict] = None):
+    path = pathlib.Path(path)
+    tmp = path / f".tmp_step_{step}"
+    final = path / f"step_{step}"
+    tmp.mkdir(parents=True, exist_ok=True)
+    flat = _flatten(tree)
+    arrays, dtypes = {}, {}
+    for k, v in flat.items():
+        a, name = _to_storable(np.asarray(jax.device_get(v)))
+        arrays[k] = a
+        dtypes[k] = name
+    np.savez(tmp / "host0.npz", **arrays)
+    treedef = jax.tree_util.tree_structure(tree)
+    manifest = {
+        "step": step,
+        "treedef": str(treedef),
+        "keys": {k: {"shape": list(a.shape), "dtype": dtypes[k]}
+                 for k, a in arrays.items()},
+        "extra": extra or {},
+    }
+    (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)                       # atomic publish
+    return final
+
+
+def restore_tree(path: pathlib.Path, like, step: Optional[int] = None,
+                 shardings=None):
+    """Restore into the structure of `like` (a pytree of arrays or
+    ShapeDtypeStructs). `shardings`: optional matching pytree of NamedSharding
+    for remesh restore."""
+    path = pathlib.Path(path)
+    if step is None:
+        steps = sorted(int(p.name.split("_")[1]) for p in path.glob("step_*"))
+        if not steps:
+            raise FileNotFoundError(f"no checkpoints under {path}")
+        step = steps[-1]
+    d = path / f"step_{step}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    data = np.load(d / "host0.npz")
+    flat_like = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    sh_flat = (jax.tree_util.tree_flatten(shardings,
+                                          is_leaf=lambda x: hasattr(x, "spec"))[0]
+               if shardings is not None else None)
+    for i, (p, leaf) in enumerate(flat_like[0]):
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k))))
+                       for k in p)
+        arr = _from_storable(data[key], manifest["keys"][key]["dtype"])
+        if sh_flat is not None:
+            arr = jax.device_put(arr, sh_flat[i])
+        leaves.append(arr)
+    tree = jax.tree_util.tree_unflatten(flat_like[1], leaves)
+    return tree, manifest
+
+
+class CheckpointManager:
+    """Async, retention-limited checkpointer."""
+
+    def __init__(self, directory, keep: int = 3, async_write: bool = True):
+        self.dir = pathlib.Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.async_write = async_write
+        self._q: "queue.Queue" = queue.Queue(maxsize=2)
+        self._thread = None
+        if async_write:
+            self._thread = threading.Thread(target=self._worker, daemon=True)
+            self._thread.start()
+
+    def _worker(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            step, host_tree, extra = item
+            save_tree(self.dir, step, host_tree, extra)
+            self._gc()
+            self._q.task_done()
+
+    def _gc(self):
+        steps = sorted(int(p.name.split("_")[1]) for p in self.dir.glob("step_*"))
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self.dir / f"step_{s}", ignore_errors=True)
+
+    def save(self, step: int, tree, extra: Optional[dict] = None):
+        if self.async_write:
+            # device_get on the caller thread (consistent snapshot), write async
+            host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                     tree)
+            self._q.put((step, host_tree, extra))
+        else:
+            save_tree(self.dir, step, tree, extra)
+            self._gc()
+
+    def wait(self):
+        if self.async_write:
+            self._q.join()
+
+    def latest_step(self) -> Optional[int]:
+        steps = sorted(int(p.name.split("_")[1]) for p in self.dir.glob("step_*"))
+        return steps[-1] if steps else None
+
+    def restore(self, like, step: Optional[int] = None, shardings=None):
+        return restore_tree(self.dir, like, step, shardings)

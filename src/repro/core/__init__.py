@@ -1,0 +1,12 @@
+"""CoCoA+ (Ma et al., ICML 2015) -- the paper's primary contribution.
+
+Public API:
+    CoCoAConfig, CoCoAState, solve, init_state    -- Algorithm 1 driver
+    losses.get_loss / LOSSES                      -- l, l*, coordinate updates
+    duality.{primal, dual, duality_gap}           -- certificates (eq. 4)
+    sigma.{sigma_k, sigma_total, sigma_prime_min} -- partition difficulty
+    baselines                                     -- minibatch SGD/CD, one-shot
+"""
+from .cocoa import CoCoAConfig, CoCoAState, SolveResult, init_state, solve
+from .losses import LOSSES, get_loss
+from . import baselines, duality, sigma, solvers, subproblem

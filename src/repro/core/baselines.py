@@ -1,0 +1,140 @@
+"""Baselines the paper compares against (section 6 / Figure 2).
+
+* mini-batch SGD: distributed subgradient descent; every step communicates a
+  full d-gradient (psum in production) -- the "communication == computation"
+  regime the paper criticizes.
+* mini-batch SDCA (CD): each worker computes b independent coordinate updates
+  against the *stale* w, aggregated with the conservative 1/(K b) scaling that
+  mini-batch theory requires (convergence degrades to batch-gradient as b
+  grows -- section 6).
+* one-shot averaging: each worker fully solves its local problem once and the
+  models are averaged (known not to converge to the optimum in general).
+
+All share the (K, nk, d) layout of core.cocoa so Fig-2 style comparisons are
+apples-to-apples in rounds and communicated vectors.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import duality
+from .losses import Loss, get_loss
+
+
+class SGDState(NamedTuple):
+    w: jnp.ndarray
+    rng: jax.Array
+    step: jnp.ndarray
+
+
+def minibatch_sgd_step(state: SGDState, X, y, mask, *, loss: Loss, lam: float,
+                       b_local: int, lr0: float):
+    """One synchronous mini-batch SGD step; batch = K * b_local."""
+    K, nk, d = X.shape
+    n = duality.effective_n(mask)
+    rng, sub = jax.random.split(state.rng)
+    idx = jax.random.randint(sub, (K, b_local), 0, nk)
+    xb = jnp.take_along_axis(X, idx[..., None], axis=1)          # (K,b,d)
+    yb = jnp.take_along_axis(y, idx, axis=1)
+    mb = jnp.take_along_axis(mask, idx, axis=1)
+    z = jnp.einsum("kbd,d->kb", xb, state.w)
+    # -u in dl(z) -> subgradient of loss at z is -u
+    g_loss = -loss.u_subgrad(z, yb) * mb
+    grad = jnp.einsum("kbd,kb->d", xb, g_loss) / jnp.maximum(jnp.sum(mb), 1)
+    grad = grad + lam * state.w
+    lr = lr0 / (1.0 + lam * lr0 * state.step)        # 1/(lambda t)-style decay
+    w = state.w - lr * grad
+    return SGDState(w, rng, state.step + 1)
+
+
+def run_minibatch_sgd(X, y, mask, *, loss_name: str, lam: float, steps: int,
+                      b_local: int = 1, lr0: float = 1.0, seed: int = 0,
+                      eval_every: int = 10):
+    loss = get_loss(loss_name)
+    step = jax.jit(functools.partial(minibatch_sgd_step, loss=loss, lam=lam,
+                                     b_local=b_local, lr0=lr0))
+    pfn = jax.jit(functools.partial(duality.primal, loss=loss, lam=lam))
+    state = SGDState(jnp.zeros(X.shape[-1], X.dtype), jax.random.PRNGKey(seed),
+                     jnp.zeros((), jnp.int32))
+    hist = {"step": [], "primal": [], "comm_vectors": []}
+    for t in range(steps):
+        state = step(state, X, y, mask)
+        if (t + 1) % eval_every == 0 or t == steps - 1:
+            hist["step"].append(t + 1)
+            hist["primal"].append(float(pfn(state.w, X, y, mask)))
+            hist["comm_vectors"].append((t + 1) * X.shape[0])
+    return state, hist
+
+
+def minibatch_cd_round(w, alpha, rng, X, y, mask, *, loss: Loss, lam: float,
+                       b_local: int):
+    """Synchronous mini-batch dual CD: b_local independent coordinate updates
+    per worker against stale w, conservative 1/(K*b_local) averaging."""
+    K, nk, d = X.shape
+    n = duality.effective_n(mask)
+    rng, sub = jax.random.split(rng)
+    idx = jax.random.randint(sub, (K, b_local), 0, nk)
+    xb = jnp.take_along_axis(X, idx[..., None], axis=1)
+    yb = jnp.take_along_axis(y, idx, axis=1)
+    mb = jnp.take_along_axis(mask, idx, axis=1)
+    ab = jnp.take_along_axis(alpha, idx, axis=1)
+    z = jnp.einsum("kbd,d->kb", xb, state_w_broadcast(w, xb))
+    q = jnp.sum(xb * xb, axis=-1) / (lam * n)        # sigma' = 1 per coordinate
+    delta = loss.cd_update(ab, z, q, yb) * mb
+    scale = 1.0 / (K * b_local)
+    # scatter-add deltas (duplicate idx within a batch resolved by add)
+    alpha = alpha + scale * jax.vmap(
+        lambda a_k, i_k, d_k: jnp.zeros_like(a_k).at[i_k].add(d_k)
+    )(jnp.zeros_like(alpha), idx, delta)
+    dw = scale * jnp.einsum("kbd,kb->d", xb, delta) / (lam * n)
+    return w + dw, alpha, rng
+
+
+def state_w_broadcast(w, xb):
+    return w
+
+
+def run_minibatch_cd(X, y, mask, *, loss_name: str, lam: float, rounds: int,
+                     b_local: int, seed: int = 0, eval_every: int = 10):
+    loss = get_loss(loss_name)
+    step = jax.jit(functools.partial(minibatch_cd_round, loss=loss, lam=lam,
+                                     b_local=b_local))
+    gapfn = jax.jit(functools.partial(duality.gap_decomposed, loss=loss, lam=lam))
+    K, nk, d = X.shape
+    w = jnp.zeros(d, X.dtype)
+    alpha = jnp.zeros((K, nk), X.dtype)
+    rng = jax.random.PRNGKey(seed)
+    hist = {"round": [], "gap": [], "primal": [], "comm_vectors": []}
+    for t in range(rounds):
+        w, alpha, rng = step(w, alpha, rng, X, y, mask)
+        if (t + 1) % eval_every == 0 or t == rounds - 1:
+            p, dv, g = gapfn(alpha, X, y, mask)
+            hist["round"].append(t + 1)
+            hist["gap"].append(float(g))
+            hist["primal"].append(float(p))
+            hist["comm_vectors"].append((t + 1) * K)
+    return (w, alpha), hist
+
+
+def one_shot_average(X, y, mask, *, loss_name: str, lam: float, H: int,
+                     seed: int = 0):
+    """Each worker solves its local problem (as if it were the full problem on
+    its shard) and the w's are averaged. No iteration; known to be biased."""
+    from .solvers import local_sdca
+    loss = get_loss(loss_name)
+    K, nk, d = X.shape
+    nks = jnp.sum(mask, axis=1)
+    rngs = jax.random.split(jax.random.PRNGKey(seed), K)
+
+    def one(Xk, yk, mk, rng, nk_eff):
+        a0 = jnp.zeros(nk, X.dtype)
+        res = local_sdca(Xk, yk, a0, mk, jnp.zeros(d, X.dtype), rng, loss,
+                         lam, nk_eff, 1.0, H)
+        return Xk.T @ (res.dalpha * mk) / (lam * nk_eff)
+
+    ws = jax.vmap(one)(X, y, mask, rngs, nks)
+    return jnp.mean(ws, axis=0)

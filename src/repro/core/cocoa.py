@@ -1,0 +1,268 @@
+"""CoCoA+ framework driver (paper Algorithm 1).
+
+One outer round:
+    1. each worker k solves the sigma'-damped local subproblem (eq. 9)
+       Theta-approximately (any solver from core.solvers, incl. the Pallas
+       TPU kernel path),
+    2. communicates a single d-vector Delta w_k = (1/lambda n) A Delta a_[k],
+    3. driver aggregates  w <- w + gamma * sum_k Delta w_k,
+       alpha_[k] <- alpha_[k] + gamma * Delta a_[k].
+
+gamma = 1/K, sigma' = 1  -> original CoCoA (averaging)   [Remark 12]
+gamma = 1,   sigma' = K  -> CoCoA+ (adding, safe bound)  [Lemma 4]
+
+Two execution backends share the same per-worker body:
+  * "vmap":      simulates K workers on any device count (tests, laptops),
+  * "shard_map": production SPMD over a mesh axis; the aggregate is a psum
+                 and each device keeps only its own (A_[k], alpha_[k]) shard.
+                 With a 2-D (data, model) mesh the feature dimension d is
+                 additionally sharded over "model", so the per-round psum
+                 moves d/|model| floats per device -- the paper's
+                 one-vector-per-round communication model, tensor-sharded.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import duality
+from .losses import Loss, get_loss
+from .solvers import SOLVERS, SDCAResult
+
+
+@dataclasses.dataclass(frozen=True)
+class CoCoAConfig:
+    loss: str = "hinge"
+    lam: float = 1e-4
+    gamma: float = 1.0                 # aggregation parameter in (0, 1]
+    sigma_p: Optional[float] = None    # None -> safe bound gamma * K (Lemma 4)
+    H: int = 1000                      # local solver iterations per round
+    solver: str = "sdca"               # core.solvers.SOLVERS key or "sdca_kernel"
+    backend: str = "vmap"              # "vmap" | "shard_map"
+    data_axis: str = "data"            # mesh axis carrying the partition
+    model_axis: Optional[str] = None   # optional feature-sharding axis
+    average_iterates: bool = False     # Theorem-8 averaged iterate output
+
+    def resolved_sigma(self, K: int) -> float:
+        return float(self.sigma_p) if self.sigma_p is not None else self.gamma * K
+
+    @staticmethod
+    def averaging(K: int, **kw) -> "CoCoAConfig":
+        """Original CoCoA (Remark 12)."""
+        return CoCoAConfig(gamma=1.0 / K, sigma_p=1.0, **kw)
+
+    @staticmethod
+    def adding(K: int, **kw) -> "CoCoAConfig":
+        """CoCoA+ with the safe bound sigma' = K."""
+        return CoCoAConfig(gamma=1.0, sigma_p=float(K), **kw)
+
+
+class CoCoAState(NamedTuple):
+    w: jnp.ndarray        # (d,) shared primal vector
+    alpha: jnp.ndarray    # (K, nk) partitioned duals
+    rng: jax.Array
+    rounds: jnp.ndarray   # scalar int32
+    alpha_bar: jnp.ndarray  # running sum for averaged iterate (or zeros)
+
+
+def init_state(d: int, K: int, nk: int, seed: int = 0,
+               dtype=jnp.float32) -> CoCoAState:
+    return CoCoAState(
+        w=jnp.zeros((d,), dtype),
+        alpha=jnp.zeros((K, nk), dtype),
+        rng=jax.random.PRNGKey(seed),
+        rounds=jnp.zeros((), jnp.int32),
+        alpha_bar=jnp.zeros((K, nk), dtype),
+    )
+
+
+def _solver_fn(name: str):
+    if name == "sdca_kernel":
+        from repro.kernels import ops as kernel_ops
+        return kernel_ops.local_sdca_block
+    return SOLVERS[name]
+
+
+def _worker_body(X_k, y_k, alpha_k, mask_k, w, rng, *, loss: Loss, lam: float,
+                 n, sigma_p: float, H: int, solver: str,
+                 budget=None, sqnorms=None) -> SDCAResult:
+    fn = _solver_fn(solver)
+    if solver == "sdca_deadline":
+        return fn(X_k, y_k, alpha_k, mask_k, w, rng, loss, lam, n, sigma_p, H,
+                  budget if budget is not None else jnp.asarray(H))
+    if solver in ("sdca", "sdca_importance"):
+        return fn(X_k, y_k, alpha_k, mask_k, w, rng, loss, lam, n, sigma_p, H,
+                  sqnorms=sqnorms)
+    return fn(X_k, y_k, alpha_k, mask_k, w, rng, loss, lam, n, sigma_p, H)
+
+
+# ----------------------------------------------------------------------------
+# vmap backend (simulation of K workers; exact same math as production)
+# ----------------------------------------------------------------------------
+
+def make_round_vmap(cfg: CoCoAConfig, K: int,
+                    n_total=None) -> Callable[..., CoCoAState]:
+    loss = get_loss(cfg.loss)
+    sigma_p = cfg.resolved_sigma(K)
+
+    def round_fn(state: CoCoAState, X, y, mask, budget=None) -> CoCoAState:
+        n = duality.effective_n(mask) if n_total is None else n_total
+        rng, sub = jax.random.split(state.rng)
+        rngs = jax.random.split(sub, K)
+        body = functools.partial(
+            _worker_body, loss=loss, lam=cfg.lam, n=n, sigma_p=sigma_p,
+            H=cfg.H, solver=cfg.solver)
+        if budget is None:
+            res = jax.vmap(lambda Xk, yk, ak, mk, r: body(Xk, yk, ak, mk, state.w, r)
+                           )(X, y, alpha_split(state.alpha, K), mask, rngs)
+        else:
+            res = jax.vmap(lambda Xk, yk, ak, mk, r, b: body(
+                Xk, yk, ak, mk, state.w, r, budget=b)
+            )(X, y, alpha_split(state.alpha, K), mask, rngs, budget)
+        dw = jnp.sum(res.du, axis=0) / sigma_p          # sum_k Delta w_k
+        alpha = state.alpha + cfg.gamma * res.dalpha
+        w = state.w + cfg.gamma * dw
+        return CoCoAState(w, alpha, rng, state.rounds + 1,
+                          state.alpha_bar + alpha)
+
+    return round_fn
+
+
+def alpha_split(alpha, K):
+    # alpha is already (K, nk); kept as a hook for future ragged layouts.
+    assert alpha.shape[0] == K
+    return alpha
+
+
+# ----------------------------------------------------------------------------
+# shard_map backend (production SPMD)
+# ----------------------------------------------------------------------------
+
+def make_round_sharded(cfg: CoCoAConfig, mesh) -> Callable[..., CoCoAState]:
+    """Rounds over a mesh: K = mesh.shape[data_axis] workers.
+
+    Layouts (global -> per-shard under shard_map):
+      X     (K, nk, d)  P(data, None, model?)   -> (1, nk, d_loc)
+      y,mask,alpha (K, nk)  P(data, None)       -> (1, nk)
+      w     (d,)        P(model?)               -> (d_loc,)
+    The per-round communication is exactly one psum of w-sized shards over
+    the data axis (the paper's single-vector reduce, eq. 14).
+    """
+    from jax.experimental.shard_map import shard_map
+
+    loss = get_loss(cfg.loss)
+    daxes = ((cfg.data_axis,) if isinstance(cfg.data_axis, str)
+             else tuple(cfg.data_axis))
+    K = 1
+    for a in daxes:
+        K *= mesh.shape[a]
+    sigma_p = cfg.resolved_sigma(K)
+    mspec = cfg.model_axis  # None -> replicated features
+    dspec = daxes[0] if len(daxes) == 1 else daxes
+
+    def per_shard(w, X, y, alpha, mask, rng, n, rounds, alpha_bar, sqn):
+        # shapes: w (d_loc,), X (1, nk, d_loc), y/alpha/mask (1, nk)
+        Xk, yk, ak, mk = X[0], y[0], alpha[0], mask[0]
+        # fold the worker index into the rng so workers de-correlate
+        widx = jnp.zeros((), jnp.int32)
+        for a in daxes:
+            widx = widx * mesh.shape[a] + jax.lax.axis_index(a)
+        rngk = jax.random.fold_in(rng, widx)
+        res = _worker_body(Xk, yk, ak, mk, w, rngk, loss=loss, lam=cfg.lam,
+                           n=n, sigma_p=sigma_p, H=cfg.H, solver=cfg.solver,
+                           sqnorms=sqn[0] if sqn is not None else None)
+        # --- the one communicated vector per round per worker ---
+        dw = jax.lax.psum(res.du, daxes) / sigma_p
+        alpha_new = alpha + cfg.gamma * res.dalpha[None]
+        w_new = w + cfg.gamma * dw
+        return w_new, alpha_new, rounds + 1, alpha_bar + alpha_new
+
+    wspec = P(mspec) if mspec else P()
+    in_specs = (wspec,                         # w
+                P(dspec, None, mspec),         # X
+                P(dspec, None),                # y
+                P(dspec, None),                # alpha
+                P(dspec, None),                # mask
+                P(), P(), P(), P(dspec, None),
+                P(dspec, None))                # sqnorms
+    out_specs = (wspec, P(dspec, None), P(), P(dspec, None))
+
+    sharded = shard_map(per_shard, mesh=mesh, in_specs=in_specs,
+                        out_specs=out_specs, check_rep=False)
+
+    def round_fn(state: CoCoAState, X, y, mask, n=None,
+                 sqnorms=None) -> CoCoAState:
+        n_ = duality.effective_n(mask) if n is None else n
+        if sqnorms is None:
+            sqnorms = jnp.sum(X * X, axis=-1) * mask
+        rng, sub = jax.random.split(state.rng)
+        w, alpha, rounds, abar = sharded(state.w, X, y, state.alpha, mask, sub,
+                                         n_, state.rounds, state.alpha_bar,
+                                         sqnorms)
+        return CoCoAState(w, alpha, rng, rounds, abar)
+
+    return round_fn
+
+
+# ----------------------------------------------------------------------------
+# High-level solve loop with certificates, history, checkpoint/elastic hooks
+# ----------------------------------------------------------------------------
+
+class SolveResult(NamedTuple):
+    state: CoCoAState
+    history: dict            # lists: round, gap, primal, dual, comm_vectors
+
+
+def solve(cfg: CoCoAConfig, X, y, mask, *, rounds: int, eps_gap: float = 0.0,
+          seed: int = 0, gap_every: int = 1, mesh=None, budget_fn=None,
+          on_round: Optional[Callable[[int, CoCoAState, float], None]] = None,
+          state: Optional[CoCoAState] = None) -> SolveResult:
+    """Run CoCoA+/CoCoA until `rounds` or duality gap <= eps_gap.
+
+    `on_round(t, state, gap)` is the checkpoint/telemetry hook.
+    `budget_fn(t) -> (K,) int array` enables deadline-budgeted solving.
+    """
+    K, nk, d = X.shape
+    loss = get_loss(cfg.loss)
+    if state is None:
+        state = init_state(d, K, nk, seed, X.dtype)
+
+    if cfg.backend == "shard_map":
+        assert mesh is not None, "shard_map backend needs a mesh"
+        round_fn = jax.jit(make_round_sharded(cfg, mesh))
+    else:
+        round_fn = jax.jit(make_round_vmap(cfg, K))
+
+    gap_fn = jax.jit(functools.partial(
+        duality.gap_decomposed, loss=loss, lam=cfg.lam))
+
+    hist = {"round": [], "gap": [], "primal": [], "dual": [], "comm_vectors": []}
+    gap = float("inf")
+    for t in range(rounds):
+        if cfg.backend == "shard_map":
+            state = round_fn(state, X, y, mask)
+        elif budget_fn is not None:
+            state = round_fn(state, X, y, mask, budget_fn(t))
+        else:
+            state = round_fn(state, X, y, mask)
+        if (t + 1) % gap_every == 0 or t == rounds - 1:
+            alpha_eval = state.alpha
+            if cfg.average_iterates:
+                alpha_eval = state.alpha_bar / jnp.maximum(state.rounds, 1)
+            p, dval, g = gap_fn(alpha_eval, X, y, mask)
+            gap = float(g)
+            hist["round"].append(t + 1)
+            hist["gap"].append(gap)
+            hist["primal"].append(float(p))
+            hist["dual"].append(float(dval))
+            hist["comm_vectors"].append((t + 1) * K)   # one d-vector per worker-round
+            if on_round is not None:
+                on_round(t + 1, state, gap)
+            if gap <= eps_gap:
+                break
+    return SolveResult(state, hist)

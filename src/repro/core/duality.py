@@ -1,0 +1,64 @@
+"""Primal/dual objectives, the w(alpha) map, and the duality-gap certificate.
+
+Data layout: the global data matrix A (paper: d x n, columns = examples) is
+stored partitioned as X with shape (K, n_k, d)  -- K workers, n_k rows each,
+row i = x_i^T. Labels y and duals alpha are (K, n_k). A `mask` (K, n_k) of
+{0,1} marks real rows (padding rows are all-zero and masked out of n).
+
+All objective functions take the *global effective n* so that padded
+partitions reproduce the unpadded math exactly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .losses import Loss
+
+
+def effective_n(mask: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sum(mask)
+
+
+def w_of_alpha(X: jnp.ndarray, alpha: jnp.ndarray, lam: float, n) -> jnp.ndarray:
+    """w(alpha) = A alpha / (lambda n)  (eq. 3). X: (K, nk, d), alpha: (K, nk)."""
+    return jnp.einsum("kid,ki->d", X, alpha) / (lam * n)
+
+
+def primal(w: jnp.ndarray, X: jnp.ndarray, y: jnp.ndarray, mask: jnp.ndarray,
+           loss: Loss, lam: float) -> jnp.ndarray:
+    n = effective_n(mask)
+    z = jnp.einsum("kid,d->ki", X, w)
+    vals = loss.value(z, y) * mask
+    return jnp.sum(vals) / n + 0.5 * lam * jnp.dot(w, w)
+
+
+def dual(alpha: jnp.ndarray, X: jnp.ndarray, y: jnp.ndarray, mask: jnp.ndarray,
+         loss: Loss, lam: float) -> jnp.ndarray:
+    n = effective_n(mask)
+    v = w_of_alpha(X, alpha, lam, n)
+    conj = loss.conj(alpha, y) * mask
+    return -jnp.sum(conj) / n - 0.5 * lam * jnp.dot(v, v)
+
+
+def duality_gap(alpha: jnp.ndarray, X: jnp.ndarray, y: jnp.ndarray,
+                mask: jnp.ndarray, loss: Loss, lam: float) -> jnp.ndarray:
+    """G(alpha) = P(w(alpha)) - D(alpha)  (eq. 4). Non-negative by weak duality."""
+    n = effective_n(mask)
+    w = w_of_alpha(X, alpha, lam, n)
+    return primal(w, X, y, mask, loss, lam) - dual(alpha, X, y, mask, loss, lam)
+
+
+def gap_decomposed(alpha, X, y, mask, loss, lam):
+    """Returns (P, D, gap) sharing the w(alpha) computation."""
+    n = effective_n(mask)
+    w = w_of_alpha(X, alpha, lam, n)
+    p = primal(w, X, y, mask, loss, lam)
+    d = dual(alpha, X, y, mask, loss, lam)
+    return p, d, p - d
+
+
+def u_vector(w: jnp.ndarray, X: jnp.ndarray, y: jnp.ndarray, loss: Loss) -> jnp.ndarray:
+    """u with -u_i in d l_i(x_i^T w)  (eq. 17) -- used in Lemma-5 style tests."""
+    z = jnp.einsum("kid,d->ki", X, w)
+    return loss.u_subgrad(z, y)

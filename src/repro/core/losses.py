@@ -1,0 +1,275 @@
+"""Loss functions, convex conjugates, and closed-form SDCA coordinate updates.
+
+Setup follows the paper (eq. 1/2):
+
+    P(w) = (1/n) sum_i l_i(x_i^T w) + (lambda/2) ||w||^2
+    D(a) = -(1/n) sum_i l_i*(-a_i) - (lambda/2) || A a / (lambda n) ||^2
+
+Every loss here folds the label y_i into l_i, i.e. l_i(z) := loss(z, y_i).
+
+For the sigma'-damped local subproblem (eq. 9), the single-coordinate update
+at coordinate i maximizes (constants dropped, scaled by n):
+
+    J(delta) = -l_i*(-(abar + delta)) - delta * z - (q/2) delta^2
+
+with   abar = alpha_i + (Delta alpha_prev)_i      (current local dual)
+       z    = x_i^T u                             (local primal estimate)
+       u    = w + (sigma'/(lambda n)) A Delta_alpha_prev
+       q    = sigma' * ||x_i||^2 / (lambda n)
+
+Each Loss provides the closed-form (or Newton) argmax `cd_update(abar, z, q, y)`
+returning delta. The hinge case reduces exactly to eq. (51) in Appendix C.
+
+Loss metadata:
+    L   : Lipschitz constant of l (None if not globally Lipschitz)
+    mu  : l is (1/mu)-smooth  <=>  l* is mu-strongly convex (0 if non-smooth)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Loss:
+    name: str
+    # primal loss value l(z, y)
+    value: Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
+    # conjugate term as it appears in D: conj(a, y) = l*(-a)   (a = alpha_i)
+    conj: Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
+    # closed-form coordinate maximizer of J(delta) above
+    cd_update: Callable[[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray], jnp.ndarray]
+    # u_i with -u_i in d l_i(z)  (eq. 17), used by theory tests
+    u_subgrad: Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
+    L: Optional[float]
+    mu: float
+    # analytic d/da l*(-a) on the feasible set (autodiff through the inf
+    # feasibility guard NaNs out -- gradient solvers use these instead)
+    conj_grad: Optional[Callable] = None
+    # projection of a dual candidate onto the feasible set
+    project: Optional[Callable] = None
+
+    def __hash__(self):  # allow use as a static jit arg
+        return hash(self.name)
+
+    def __eq__(self, other):
+        return isinstance(other, Loss) and self.name == other.name
+
+
+def _safe_div(a, b):
+    return a / jnp.where(b == 0, 1.0, b)
+
+
+# ----------------------------------------------------------------------------
+# Hinge loss:  l(z, y) = max(0, 1 - y z);  L = 1, non-smooth.
+# l*(-a) = -a y   valid for a y in [0, 1]  (else +inf).
+# ----------------------------------------------------------------------------
+
+def _hinge_value(z, y):
+    return jnp.maximum(0.0, 1.0 - y * z)
+
+
+def _hinge_conj(a, y):
+    b = a * y
+    feasible = (b >= -1e-6) & (b <= 1.0 + 1e-6)
+    return jnp.where(feasible, -b, jnp.inf)
+
+
+def _hinge_cd(abar, z, q, y):
+    # beta = y*(abar+delta) in [0,1]; unconstrained opt beta* = y*abar + (1-yz)/q
+    beta = y * abar + _safe_div(1.0 - y * z, q)
+    beta = jnp.clip(beta, 0.0, 1.0)
+    delta = y * beta - abar
+    return jnp.where(q == 0, 0.0, delta)
+
+
+def _hinge_u(z, y):
+    # -u in dl(z): dl(z) = -y if yz < 1 else 0 (take 0 at kink boundary half)
+    return jnp.where(y * z < 1.0, y, 0.0)
+
+
+def _box01_project(a, y):
+    return y * jnp.clip(a * y, 0.0, 1.0)
+
+
+HINGE = Loss("hinge", _hinge_value, _hinge_conj, _hinge_cd, _hinge_u,
+             L=1.0, mu=0.0,
+             conj_grad=lambda a, y: -y,
+             project=_box01_project)
+
+
+# ----------------------------------------------------------------------------
+# Smoothed hinge (Shalev-Shwartz & Zhang), smoothing gamma_s = 1.0 by default:
+#   l(z,y) = 0                      if yz >= 1
+#            1 - yz - g/2           if yz <= 1 - g
+#            (1-yz)^2 / (2g)        otherwise
+# l*(-a) = -ay + (g/2) a^2   for a y in [0,1].   (1/mu)-smooth with mu = g.
+# ----------------------------------------------------------------------------
+
+def make_smooth_hinge(g: float = 1.0) -> Loss:
+    def value(z, y):
+        m = y * z
+        return jnp.where(
+            m >= 1.0, 0.0,
+            jnp.where(m <= 1.0 - g, 1.0 - m - g / 2.0, (1.0 - m) ** 2 / (2.0 * g)))
+
+    def conj(a, y):
+        b = a * y
+        feasible = (b >= -1e-6) & (b <= 1.0 + 1e-6)
+        return jnp.where(feasible, -b + (g / 2.0) * b * b, jnp.inf)
+
+    def cd(abar, z, q, y):
+        # maximize (abar+d)y - (g/2)(abar+d)^2 - d z - q d^2 / 2
+        # beta = y(abar+d): unconstrained beta* = (y*abar*q + (1 - y z))/(g+q)
+        # (solve y - g(abar+d) - z - q d = 0 for d, then map; projection exact)
+        d_unc = _safe_div(y - g * abar - z, g + q)
+        beta = jnp.clip(y * (abar + d_unc), 0.0, 1.0)
+        return y * beta - abar
+
+    def u(z, y):
+        m = y * z
+        # l'(z) = -y * clip((1 - m)/g, 0, 1); u = -l'
+        return y * jnp.clip((1.0 - m) / g, 0.0, 1.0)
+
+    return Loss(f"smooth_hinge{g:g}", value, conj, cd, u, L=1.0, mu=g,
+                conj_grad=lambda a, y: -y + g * a,
+                project=_box01_project)
+
+
+SMOOTH_HINGE = make_smooth_hinge(1.0)
+
+
+# ----------------------------------------------------------------------------
+# Squared loss: l(z,y) = (z-y)^2 / 2;  1-smooth (mu=1), not Lipschitz.
+# l*(-a) = a^2/2 - a y.
+# ----------------------------------------------------------------------------
+
+def _sq_value(z, y):
+    return 0.5 * (z - y) ** 2
+
+
+def _sq_conj(a, y):
+    return 0.5 * a * a - a * y
+
+
+def _sq_cd(abar, z, q, y):
+    return (y - abar - z) / (1.0 + q)
+
+
+def _sq_u(z, y):
+    return y - z  # -u = l'(z) = z - y
+
+
+SQUARED = Loss("squared", _sq_value, _sq_conj, _sq_cd, _sq_u, L=None, mu=1.0,
+               conj_grad=lambda a, y: a - y,
+               project=lambda a, y: a)
+
+
+# ----------------------------------------------------------------------------
+# Absolute loss: l(z,y) = |z - y|;  L = 1, non-smooth regression.
+# l*(-a) = -a y  for |a| <= 1.
+# ----------------------------------------------------------------------------
+
+def _abs_value(z, y):
+    return jnp.abs(z - y)
+
+
+def _abs_conj(a, y):
+    feasible = jnp.abs(a) <= 1.0 + 1e-6
+    return jnp.where(feasible, -a * y, jnp.inf)
+
+
+def _abs_cd(abar, z, q, y):
+    b = jnp.clip(abar + _safe_div(y - z, q), -1.0, 1.0)
+    return jnp.where(q == 0, 0.0, b - abar)
+
+
+def _abs_u(z, y):
+    return -jnp.sign(z - y)
+
+
+ABSOLUTE = Loss("absolute", _abs_value, _abs_conj, _abs_cd, _abs_u,
+                L=1.0, mu=0.0,
+                conj_grad=lambda a, y: -y,
+                project=lambda a, y: jnp.clip(a, -1.0, 1.0))
+
+
+# ----------------------------------------------------------------------------
+# Logistic loss: l(z,y) = log(1 + exp(-y z));  (1/4)-Lipschitz derivative =>
+# 4-smooth => mu = 4 ... careful: |l''| <= 1/4 so l is (1/mu)-smooth with
+# 1/mu = 1/4, i.e. mu = 4. L = 1.
+# l*(-a): with beta = a y in [0,1]:  beta log beta + (1-beta) log(1-beta).
+# No closed-form coordinate update -> guarded Newton on beta in (0,1).
+# ----------------------------------------------------------------------------
+
+def _xlogx(x):
+    return jnp.where(x <= 0.0, 0.0, x * jnp.log(jnp.where(x <= 0.0, 1.0, x)))
+
+
+def _log_value(z, y):
+    return jnp.logaddexp(0.0, -y * z)
+
+
+def _log_conj(a, y):
+    b = a * y
+    feasible = (b >= -1e-6) & (b <= 1.0 + 1e-6)
+    bc = jnp.clip(b, 0.0, 1.0)
+    return jnp.where(feasible, _xlogx(bc) + _xlogx(1.0 - bc), jnp.inf)
+
+
+def _log_cd(abar, z, q, y):
+    # J'(beta) = log((1-beta)/beta) - y z - q (beta - y abar) = 0, beta in (0,1)
+    # Newton with bisection guard (vectorized, fixed 25 iterations).
+    yz = y * z
+    yab = y * abar
+
+    def g(beta):
+        return jnp.log1p(-beta) - jnp.log(beta) - yz - q * (beta - yab)
+
+    lo = jnp.full_like(abar, 1e-12)
+    hi = jnp.full_like(abar, 1.0 - 1e-12)
+    beta = jnp.clip(yab, 1e-6, 1.0 - 1e-6)
+
+    def body(_, carry):
+        lo, hi, beta = carry
+        gb = g(beta)
+        lo = jnp.where(gb > 0, beta, lo)   # g decreasing in beta
+        hi = jnp.where(gb <= 0, beta, hi)
+        gp = -1.0 / (beta * (1.0 - beta)) - q
+        nb = beta - gb / gp
+        bad = (nb <= lo) | (nb >= hi) | ~jnp.isfinite(nb)
+        beta = jnp.where(bad, 0.5 * (lo + hi), nb)
+        return lo, hi, beta
+
+    _, _, beta = jax.lax.fori_loop(0, 25, body, (lo, hi, beta))
+    return y * beta - abar
+
+
+def _log_u(z, y):
+    # l'(z) = -y sigmoid(-y z); u = -l' = y sigmoid(-yz)
+    return y * jax.nn.sigmoid(-y * z)
+
+
+def _log_conj_grad(a, y):
+    b = jnp.clip(a * y, 1e-6, 1.0 - 1e-6)
+    return y * (jnp.log(b) - jnp.log1p(-b))
+
+
+LOGISTIC = Loss("logistic", _log_value, _log_conj, _log_cd, _log_u,
+                L=1.0, mu=4.0,
+                conj_grad=_log_conj_grad,
+                project=lambda a, y: y * jnp.clip(a * y, 0.0, 1.0))
+
+
+LOSSES = {l.name: l for l in [HINGE, SMOOTH_HINGE, SQUARED, ABSOLUTE, LOGISTIC]}
+
+
+def get_loss(name: str) -> Loss:
+    if name in LOSSES:
+        return LOSSES[name]
+    if name.startswith("smooth_hinge"):
+        return make_smooth_hinge(float(name[len("smooth_hinge"):] or 1.0))
+    raise KeyError(f"unknown loss {name!r}; have {sorted(LOSSES)}")

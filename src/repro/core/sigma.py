@@ -1,0 +1,107 @@
+"""Partition-difficulty quantities: sigma_k (eq. 19), sigma (Lemma 6),
+sigma'_min (eq. 11), and the Table-1 ratio (n^2/K) / sigma.
+
+sigma_k = ||A_[k]||_2^2  (largest squared singular value of the local block)
+sigma   = sum_k sigma_k * n_k
+sigma'_min = gamma * max_a ||A a||^2 / sum_k ||A a_[k]||^2
+           = gamma * lambda_max( B^{-1/2} G B^{-1/2} ),   G = A^T A,
+             B = blockdiag(A_[k]^T A_[k])  (generalized Rayleigh quotient).
+
+Power iteration keeps everything matvec-only so it runs partitioned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def sigma_k(X: jnp.ndarray, mask: jnp.ndarray, iters: int = 50,
+            seed: int = 0) -> jnp.ndarray:
+    """Per-worker top squared singular value. X: (K, nk, d) -> (K,)."""
+    K, nk, d = X.shape
+    Xm = X * mask[..., None]
+
+    def one(Xk, rng):
+        v = jax.random.normal(rng, (d,), Xk.dtype)
+
+        def body(_, v):
+            u = Xk @ v
+            v2 = Xk.T @ u
+            return v2 / (jnp.linalg.norm(v2) + 1e-30)
+
+        v = jax.lax.fori_loop(0, iters, body, v / jnp.linalg.norm(v))
+        u = Xk @ v
+        return jnp.dot(u, u) / (jnp.dot(v, v) + 1e-30)
+
+    rngs = jax.random.split(jax.random.PRNGKey(seed), K)
+    return jax.vmap(one)(Xm, rngs)
+
+
+def sigma_total(X: jnp.ndarray, mask: jnp.ndarray, **kw) -> jnp.ndarray:
+    """sigma = sum_k sigma_k n_k (Lemma 6)."""
+    sk = sigma_k(X, mask, **kw)
+    nk = jnp.sum(mask, axis=1)
+    return jnp.sum(sk * nk)
+
+
+def table1_ratio(X: jnp.ndarray, mask: jnp.ndarray, **kw) -> jnp.ndarray:
+    """(n^2 / K) / sigma -- the paper's Table 1 entries (>= 1; larger means
+    the safe bound sigma <= n^2/K is looser / data easier than worst case)."""
+    K = X.shape[0]
+    n = jnp.sum(mask)
+    return (n * n / K) / sigma_total(X, mask, **kw)
+
+
+def sigma_prime_min(X: jnp.ndarray, mask: jnp.ndarray, gamma: float = 1.0,
+                    iters: int = 200, seed: int = 0, ridge: float = 1e-8) -> jnp.ndarray:
+    """Generalized power iteration for eq. (11).
+
+    Iterates a <- B^{-1} G a (B-norm-normalized), where G a = A^T (A a) uses
+    only global matvecs and B^{-1} applies per-block pinv solves
+    (A_[k]^T A_[k] + ridge I)^{-1}. Exact for the top generalized eigenpair.
+    """
+    K, nk, d = X.shape
+    Xm = X * mask[..., None]
+
+    # Precompute per-block Gram pseudo-inverses (blocks are rank <= d, so a
+    # ridge inverse would blow up along the null space and wreck the
+    # iteration; pinv keeps it in range(B)).
+    def blk_inv(Xk):
+        Gk = Xk @ Xk.T
+        return jnp.linalg.pinv(Gk, rtol=1e-6)
+
+    Binv = jax.vmap(blk_inv)(Xm)                     # (K, nk, nk)
+
+    def matG(a):                                      # a: (K, nk)
+        v = jnp.einsum("kid,ki->d", Xm, a)           # A a
+        return jnp.einsum("kid,d->ki", Xm, v)        # A^T A a
+
+    def matBinv(a):
+        return jnp.einsum("kij,kj->ki", Binv, a)
+
+    rng = jax.random.PRNGKey(seed)
+    a = jax.random.normal(rng, (K, nk))
+    a = a * mask
+
+    def body(_, a):
+        a2 = matBinv(matG(a)) * mask
+        # B-normalize: ||a||_B^2 = sum_k ||A a_[k]||^2
+        Ak = jnp.einsum("kid,ki->kd", Xm, a2)
+        nb = jnp.sqrt(jnp.sum(Ak * Ak)) + 1e-30
+        return a2 / nb
+
+    a = jax.lax.fori_loop(0, iters, body, a)
+    Aa = jnp.einsum("kid,ki->d", Xm, a)
+    num = jnp.dot(Aa, Aa)
+    Ak = jnp.einsum("kid,ki->kd", Xm, a)
+    den = jnp.sum(Ak * Ak) + 1e-30
+    return gamma * num / den
+
+
+def check_lemma4(X, mask, gamma: float, **kw):
+    """Returns (sigma'_min, gamma*K, holds?) -- Lemma 4 sanity object."""
+    K = X.shape[0]
+    smin = sigma_prime_min(X, mask, gamma, **kw)
+    return smin, gamma * K, smin <= gamma * K + 1e-4

@@ -1,0 +1,179 @@
+"""Local solvers for the CoCoA+ subproblem (Assumption 1: any Theta < 1 works).
+
+LOCALSDCA (Algorithm 2): H steps of single-coordinate exact maximization of
+G_k^{sigma'}, using the closed forms from losses.py. The solver carries the
+local primal estimate
+
+    u = w + (sigma'/(lambda n)) * A Delta_alpha      (Appendix C, eq. 50)
+
+so each coordinate step costs one d-dot and one d-axpy. This is the hot loop
+that the Pallas TPU kernel in repro.kernels.local_sdca implements; the pure
+JAX version here is the reference/portable path (and the oracle the kernel is
+validated against lives in repro.kernels.ref).
+
+LOCALGD: full-(local)-batch projected(-free) gradient ascent on G_k --
+demonstrates the "arbitrary local solver" claim with a structurally different
+method (only valid for smooth losses).
+
+Both are written per-worker on (nk, d) blocks so the same body runs under
+vmap (simulation) and shard_map (production).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .losses import Loss
+
+
+class SDCAResult(NamedTuple):
+    dalpha: jnp.ndarray     # (nk,) local dual update
+    du: jnp.ndarray         # (d,)  = (sigma'/(lambda n)) * A dalpha  (local primal delta * sigma')
+    steps: jnp.ndarray      # number of inner steps actually executed
+
+
+def local_sdca(X_k: jnp.ndarray, y_k: jnp.ndarray, alpha_k: jnp.ndarray,
+               mask_k: jnp.ndarray, w: jnp.ndarray, rng: jax.Array,
+               loss: Loss, lam: float, n, sigma_p: float, H: int,
+               sqnorms=None) -> SDCAResult:
+    """H randomized coordinate-ascent steps on G_k^{sigma'}. X_k: (nk, d).
+
+    `sqnorms`: optional precomputed ||x_i||^2 (they are round-invariant;
+    recomputing them costs one full X stream per round -- hoisted per
+    EXPERIMENTS.md section Perf, iteration C2)."""
+    nk = X_k.shape[0]
+    if sqnorms is None:
+        sqnorms = jnp.sum(X_k * X_k, axis=-1) * mask_k   # padded rows -> 0
+    scale = sigma_p / (lam * n)
+    idxs = jax.random.randint(rng, (H,), 0, nk)
+
+    def body(h, carry):
+        dalpha, u = carry
+        i = idxs[h]
+        # barrier: x feeds two consumers (dot + axpy); without it XLA
+        # duplicates the row gather per consumer (2x row traffic; measured
+        # in EXPERIMENTS.md section Perf, iteration C3)
+        x = jax.lax.optimization_barrier(X_k[i])
+        z = jnp.dot(x, u)
+        abar = alpha_k[i] + dalpha[i]
+        q = scale * sqnorms[i]
+        delta = loss.cd_update(abar, z, q, y_k[i]) * mask_k[i]
+        dalpha = dalpha.at[i].add(delta)
+        u = u + (scale * delta) * x
+        return dalpha, u
+
+    dalpha0 = jnp.zeros(nk, X_k.dtype)
+    dalpha, u = jax.lax.fori_loop(0, H, body, (dalpha0, w.astype(X_k.dtype)))
+    return SDCAResult(dalpha, u - w, jnp.asarray(H))
+
+
+def local_sdca_deadline(X_k, y_k, alpha_k, mask_k, w, rng, loss, lam, n,
+                        sigma_p: float, H: int, budget: jnp.ndarray) -> SDCAResult:
+    """Straggler-tolerant variant: runs min(H, budget) steps.
+
+    `budget` is a traced per-worker scalar (steps affordable before the round
+    deadline, e.g. measured throughput x remaining time). Theta degrades, the
+    round never blocks: this is the paper's Assumption-1 knob used as
+    straggler mitigation (DESIGN.md section 8).
+    """
+    nk = X_k.shape[0]
+    sqnorms = jnp.sum(X_k * X_k, axis=-1) * mask_k
+    scale = sigma_p / (lam * n)
+    idxs = jax.random.randint(rng, (H,), 0, nk)
+    hmax = jnp.minimum(jnp.asarray(H), budget)
+
+    def body(h, carry):
+        dalpha, u = carry
+        live = h < hmax
+        i = idxs[h]
+        x = X_k[i]
+        z = jnp.dot(x, u)
+        abar = alpha_k[i] + dalpha[i]
+        q = scale * sqnorms[i]
+        delta = jnp.where(live, loss.cd_update(abar, z, q, y_k[i]) * mask_k[i], 0.0)
+        dalpha = dalpha.at[i].add(delta)
+        u = u + (scale * delta) * x
+        return dalpha, u
+
+    dalpha0 = jnp.zeros(nk, X_k.dtype)
+    dalpha, u = jax.lax.fori_loop(0, H, body, (dalpha0, w.astype(X_k.dtype)))
+    return SDCAResult(dalpha, u - w, hmax)
+
+
+def local_gd(X_k, y_k, alpha_k, mask_k, w, rng, loss, lam, n,
+             sigma_p: float, H: int, lr_scale: float = 1.0) -> SDCAResult:
+    """Projected-gradient ascent on G_k, full local batch -- the "arbitrary
+    local solver" demonstration (Assumption 1 only needs Theta < 1).
+
+    grad_i(n*G_k) = -conj'(a_i + da_i) - x_i^T u ,
+        u = w + (sigma'/(lambda n)) A da.
+    Step size 1/L with L = sigma' sigma_k /(lambda n) + conj''_max, using
+    sigma_k <= max_i ||x_i||^2 * n_k and conj'' ~ max(mu, 1). Iterates are
+    projected onto the dual-feasible set after every step (losses.project).
+    """
+    del rng
+    assert loss.conj_grad is not None and loss.project is not None
+    nk = X_k.shape[0]
+    scale = sigma_p / (lam * n)
+    sqmax = jnp.max(jnp.sum(X_k * X_k, axis=-1) * mask_k)
+    L = scale * sqmax * nk + max(loss.mu, 1.0)
+    lr = lr_scale / L
+
+    def body(_, carry):
+        dalpha, u = carry
+        a = alpha_k + dalpha
+        g = (-loss.conj_grad(a, y_k)
+             - jnp.einsum("id,d->i", X_k, u)) * mask_k
+        a_new = loss.project(a + lr * g, y_k) * mask_k
+        step = a_new - a
+        dalpha = dalpha + step
+        u = u + scale * jnp.einsum("id,i->d", X_k, step)
+        return dalpha, u
+
+    dalpha0 = jnp.zeros(nk, X_k.dtype)
+    dalpha, u = jax.lax.fori_loop(0, H, body, (dalpha0, w.astype(X_k.dtype)))
+    return SDCAResult(dalpha, u - w, jnp.asarray(H))
+
+
+def local_sdca_importance(X_k, y_k, alpha_k, mask_k, w, rng, loss, lam, n,
+                          sigma_p: float, H: int, sqnorms=None) -> SDCAResult:
+    """LocalSDCA with importance sampling p_i ~ ||x_i||^2 + mean||x||^2
+    (Zhao & Zhang-style mixed sampling). The paper's Appendix C explicitly
+    invites plugging better local solvers -- Assumption 1 only needs Theta<1.
+    On datasets with skewed row norms this reaches a given Theta in fewer
+    inner steps (tests/test_cocoa.py::test_importance_sampling_helps)."""
+    nk = X_k.shape[0]
+    if sqnorms is None:
+        sqnorms = jnp.sum(X_k * X_k, axis=-1) * mask_k
+    scale = sigma_p / (lam * n)
+    mean_sq = jnp.sum(sqnorms) / jnp.maximum(jnp.sum(mask_k), 1.0)
+    probs = (sqnorms + mean_sq) * mask_k
+    probs = probs / jnp.sum(probs)
+    idxs = jax.random.choice(rng, nk, (H,), p=probs)
+
+    def body(h, carry):
+        dalpha, u = carry
+        i = idxs[h]
+        x = X_k[i]
+        z = jnp.dot(x, u)
+        abar = alpha_k[i] + dalpha[i]
+        q = scale * sqnorms[i]
+        delta = loss.cd_update(abar, z, q, y_k[i]) * mask_k[i]
+        dalpha = dalpha.at[i].add(delta)
+        u = u + (scale * delta) * x
+        return dalpha, u
+
+    dalpha0 = jnp.zeros(nk, X_k.dtype)
+    dalpha, u = jax.lax.fori_loop(0, H, body, (dalpha0, w.astype(X_k.dtype)))
+    return SDCAResult(dalpha, u - w, jnp.asarray(H))
+
+
+SOLVERS = {
+    "sdca": local_sdca,
+    "sdca_deadline": local_sdca_deadline,
+    "sdca_importance": local_sdca_importance,
+    "gd": local_gd,
+}

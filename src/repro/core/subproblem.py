@@ -1,0 +1,39 @@
+"""The sigma'-damped data-local subproblem G_k^{sigma'} (paper eq. 9).
+
+    G_k(da; w, a_k) = -(1/n) sum_{i in P_k} l_i*(-(a_i + da_i))
+                      - (1/K)(lambda/2)||w||^2
+                      - (1/n) w^T A da
+                      - (lambda sigma'/2) || A da / (lambda n) ||^2
+
+Used directly by tests (Lemma 3 inequality, Assumption-1 quality of solvers)
+and by the LocalGD solver. The SDCA solvers use the per-coordinate closed
+forms in losses.py instead.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .losses import Loss
+
+
+def subproblem_value(dalpha_k: jnp.ndarray, w: jnp.ndarray, alpha_k: jnp.ndarray,
+                     X_k: jnp.ndarray, y_k: jnp.ndarray, mask_k: jnp.ndarray,
+                     loss: Loss, lam: float, n, K: int, sigma_p: float) -> jnp.ndarray:
+    """G_k^{sigma'} for one worker. X_k: (nk, d); vectors are (nk,)."""
+    conj = loss.conj(alpha_k + dalpha_k, y_k) * mask_k
+    Ada = X_k.T @ (dalpha_k * mask_k)          # A da  (d,)
+    quad = (0.5 * sigma_p / lam) * jnp.dot(Ada, Ada) / (n * n)
+    return (-jnp.sum(conj) / n
+            - (0.5 * lam / K) * jnp.dot(w, w)
+            - jnp.dot(w, Ada) / n
+            - quad)
+
+
+def subproblem_sum(dalpha, w, alpha, X, y, mask, loss, lam, n, K, sigma_p):
+    """sum_k G_k over the stacked (K, nk, ...) layout (vmapped)."""
+    import jax
+    vals = jax.vmap(
+        lambda da, a, Xk, yk, mk: subproblem_value(
+            da, w, a, Xk, yk, mk, loss, lam, n, K, sigma_p)
+    )(dalpha, alpha, X, y, mask)
+    return jnp.sum(vals)

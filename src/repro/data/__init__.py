@@ -1,0 +1,2 @@
+from .synthetic import (DATASETS, load, make_classification,
+                        make_regression, partition)

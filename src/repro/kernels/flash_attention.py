@@ -1,0 +1,132 @@
+"""Causal flash-attention Pallas TPU kernel (online softmax, GQA-aware).
+
+The prefill/train attention hot spot: the jnp path (models/layers.py
+chunked_attention) already bounds memory at O(C*S) but still round-trips the
+(C, S) probability tensor through HBM per chunk on CPU lowering; this kernel
+keeps the running max/denominator/accumulator in VMEM across the sequential
+kv-block grid dimension -- the standard flash schedule, with MXU-shaped
+(q_block x head_dim) tiles.
+
+Grid: (B*H, n_q_blocks, n_kv_blocks), kv innermost (TPU executes the grid
+sequentially, so the (m, l, acc) scratch carries across kv steps). GQA: the
+kv BlockSpec index-maps head h -> h // group_size, so K/V are streamed
+without materializing head replication. Fully-masked diagonal-upper blocks
+are skipped with pl.when (no MXU work, tiles still stream -- acceptable on
+TPU where the DMA is overlapped; a fully block-sparse schedule would need a
+scalar-prefetch grid, noted as future work).
+
+Validated in interpret mode against models.layers.chunked_attention
+(tests/test_kernels.py) across GQA ratios, softcap, and ragged tails.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                  *, scale: float, softcap, q_block: int, k_block: int,
+                  seq_len: int):
+    qi = pl.program_id(1)
+    j = pl.program_id(2)
+    nkv = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # causal: kv block j only contributes when it starts at/before the last
+    # query row of block qi
+    @pl.when(j * k_block <= qi * q_block + q_block - 1)
+    def _attend():
+        q = q_ref[...][0]                             # (qb, hd)
+        k = k_ref[...][0]                             # (kb, hd)
+        v = v_ref[...][0]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        qpos = qi * q_block + jax.lax.broadcasted_iota(jnp.int32,
+                                                       (q_block, k_block), 0)
+        kpos = j * k_block + jax.lax.broadcasted_iota(jnp.int32,
+                                                      (q_block, k_block), 1)
+        mask = (qpos >= kpos) & (kpos < seq_len)
+        s = jnp.where(mask, s, _NEG)
+        m_prev = m_scr[...]                           # (qb, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scr[...] = (acc_scr[...] * corr
+                        + jax.lax.dot_general(
+                            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_scr[...] = m_new
+
+    @pl.when(j == nkv - 1)
+    def _emit():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[...] = (acc_scr[...] / l)[None].astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, softcap=None, scale=None, q_block: int = 128,
+                    k_block: int = 128, interpret: bool | None = None):
+    """Causal GQA flash attention.
+
+    q: (B, S, H, hd); k/v: (B, S, KV, hd); H % KV == 0.
+    Returns (B, S, H, hd) in q.dtype (f32 accumulation).
+    """
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    pad = (-S) % q_block
+    Sp_ = S + pad
+    assert Sp_ % q_block == 0 and Sp_ % k_block == 0, (S, q_block, k_block)
+
+    def pad_seq(t):
+        return jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else t
+
+    q2 = pad_seq(q).transpose(0, 2, 1, 3).reshape(B * H, Sp_, hd)
+    k2 = pad_seq(k).transpose(0, 2, 1, 3).reshape(B * KV, Sp_, hd)
+    v2 = pad_seq(v).transpose(0, 2, 1, 3).reshape(B * KV, Sp_, hd)
+
+    nq, nk = Sp_ // q_block, Sp_ // k_block
+    kernel = functools.partial(_flash_kernel, scale=scale, softcap=softcap,
+                               q_block=q_block, k_block=k_block, seq_len=S)
+
+    # bh indexes (B*H); matching kv row = (bh // H) * KV + (bh % H) // G
+    def kv_map(bh, qi, j):
+        return ((bh // H) * KV + (bh % H) // G, j, 0)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, q_block, hd), lambda bh, qi, j: (bh, qi, 0)),
+            pl.BlockSpec((1, k_block, hd), kv_map),
+            pl.BlockSpec((1, k_block, hd), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, q_block, hd), lambda bh, qi, j: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sp_, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_block, 1), jnp.float32),
+            pltpu.VMEM((q_block, 1), jnp.float32),
+            pltpu.VMEM((q_block, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q2, k2, v2)
+    out = out.reshape(B, H, Sp_, hd).transpose(0, 2, 1, 3)
+    return out[:, :S]

@@ -1,0 +1,159 @@
+"""Pallas TPU kernel for the LocalSDCA inner loop (paper Algorithm 2).
+
+Why a kernel: each CoCoA+ round spends essentially all of its time in the
+H-step coordinate loop -- per step one d-dot (x_i . u) and one d-axpy
+(u += c x_i). The loop is *sequential* (every step reads the u produced by
+the previous one), so the GPU picture of one-thread-per-coordinate does not
+transfer. The TPU-native formulation instead:
+
+  * keeps u (d floats) and dalpha (nk floats) **persistent in VMEM scratch
+    across the sequential Pallas grid** (TPU grid steps run in order on a
+    core -- the idiomatic replacement for a persistent CUDA block),
+  * streams X through VMEM in (block_rows, d) tiles via BlockSpec -- the only
+    HBM traffic; `n_passes` full passes over the shard amortize nothing here
+    because every pass must re-stream X, which is exactly the HBM-bound
+    behavior of SDCA (arithmetic intensity ~2 flops/byte),
+  * visits coordinates in *block-shuffled order* (the wrapper in ops.py
+    applies a fresh random row permutation per call), the standard
+    random-permutation-epoch variant of SDCA. The pure-jnp oracle in ref.py
+    follows the identical order, so kernel-vs-oracle equivalence is exact,
+    not statistical.
+
+Grid layout: grid = (n_passes, nk // block_rows); grid step (p, b) processes
+rows [b*B, (b+1)*B) sequentially with a fori_loop. dalpha/u land in the
+outputs only at the final grid step (no cross-step output aliasing hazards).
+
+VMEM budget (f32): B*d (X tile) + nk (dalpha) + 2*d (u, w) + 3*B floats.
+ops.py picks B so this stays under ~12 MiB. d and B should be multiples of
+128/8 on real TPUs; interpret=True (CPU CI) is shape-agnostic but we keep the
+aligned contract anyway.
+
+Supported losses: the closed-form family ("hinge", "smooth_hinge*",
+"squared", "absolute"). "logistic" has no closed form -> use the pure-JAX
+solver path (core.solvers) which runs its guarded Newton.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.losses import Loss, get_loss
+
+CLOSED_FORM_LOSSES = ("hinge", "smooth_hinge", "squared", "absolute")
+
+
+def _check_loss(loss: Loss):
+    if not loss.name.startswith(CLOSED_FORM_LOSSES):
+        raise ValueError(
+            f"kernel supports closed-form losses {CLOSED_FORM_LOSSES}, "
+            f"got {loss.name!r}; use the core.solvers JAX path instead")
+
+
+def _sdca_kernel(scale_ref,                    # SMEM (1, 1): sigma'/(lambda n)
+                 x_ref, y_ref, a_ref, m_ref,   # VMEM tiles
+                 w_ref,                        # VMEM (1, d)
+                 da_out, du_out,               # VMEM outputs (1, nk), (1, d)
+                 da_scr, u_scr,                # VMEM scratch (1, nk), (1, d)
+                 *, loss: Loss, block_rows: int, nk: int):
+    p = pl.program_id(0)
+    b = pl.program_id(1)
+    nb = pl.num_programs(1)
+    npass = pl.num_programs(0)
+    scale = scale_ref[0, 0]
+
+    @pl.when(jnp.logical_and(p == 0, b == 0))
+    def _init():
+        da_scr[...] = jnp.zeros_like(da_scr)
+        u_scr[...] = w_ref[...]
+
+    x_blk = x_ref[...]                               # (block_rows, d)
+    y_blk = y_ref[...]                               # (1, block_rows)
+    m_blk = m_ref[...]
+    a_blk = a_ref[...]
+    base = b * block_rows
+
+    def step(i, _):
+        x = jax.lax.dynamic_slice_in_dim(x_blk, i, 1, axis=0)      # (1, d)
+        u = u_scr[...]                                             # (1, d)
+        z = jnp.sum(x * u)
+        sq = jnp.sum(x * x)
+        q = scale * sq
+        yi = jax.lax.dynamic_slice_in_dim(y_blk, i, 1, axis=1)[0, 0]
+        mi = jax.lax.dynamic_slice_in_dim(m_blk, i, 1, axis=1)[0, 0]
+        ai = jax.lax.dynamic_slice_in_dim(a_blk, i, 1, axis=1)[0, 0]
+        dai = jax.lax.dynamic_slice_in_dim(da_scr[...], base + i, 1,
+                                           axis=1)[0, 0]
+        abar = ai + dai
+        delta = loss.cd_update(abar, z, q, yi) * mi
+        da_scr[...] = jax.lax.dynamic_update_slice_in_dim(
+            da_scr[...], (dai + delta)[None, None], base + i, axis=1)
+        u_scr[...] = u + (scale * delta) * x
+        return 0
+
+    jax.lax.fori_loop(0, block_rows, step, 0)
+
+    @pl.when(jnp.logical_and(p == npass - 1, b == nb - 1))
+    def _emit():
+        da_out[...] = da_scr[...]
+        du_out[...] = u_scr[...] - w_ref[...]
+
+
+def local_sdca_pallas(X: jnp.ndarray, y: jnp.ndarray, alpha: jnp.ndarray,
+                      mask: jnp.ndarray, w: jnp.ndarray, scale: jnp.ndarray,
+                      *, loss: Loss, n_passes: int = 1,
+                      block_rows: int = 128, interpret: bool | None = None):
+    """Run `n_passes` block-sequential SDCA passes over the shard.
+
+    X: (nk, d); y/alpha/mask: (nk,); w: (d,);
+    scale: scalar  sigma' / (lambda n).
+    Returns (dalpha (nk,), du (d,)) with du = scale * A_[k] dalpha.
+    nk must be divisible by block_rows (ops.py pads).
+    """
+    _check_loss(loss)
+    nk, d = X.shape
+    assert nk % block_rows == 0, (nk, block_rows)
+    nb = nk // block_rows
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    f32 = jnp.float32
+    kernel = functools.partial(_sdca_kernel, loss=loss,
+                               block_rows=block_rows, nk=nk)
+    grid = (n_passes, nb)
+    da, du = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),                 # scale
+            pl.BlockSpec((block_rows, d), lambda p, b: (b, 0)),    # X
+            pl.BlockSpec((1, block_rows), lambda p, b: (0, b)),    # y
+            pl.BlockSpec((1, block_rows), lambda p, b: (0, b)),    # alpha
+            pl.BlockSpec((1, block_rows), lambda p, b: (0, b)),    # mask
+            pl.BlockSpec((1, d), lambda p, b: (0, 0)),             # w
+        ],
+        out_specs=[
+            pl.BlockSpec((1, nk), lambda p, b: (0, 0)),            # dalpha
+            pl.BlockSpec((1, d), lambda p, b: (0, 0)),             # du
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, nk), f32),
+            jax.ShapeDtypeStruct((1, d), f32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, nk), f32),
+            pltpu.VMEM((1, d), f32),
+        ],
+        interpret=interpret,
+    )(
+        jnp.asarray(scale, f32).reshape(1, 1),
+        X.astype(f32),
+        y.astype(f32).reshape(1, nk),
+        alpha.astype(f32).reshape(1, nk),
+        mask.astype(f32).reshape(1, nk),
+        w.astype(f32).reshape(1, d),
+    )
+    return da[0], du[0]

@@ -1,0 +1,63 @@
+"""Jitted wrapper exposing the Pallas LocalSDCA kernel with the same
+interface as core.solvers.local_sdca, so CoCoAConfig(solver="sdca_kernel")
+plugs it straight into Algorithm 1.
+
+Responsibilities of the wrapper (kept out of the kernel):
+  * pad nk up to a multiple of block_rows and d up to a multiple of 128
+    (padded rows get mask=0 -> the closed-form updates are exact no-ops),
+  * apply a fresh random row *permutation* per call (random-permutation-epoch
+    SDCA) and scatter dalpha back through it,
+  * map the solver's H (total coordinate steps) onto whole passes:
+    n_passes = max(1, round(H / nk)).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.losses import Loss
+from repro.core.solvers import SDCAResult
+from .local_sdca import local_sdca_pallas
+
+
+def _pad_to(x, m, axis):
+    size = x.shape[axis]
+    pad = (-size) % m
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def local_sdca_block(X_k, y_k, alpha_k, mask_k, w, rng, loss: Loss,
+                     lam: float, n, sigma_p: float, H: int,
+                     *, block_rows: int = 128,
+                     interpret: bool | None = None) -> SDCAResult:
+    """Drop-in solver: block-shuffled SDCA via the Pallas kernel."""
+    nk, d = X_k.shape
+    n_passes = max(1, int(round(H / max(nk, 1))))
+
+    perm = jax.random.permutation(rng, nk)
+    Xp = jnp.take(X_k, perm, axis=0)
+    yp = jnp.take(y_k, perm)
+    ap = jnp.take(alpha_k, perm)
+    mp = jnp.take(mask_k, perm)
+
+    br = min(block_rows, max(8, nk))
+    Xp = _pad_to(_pad_to(Xp, br, 0), 128, 1)
+    yp = _pad_to(yp, br, 0)
+    ap = _pad_to(ap, br, 0)
+    mp = _pad_to(mp, br, 0)
+    wp = _pad_to(w, 128, 0)
+
+    scale = sigma_p / (lam * jnp.asarray(n, jnp.float32))
+    da_p, du_p = local_sdca_pallas(Xp, yp, ap, mp, wp, scale, loss=loss,
+                                   n_passes=n_passes, block_rows=br,
+                                   interpret=interpret)
+    # un-permute dalpha; drop padding
+    dalpha = jnp.zeros(nk, da_p.dtype).at[perm].set(da_p[:nk])
+    return SDCAResult(dalpha.astype(X_k.dtype), du_p[:d].astype(w.dtype),
+                      jnp.asarray(n_passes * nk))

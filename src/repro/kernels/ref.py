@@ -1,0 +1,55 @@
+"""Pure-jnp oracle for the Pallas LocalSDCA kernel.
+
+Implements the *identical* block-sequential visit order (rows 0..nk-1, for
+n_passes passes) so kernel-vs-oracle comparison is exact (same arithmetic,
+same order), not statistical.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.losses import Loss
+
+
+def local_sdca_ref(X, y, alpha, mask, w, scale, *, loss: Loss,
+                   n_passes: int = 1):
+    """Reference for kernels.local_sdca.local_sdca_pallas (same signature
+    minus tiling details). Returns (dalpha (nk,), du (d,))."""
+    nk, d = X.shape
+    X = X.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    alpha = alpha.astype(jnp.float32)
+    mask = mask.astype(jnp.float32)
+    scale = jnp.asarray(scale, jnp.float32)
+
+    def body(h, carry):
+        dalpha, u = carry
+        i = h % nk
+        x = X[i]
+        z = jnp.dot(x, u)
+        q = scale * jnp.dot(x, x)
+        abar = alpha[i] + dalpha[i]
+        delta = loss.cd_update(abar, z, q, y[i]) * mask[i]
+        dalpha = dalpha.at[i].add(delta)
+        u = u + (scale * delta) * x
+        return dalpha, u
+
+    dalpha0 = jnp.zeros(nk, jnp.float32)
+    u0 = w.astype(jnp.float32)
+    dalpha, u = jax.lax.fori_loop(0, n_passes * nk, body, (dalpha0, u0))
+    return dalpha, u - u0
+
+
+def ssm_scan_ref(xin, dt, Bm, Cm, A, D):
+    """Oracle for kernels.ssm_scan: direct sequential recurrence in f64-ish
+    f32, same math as models/ssm.py's chunked associative scan."""
+    B, S, di = xin.shape
+    N = Bm.shape[-1]
+    h = jnp.zeros((B, di, N), jnp.float32)
+    ys = []
+    for t in range(S):
+        decay = jnp.exp(dt[:, t, :, None] * A[None])             # (B,di,N)
+        h = decay * h + (dt[:, t] * xin[:, t])[..., None] * Bm[:, t, None, :]
+        ys.append(jnp.einsum("bdn,bn->bd", h, Cm[:, t]) + D * xin[:, t])
+    return jnp.stack(ys, axis=1)

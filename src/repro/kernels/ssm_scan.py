@@ -1,0 +1,111 @@
+"""Fused selective-scan (mamba-1) Pallas TPU kernel.
+
+Why: the roofline table (EXPERIMENTS.md §Roofline) shows falcon-mamba
+train_4k is memory-dominated — the jnp path materializes the recurrence
+states (B, S, d_inner, N) (f32) for the associative scan, 4·N bytes per
+activation element (N=16 -> ~2 GB per 512-token chunk per device, re-read by
+the backward pass). This kernel fuses the recurrence so h lives only in VMEM:
+
+    h_t = exp(dt_t * A) * h_{t-1} + (dt_t * x_t) * B_t ;  y_t = h_t . C_t + D x_t
+
+HBM traffic becomes the input/output streams only:
+    reads  x, dt: (S, bd) each; B, C: (S, N) each; writes y: (S, bd)
+    => ~(3*bd + 2*N) * S * 4 bytes per (batch, block) cell
+vs the jnp path's additional (S, bd, N) state materialization — a ~N/3 = 5x
+traffic cut at N=16, and no O(S·d·N) backward residuals.
+
+Grid: (B, d_inner / block_d); each cell runs the sequential time loop with
+h (block_d, N) in VMEM scratch (f32). block_d a multiple of 128 on real
+TPUs; interpret=True validates on CPU. Decode uses the O(1) jnp step
+(models/ssm.py) — this kernel targets train/prefill.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, d_ref,   # inputs
+                 y_ref,                                        # output
+                 h_scr,                                        # VMEM scratch
+                 *, seq_len: int):
+    h_scr[...] = jnp.zeros_like(h_scr)
+    A = a_ref[...]                                  # (bd, N)
+    Dp = d_ref[...]                                 # (1, bd)
+    xs = x_ref[...][0]                              # (S, bd)
+    dts = dt_ref[...][0]
+    Bs = b_ref[...][0]                              # (S, N)
+    Cs = c_ref[...][0]
+
+    def step(t, _):
+        x = jax.lax.dynamic_slice_in_dim(xs, t, 1, axis=0)           # (1,bd)
+        dt = jax.lax.dynamic_slice_in_dim(dts, t, 1, axis=0)
+        Bt = jax.lax.dynamic_slice_in_dim(Bs, t, 1, axis=0)          # (1,N)
+        Ct = jax.lax.dynamic_slice_in_dim(Cs, t, 1, axis=0)
+        h = h_scr[...]                                               # (bd,N)
+        decay = jnp.exp(dt.T * A)                   # (bd,1)*(bd,N) broadcast
+        h = decay * h + (dt * x).T * Bt             # (bd,1)*(1,N)
+        h_scr[...] = h
+        y = jnp.sum(h * Ct, axis=-1)[None, :] + Dp * x               # (1,bd)
+        y_ref[...] = jax.lax.dynamic_update_slice(
+            y_ref[...], y[None], (0, t, 0))
+        return 0
+
+    jax.lax.fori_loop(0, seq_len, step, 0)
+
+
+def ssm_scan_pallas(xin, dt, Bm, Cm, A, D, *, block_d: int = 256,
+                    interpret: bool | None = None):
+    """Fused selective scan.
+
+    xin, dt: (B, S, di) f32;  Bm, Cm: (B, S, N) f32;
+    A: (di, N) f32 (negative);  D: (di,) f32.
+    Returns y: (B, S, di) f32.  di % block_d == 0 (caller pads).
+    """
+    B, S, di = xin.shape
+    N = Bm.shape[-1]
+    assert di % block_d == 0, (di, block_d)
+    nb = di // block_d
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    kernel = functools.partial(_scan_kernel, seq_len=S)
+    f32 = jnp.float32
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, nb),
+        in_specs=[
+            pl.BlockSpec((1, S, block_d), lambda b, j: (b, 0, j)),   # x
+            pl.BlockSpec((1, S, block_d), lambda b, j: (b, 0, j)),   # dt
+            pl.BlockSpec((1, S, N), lambda b, j: (b, 0, 0)),         # B
+            pl.BlockSpec((1, S, N), lambda b, j: (b, 0, 0)),         # C
+            pl.BlockSpec((block_d, N), lambda b, j: (j, 0)),         # A
+            pl.BlockSpec((1, block_d), lambda b, j: (0, j)),         # D
+        ],
+        out_specs=pl.BlockSpec((1, S, block_d), lambda b, j: (b, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((B, S, di), f32),
+        scratch_shapes=[pltpu.VMEM((block_d, N), f32)],
+        interpret=interpret,
+    )(
+        xin.astype(f32), dt.astype(f32), Bm.astype(f32), Cm.astype(f32),
+        A.astype(f32), D.astype(f32).reshape(1, di),
+    )
+    return out
+
+
+def _squeeze_kernel_blocks(fn):
+    return fn
+
+
+def vmem_budget(block_d: int = 256, S: int = 512, N: int = 16) -> dict:
+    """Static VMEM working set for one grid cell (f32 bytes)."""
+    f = 4
+    tiles = (3 * S * block_d + 2 * S * N) * f       # x, dt, y + B, C
+    state = block_d * N * f
+    weights = (block_d * N + block_d) * f
+    total = tiles + state + weights
+    return dict(total_mb=total / 2**20, fits_16mb=total < 16 * 2**20)

@@ -1,0 +1,279 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# Test hook only: integration tests shrink the placeholder device count
+# (must happen before jax locks device state on first init).
+if os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["REPRO_DRYRUN_DEVICES"])
+
+"""Multi-pod dry run: .lower().compile() every (architecture x input-shape x
+mesh) cell on the production meshes, record memory/cost/collective stats.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-7b \
+        --shape train_4k --mesh single
+
+Outputs one JSON per cell under benchmarks/results/dryrun/. These artifacts
+are the roofline inputs (benchmarks/roofline.py -> EXPERIMENTS.md).
+"""
+import argparse
+import functools
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch import mesh as meshlib
+from repro.launch import sharding as Sh
+from repro.launch import specs as Sp
+from repro.launch.hlo_analysis import collective_stats, full_stats, total_wire_bytes
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "benchmarks" / \
+    "results" / "dryrun"
+
+
+def _mesh(name: str):
+    if os.environ.get("REPRO_DRYRUN_DEVICES"):
+        return (meshlib.make_test_mesh((2, 2), ("data", "model")) if name == "single"
+                else meshlib.make_test_mesh((2, 2, 2), ("pod", "data", "model")))
+    return meshlib.make_production_mesh(multi_pod=(name == "multi"))
+
+
+def _mem_dict(compiled):
+    out = {}
+    try:
+        ma = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes"):
+            v = getattr(ma, k, None)
+            if v is not None:
+                out[k] = int(v)
+        if hasattr(ma, "serialized_size_in_bytes"):
+            out["serialized_size_in_bytes"] = int(ma.serialized_size_in_bytes)
+        if not out and ma is not None:
+            out["repr"] = str(ma)[:2000]
+    except Exception as e:            # pragma: no cover
+        out["error"] = repr(e)
+    return out
+
+
+def _abstract_bytes(tree) -> int:
+    import math
+    return sum((math.prod(l.shape) if l.shape else 1) * l.dtype.itemsize
+               for l in jax.tree.leaves(tree))
+
+
+def lower_cell(cell: Sp.Cell, mesh, mesh_name: str) -> dict:
+    from repro.launch.serve import prefill_step, serve_step
+    from repro.launch.train import train_step
+
+    cfg = cell.cfg
+    kind, args = Sp.cell_inputs(cell)
+    mode = ("train" if kind == "train"
+            else ("serve_long" if cell.kind == "decode_long" else "serve"))
+    pspecs = Sh.param_specs(args[0], cfg, mesh, mode)
+
+    # activation/logits constraints (prevent GSPMD from all-reducing the
+    # full-vocab logits over the data axis -- see EXPERIMENTS.md section Perf)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.models import model as M
+    ax = Sh.axes_for(mesh, mode)
+    M.set_shardings(
+        act=NamedSharding(mesh, P(ax.dp, ax.seq, None)),
+        logits=NamedSharding(mesh, P(ax.dp, None, "model")),
+    )
+    # FSDP just-in-time weight gather: pays off when amortized over many
+    # tokens (train/prefill); decode keeps weights resident 2-D sharded and
+    # lets tiny per-token partial activations psum instead (iteration B2)
+    gather = kind in ("train", "prefill")
+    M.set_param_gather(Sh.use_specs_fn(cfg, mesh, mode)
+                       if gather and
+                       os.environ.get("REPRO_NO_FSDP_GATHER") != "1"
+                       else None)
+    # explicit shard_map expert parallelism for MoE layers
+    from repro.models import layers as Ly
+    if cfg.n_experts and ax.dp:
+        Ly.set_moe_ctx(mesh=mesh, dp=ax.dp, tp="model", fsdp=ax.fsdp,
+                       gather_weights=gather)
+    else:
+        Ly.set_moe_ctx()
+
+    if kind == "train":
+        ospecs = Sh.opt_specs(pspecs)
+        bspecs = Sh.batch_specs(args[2], cfg, mesh, mode)
+        in_sh = (Sh.named(mesh, pspecs), Sh.named(mesh, ospecs),
+                 Sh.named(mesh, bspecs))
+        out_sh = (in_sh[0], in_sh[1], None)
+        fn = functools.partial(train_step, cfg=cfg)
+        donate = (0, 1)
+    elif kind == "prefill":
+        bspecs = Sh.batch_specs(args[1], cfg, mesh, mode)
+        cspecs = Sh.cache_specs(args[2], cfg, mesh, mode)
+        in_sh = (Sh.named(mesh, pspecs), Sh.named(mesh, bspecs),
+                 Sh.named(mesh, cspecs))
+        out_sh = (None, in_sh[2])
+        fn = functools.partial(prefill_step, cfg=cfg)
+        donate = (2,)
+    else:
+        cspecs = Sh.cache_specs(args[1], cfg, mesh, mode)
+        in_sh = (Sh.named(mesh, pspecs), Sh.named(mesh, cspecs), None, None)
+        out_sh = (None, in_sh[1])
+        fn = functools.partial(serve_step, cfg=cfg)
+        donate = (1,)
+
+    jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                     donate_argnums=donate)
+    t0 = time.time()
+    lowered = jitted.lower(*args)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    st = full_stats(hlo)
+    rec = {
+        "arch": cell.arch, "shape": cell.shape, "mesh": mesh_name,
+        "mesh_shape": dict(zip(mesh.axis_names,
+                               [int(s) for s in mesh.devices.shape])),
+        "kind": kind,
+        "lower_s": round(t1 - t0, 2), "compile_s": round(t2 - t1, 2),
+        # trip-count-aware per-device numbers (launch/hlo_analysis.py)
+        "flops_per_device": st["dot_flops"],
+        "hbm_bytes_per_device": st["hbm_bytes"],
+        "collectives": st["collectives"],
+        "collective_wire_bytes_per_device": st["collective_wire_bytes"],
+        # raw XLA numbers for reference (while bodies counted once!)
+        "xla_cost_flops": float(cost.get("flops", -1)),
+        "xla_cost_bytes": float(cost.get("bytes accessed", -1)),
+        "memory_analysis": _mem_dict(compiled),
+        "global_param_bytes": _abstract_bytes(args[0]),
+        "n_devices": mesh.size,
+    }
+    return rec
+
+
+def run_cell(cell: Sp.Cell, mesh_name: str, outdir: pathlib.Path) -> dict:
+    outdir.mkdir(parents=True, exist_ok=True)
+    out = outdir / f"{cell.arch}__{cell.shape}__{mesh_name}.json"
+    if cell.skip:
+        rec = {"arch": cell.arch, "shape": cell.shape, "mesh": mesh_name,
+               "skipped": cell.skip}
+        out.write_text(json.dumps(rec, indent=1))
+        print(f"[skip] {cell.arch} x {cell.shape} ({mesh_name}): {cell.skip}")
+        return rec
+    mesh = _mesh(mesh_name)
+    try:
+        rec = lower_cell(cell, mesh, mesh_name)
+        print(f"[ok]   {cell.arch} x {cell.shape} ({mesh_name}): "
+              f"compile={rec['compile_s']}s flops/dev={rec['flops_per_device']:.3e} "
+              f"hbm={rec['hbm_bytes_per_device']:.3e} "
+              f"wire={rec['collective_wire_bytes_per_device']:.3e}B", flush=True)
+    except Exception as e:
+        rec = {"arch": cell.arch, "shape": cell.shape, "mesh": mesh_name,
+               "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-4000:]}
+        print(f"[FAIL] {cell.arch} x {cell.shape} ({mesh_name}): {e}")
+    out.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def run_paper_cell(mesh_name: str, outdir: pathlib.Path) -> dict:
+    """Dry-run the paper's own workload: one CoCoA+ round on the mesh."""
+    from repro.configs.paper_svm import CONFIG as W
+    from repro.core.cocoa import CoCoAConfig, CoCoAState, make_round_sharded
+
+    mesh = _mesh(mesh_name)
+    # every chip is a CoCoA+ worker (the paper scales in K; Fig. 2)
+    daxes = tuple(mesh.axis_names)
+    K = mesh.size
+    cfg = CoCoAConfig(loss=W.loss, lam=W.lam, gamma=1.0, sigma_p=float(K),
+                      H=W.H, backend="shard_map",
+                      data_axis=daxes if len(daxes) > 1 else daxes[0])
+    nk = W.n // K
+    d = W.d
+    f32, i32 = jnp.float32, jnp.int32
+    sds = jax.ShapeDtypeStruct
+    state = (sds((d,), f32), sds((K, nk), f32), sds((2,), jnp.uint32),
+             sds((), i32), sds((K, nk), f32))
+    X = sds((K, nk, d), f32)
+    y = sds((K, nk), f32)
+    mask = sds((K, nk), f32)
+
+    round_fn = make_round_sharded(cfg, mesh)
+
+    def step(w, alpha, rng, rounds, abar, X, y, mask):
+        st = CoCoAState(w, alpha, rng, rounds, abar)
+        st2 = round_fn(st, X, y, mask, n=float(W.n))
+        return st2.w, st2.alpha, st2.rounds
+
+    jitted = jax.jit(step)
+    t0 = time.time()
+    lowered = jitted.lower(*state, X, y, mask)
+    compiled = lowered.compile()
+    t1 = time.time()
+    cost = compiled.cost_analysis() or {}
+    st = full_stats(compiled.as_text())
+    rec = {
+        "arch": "paper-svm", "shape": f"n{W.n}_d{W.d}_H{W.H}",
+        "mesh": mesh_name, "kind": "cocoa_round", "compile_s": round(t1 - t0, 2),
+        "flops_per_device": st["dot_flops"],
+        "hbm_bytes_per_device": st["hbm_bytes"],
+        "collectives": st["collectives"],
+        "collective_wire_bytes_per_device": st["collective_wire_bytes"],
+        "xla_cost_flops": float(cost.get("flops", -1)),
+        "memory_analysis": _mem_dict(compiled),
+        "n_devices": mesh.size, "K_workers": K,
+    }
+    out = outdir / f"paper-svm__round__{mesh_name}.json"
+    outdir.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(rec, indent=1))
+    print(f"[ok]   paper-svm round ({mesh_name}): "
+          f"flops/dev={rec['flops_per_device']:.3e} "
+          f"wire={rec['collective_wire_bytes_per_device']:.3e}B")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--paper", action="store_true",
+                    help="also dry-run the CoCoA+ round cell")
+    ap.add_argument("--out", default=str(RESULTS))
+    args = ap.parse_args()
+
+    outdir = pathlib.Path(args.out)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    cells = []
+    if args.all:
+        cells = Sp.all_cells()
+    elif args.arch:
+        shapes = [args.shape] if args.shape else list(Sp.SHAPES)
+        cells = [Sp.cell_for(args.arch, s) for s in shapes]
+
+    n_fail = 0
+    for mesh_name in meshes:
+        for cell in cells:
+            rec = run_cell(cell, mesh_name, outdir)
+            n_fail += 1 if "error" in rec else 0
+        if args.paper or args.all:
+            try:
+                run_paper_cell(mesh_name, outdir)
+            except Exception as e:
+                n_fail += 1
+                print(f"[FAIL] paper-svm ({mesh_name}): {e}")
+                traceback.print_exc()
+    print(f"done; failures={n_fail}")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Serving steps: prefill (fills KV/state caches) + greedy decode step.
+
+decode step signature matches the dry-run decode cells: one new token per
+sequence against a seq_len-deep cache.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+
+
+def prefill_step(params, batch, cache, *, cfg: ModelConfig):
+    if cfg.is_encdec():
+        new_cache = M.prefill_encdec(params, batch, cfg, cache)
+        B = batch["frames"].shape[0]
+        logits = jnp.zeros((B, 1, cfg.vocab), jnp.float32)   # BOS comes next
+        return logits, new_cache
+    return M.prefill(params, batch, cfg, cache)
+
+
+def serve_step(params, cache, tokens, pos, *, cfg: ModelConfig):
+    """tokens: (B,1) int32, pos: scalar int32. Greedy next token."""
+    logits, cache = M.decode_step(params, cache, tokens, pos, cfg)
+    nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    return nxt, cache
+
+
+def make_jitted_serve_fns(cfg: ModelConfig, mesh, mode: str = "serve"):
+    from . import sharding as Sh
+    from .specs import abstract_params
+
+    pshape = abstract_params(cfg)
+    pspecs = Sh.named(mesh, Sh.param_specs(pshape, cfg, mesh, mode))
+
+    def _cache_shardings(cache_shape):
+        return Sh.named(mesh, Sh.cache_specs(cache_shape, cfg, mesh, mode))
+
+    pre = functools.partial(prefill_step, cfg=cfg)
+    dec = functools.partial(serve_step, cfg=cfg)
+
+    def jit_prefill(cache_shape, batch_shape):
+        return jax.jit(pre, in_shardings=(
+            pspecs, Sh.named(mesh, Sh.batch_specs(batch_shape, cfg, mesh, mode)),
+            _cache_shardings(cache_shape)),
+            out_shardings=(None, _cache_shardings(cache_shape)))
+
+    def jit_decode(cache_shape):
+        cs = _cache_shardings(cache_shape)
+        return jax.jit(dec, in_shardings=(pspecs, cs, None, None),
+                       out_shardings=(None, cs), donate_argnums=(1,))
+
+    return jit_prefill, jit_decode

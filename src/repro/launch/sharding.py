@@ -1,0 +1,267 @@
+"""Partitioning rules: param/optimizer/batch/cache PartitionSpecs per mode.
+
+Mesh axes: ("pod", "data", "model") multi-pod or ("data", "model") single
+pod (launch/mesh.py). Logical roles:
+
+  train mode
+    batch    -> (pod, data)                      pure DP over pods + data
+    TP dim   -> model       (heads, d_ff, vocab, experts, d_inner, lru)
+    FSDP dim -> (pod, data) (the non-TP dim of every big matrix; optimizer
+                             states inherit it => ZeRO-3-style memory)
+  serve mode
+    same TP; FSDP dim -> data only (weights stream via all-gather; pods are
+    independent replicas of the serving fleet);
+    KV cache: batch -> (pod, data), head_dim -> model
+    long-context (batch=1): KV seq -> data, head_dim -> model; SSM/RG-LRU
+    state width -> model (data idles for the state update - see roofline).
+
+Rules match on (parent-path, leaf-name, ndim); scan-stacked leading period
+axes (and whisper's stacked layer axes) get a None prepended automatically.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Axes:
+    dp: object          # batch / pure-DP axes, e.g. ("pod","data")
+    fsdp: object        # weight-sharding axis(es)
+    tp: object = "model"
+    seq: Optional[str] = None      # sequence sharding for long-context serve
+
+
+def axes_for(mesh, mode: str) -> Axes:
+    names = mesh.axis_names
+    dp = tuple(a for a in ("pod", "data") if a in names)
+    dp = dp[0] if len(dp) == 1 else dp
+    if mode == "train":
+        return Axes(dp=dp, fsdp=dp)
+    if mode == "serve":
+        return Axes(dp=dp, fsdp="data")
+    if mode == "serve_long":
+        return Axes(dp=None, fsdp="data", seq="data")
+    raise ValueError(mode)
+
+
+def _divisible(mesh, axis, size) -> bool:
+    if axis is None:
+        return False
+    axes = (axis,) if isinstance(axis, str) else tuple(axis)
+    total = int(np.prod([mesh.shape[a] for a in axes]))
+    return size % total == 0
+
+
+def _maybe(mesh, axis, size):
+    """Use axis only if it divides the dim (else replicate that dim)."""
+    return axis if _divisible(mesh, axis, size) else None
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+def _param_rule(path: str, shape, ax: Axes, mesh):
+    """Spec for one parameter leaf, identified by '/'-joined path."""
+    nd = len(shape)
+    f = lambda i, a: _maybe(mesh, a, shape[i])
+    name = path.split("/")[-1]
+
+    # --- norms / biases / scalars: replicate
+    if nd <= 1 or name in ("g", "b", "dt_bias", "D", "conv_b", "b_a", "b_i",
+                           "lambda"):
+        return P()
+    # --- embeddings
+    if name == "tok":
+        return P(f(0, ax.tp), f(1, ax.fsdp))
+    if name == "head":
+        return P(f(0, ax.fsdp), f(1, ax.tp))
+    if name == "pos_dec":
+        return P()
+    # --- MoE expert tensors (E, d, ff) / (E, ff, d): experts -> tp,
+    #     second dim -> fsdp (this is what makes 128-expert optimizer fit)
+    if name in ("wi", "wg", "wo") and nd == 3:
+        return P(f(0, ax.tp), f(1, ax.fsdp), None)
+    if name == "router":
+        return P(f(0, ax.fsdp), None)
+    # --- attention
+    if name in ("wq", "wk", "wv"):
+        return P(f(0, ax.fsdp), f(1, ax.tp))
+    if name == "wo" and ("attn" in path or "self_attn" in path
+                         or "cross_attn" in path):
+        return P(f(0, ax.tp), f(1, ax.fsdp))
+    # --- dense MLP
+    if name in ("wi", "wg"):
+        return P(f(0, ax.fsdp), f(1, ax.tp))
+    if name == "wo":
+        return P(f(0, ax.tp), f(1, ax.fsdp))
+    # --- mamba
+    if name == "in_proj":
+        return P(f(0, ax.fsdp), f(1, ax.tp))
+    if name == "x_proj":
+        return P(f(0, ax.tp), f(1, ax.fsdp))
+    if name == "dt_proj":
+        return P(f(0, ax.fsdp), f(1, ax.tp))
+    if name == "A_log":
+        return P(f(0, ax.tp), None)
+    if name == "conv_w":
+        return P(None, f(1, ax.tp))
+    if name == "out_proj":
+        return P(f(0, ax.tp), f(1, ax.fsdp))
+    # --- rg-lru
+    if name in ("w_x", "w_y"):
+        return P(f(0, ax.fsdp), f(1, ax.tp))
+    if name in ("w_a", "w_i"):
+        return P(f(0, ax.tp), f(1, ax.fsdp))
+    if name == "w_o":
+        return P(f(0, ax.tp), f(1, ax.fsdp))
+    return P()
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+    return "/".join(parts)
+
+
+def param_specs(params_shape, cfg: ModelConfig, mesh, mode: str = "train"):
+    """Pytree of PartitionSpec matching a params (shape) tree."""
+    ax = axes_for(mesh, mode)
+    stacked_markers = ("scan", "enc", "dec")
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        shape = leaf.shape
+        parts = ps.split("/")
+        stacked = any(m in parts for m in stacked_markers) and (
+            "embed" not in parts)
+        if stacked and len(shape) >= 1:
+            spec = _param_rule(ps, shape[1:], ax, mesh)
+            return P(None, *spec)
+        return _param_rule(ps, shape, ax, mesh)
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def use_specs_fn(cfg: ModelConfig, mesh, mode: str = "train"):
+    """Returns gather_fn(block_param_subtree) -> same tree constrained to its
+    use-site sharding: storage spec minus the fsdp axes (i.e. weights are
+    all-gathered over (pod, data) just-in-time, Megatron-style TP kept).
+    Without this, GSPMD sometimes contracts against fsdp-sharded weights and
+    all-reduces activation-sized partial sums (measured 5e11 B/step on
+    llama4-scout MoE; see EXPERIMENTS.md section Perf)."""
+    ax = axes_for(mesh, mode)
+    ax_use = dataclasses.replace(ax, fsdp=None)
+
+    def gather(tree):
+        def one(path, leaf):
+            if not hasattr(leaf, "shape"):
+                return leaf
+            spec = _param_rule(_path_str(path), leaf.shape, ax_use, mesh)
+            return jax.lax.with_sharding_constraint(
+                leaf, NamedSharding(mesh, spec))
+        return jax.tree_util.tree_map_with_path(one, tree)
+
+    return gather
+
+
+def opt_specs(pspecs):
+    """AdamW state specs: master/m/v mirror param specs; step replicated."""
+    from repro.optim.adamw import AdamWState
+    return AdamWState(master=pspecs, m=pspecs, v=pspecs, step=P())
+
+
+# ---------------------------------------------------------------------------
+# batch / cache specs
+# ---------------------------------------------------------------------------
+
+def batch_specs(batch_shape, cfg: ModelConfig, mesh, mode: str = "train"):
+    ax = axes_for(mesh, mode)
+
+    def one(path, leaf):
+        name = _path_str(path).split("/")[-1]
+        shape = leaf.shape
+        if name == "positions" and len(shape) == 3:     # M-RoPE (3,B,S)
+            return P(None, _maybe(mesh, ax.dp, shape[1]), None)
+        if len(shape) == 0:
+            return P()
+        b = _maybe(mesh, ax.dp, shape[0])
+        if name in ("embeds", "frames"):
+            return P(b, _maybe(mesh, ax.seq, shape[1]), None)
+        return P(*([b] + [_maybe(mesh, ax.seq, shape[1])
+                          if len(shape) > 1 else None]
+                   + [None] * (len(shape) - 2)))
+
+    return jax.tree_util.tree_map_with_path(one, batch_shape)
+
+
+def cache_specs(cache_shape, cfg: ModelConfig, mesh, mode: str):
+    """KV/state cache specs. Leaves (after optional stacked leading dims):
+       k/v: (B, S, KV, hd); ssm h: (B, di, N); rglru h: (B, L);
+       conv: (B, W-1, width)."""
+    ax = axes_for(mesh, mode)
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        parts = ps.split("/")
+        name = parts[-1]
+        shape = leaf.shape
+        # count stacked leading dims: scan-period axis (and tuple idx handled
+        # by structure); whisper self/cross caches have (L, B, ...) layout
+        lead = 0
+        if "scan" in parts or "self" in parts or "cross" in parts:
+            lead = 1
+        core = shape[lead:]
+        if name in ("k", "v"):
+            B, S, KV, hd = core
+            # kv-head sharding keeps GQA attention fully local per rank;
+            # when KV doesn't divide |tp|, shard the SEQUENCE dim instead
+            # (softmax reduces over it with two tiny psums) -- head_dim
+            # sharding would partial-sum full score tensors per layer
+            # (EXPERIMENTS.md section Perf, iteration B1)
+            if _divisible(mesh, ax.tp, KV):
+                spec = (_maybe(mesh, ax.dp, B), _maybe(mesh, ax.seq, S),
+                        ax.tp, None)
+            elif ax.seq is None and _divisible(mesh, ax.tp, S):
+                spec = (_maybe(mesh, ax.dp, B), ax.tp, None, None)
+            else:
+                spec = (_maybe(mesh, ax.dp, B), _maybe(mesh, ax.seq, S),
+                        None, _maybe(mesh, ax.tp, hd))
+        elif name == "h" and len(core) == 3:            # ssm state
+            B, di, N = core
+            spec = (_maybe(mesh, ax.dp, B), _maybe(mesh, ax.tp, di), None)
+        elif name == "h":                                # rglru state
+            B, L = core
+            spec = (_maybe(mesh, ax.dp, B), _maybe(mesh, ax.tp, L))
+        elif name == "conv":
+            B, W1, width = core
+            spec = (_maybe(mesh, ax.dp, B), None, _maybe(mesh, ax.tp, width))
+        else:
+            spec = (None,) * len(core)
+        return P(*([None] * lead), *spec)
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def activation_spec(mesh, mode: str):
+    """(B,S,d) constraint at block boundaries."""
+    ax = axes_for(mesh, mode)
+    return P(ax.dp, ax.seq, None)

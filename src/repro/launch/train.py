@@ -1,0 +1,67 @@
+"""Training step (LM workloads) and the end-to-end trainer CLI.
+
+The step = forward (chunked xent) + backward + AdamW with f32 masters.
+Shardings are applied at jit time from launch/sharding.py rules; the model
+itself only sees plain arrays (GSPMD inserts collectives).
+"""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.optim.adamw import adamw_init, adamw_update
+
+
+def train_step(params, opt, batch, *, cfg: ModelConfig, lr: float = 3e-4):
+    def loss_fn(p):
+        return M.forward_train(p, batch, cfg)
+
+    (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+    new_params, new_opt, gnorm = adamw_update(grads, opt, params, lr=lr)
+    metrics = dict(metrics)
+    metrics.update({"loss": loss, "grad_norm": gnorm})
+    return new_params, new_opt, metrics
+
+
+def make_jitted_train_step(cfg: ModelConfig, mesh, mode: str = "train",
+                           lr: float = 3e-4, donate: bool = True):
+    from . import sharding as Sh
+    from .specs import abstract_params, abstract_opt
+
+    pshape = abstract_params(cfg)
+    pspecs = Sh.param_specs(pshape, cfg, mesh, mode)
+    ospecs = Sh.opt_specs(pspecs)
+    step = functools.partial(train_step, cfg=cfg, lr=lr)
+    return jax.jit(
+        step,
+        in_shardings=(Sh.named(mesh, pspecs), Sh.named(mesh, ospecs), None),
+        out_shardings=(Sh.named(mesh, pspecs), Sh.named(mesh, ospecs), None),
+        donate_argnums=(0, 1) if donate else (),
+    )
+
+
+def run_training(cfg: ModelConfig, mesh, data_iter, *, steps: int,
+                 lr: float = 3e-4, log_every: int = 10, on_step=None,
+                 params=None, opt=None, start_step: int = 0):
+    """Simple synchronous trainer loop with checkpoint/telemetry hook
+    `on_step(step, params, opt, metrics)`."""
+    if params is None:
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        opt = adamw_init(params)
+    jstep = make_jitted_train_step(cfg, mesh, lr=lr)
+    metrics = {}
+    for t in range(start_step, steps):
+        batch = next(data_iter)
+        params, opt, metrics = jstep(params, opt, batch)
+        if (t + 1) % log_every == 0:
+            m = {k: float(v) for k, v in metrics.items()}
+            print(f"step {t + 1}: " + " ".join(f"{k}={v:.4f}"
+                                               for k, v in m.items()))
+        if on_step is not None:
+            on_step(t + 1, params, opt, metrics)
+    return params, opt, metrics

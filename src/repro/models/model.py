@@ -1,0 +1,605 @@
+"""Model factory: params init, train forward (chunked xent loss), prefill and
+single-token decode with caches -- for every family in the assigned zoo.
+
+Layer stacks execute as a scan over whole *periods* of the block pattern
+(compile time O(|pattern|), not O(n_layers)); a non-divisible remainder runs
+unscanned. Caches mirror that structure:
+
+    params = {embed, scan: <stacked period params>, rest: [block params],
+              final_norm}
+    cache  = {scan: <stacked period caches>, rest: [block caches]}
+
+Whisper (enc-dec) has its own structure {embed, enc, dec, ...} but reuses the
+same block machinery for decoder self-attention; encoder attention is the
+same chunked kernel with causal=False.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import rglru as R
+from . import ssm as S
+from .config import Block, ModelConfig
+
+MAX_WHISPER_DEC = 448
+
+# Optional sharding constraints installed by the launcher (launch/train.py,
+# launch/dryrun.py). The model itself stays mesh-agnostic; when unset these
+# are no-ops (single-device tests).
+_SHARDINGS = {"act": None, "logits": None}
+_PARAM_GATHER = None
+
+
+def set_shardings(**kw):
+    _SHARDINGS.update(kw)
+
+
+def set_param_gather(fn):
+    """Install a use-site weight resharding fn (FSDP just-in-time gather);
+    None disables. See launch/sharding.py::use_specs_fn."""
+    global _PARAM_GATHER
+    _PARAM_GATHER = fn
+
+
+def _gather(tree):
+    return _PARAM_GATHER(tree) if _PARAM_GATHER is not None else tree
+
+
+def constrain(x, key):
+    sh = _SHARDINGS.get(key)
+    return jax.lax.with_sharding_constraint(x, sh) if sh is not None else x
+
+
+# ----------------------------------------------------------------------------
+# per-block init / apply
+# ----------------------------------------------------------------------------
+
+def _block_dff(cfg: ModelConfig, spec: Block) -> int:
+    return spec.d_ff if spec.d_ff is not None else cfg.d_ff
+
+
+def init_block(rng, cfg: ModelConfig, spec: Block):
+    r = jax.random.split(rng, 4)
+    dtype = jnp.dtype(cfg.dtype)
+    p: Dict[str, Any] = {"norm1": L.init_norm(r[0], cfg.d_model, cfg.norm, dtype)}
+    if spec.mixer == "attn":
+        p["attn"] = L.init_attn(r[1], cfg, dtype)
+    elif spec.mixer == "ssm":
+        p["ssm"] = S.init_ssm(r[1], cfg, dtype)
+    elif spec.mixer == "rglru":
+        p["rglru"] = R.init_rglru(r[1], cfg, dtype)
+    else:
+        raise ValueError(spec.mixer)
+    if cfg.post_norms:
+        p["norm1_post"] = L.init_norm(jax.random.fold_in(r[0], 1),
+                                      cfg.d_model, cfg.norm, dtype)
+    if spec.mlp is not None:
+        p["norm2"] = L.init_norm(r[2], cfg.d_model, cfg.norm, dtype)
+        dff = _block_dff(cfg, spec)
+        if spec.mlp == "moe":
+            p["moe"] = L.init_moe(r[3], cfg, dff, dtype)
+        else:
+            p["mlp"] = L.init_mlp(r[3], cfg.d_model, dff, spec.mlp, dtype)
+        if cfg.post_norms:
+            p["norm2_post"] = L.init_norm(jax.random.fold_in(r[2], 1),
+                                          cfg.d_model, cfg.norm, dtype)
+    return p
+
+
+def init_block_cache(cfg: ModelConfig, spec: Block, B: int, S_max: int, dtype):
+    if spec.mixer == "attn":
+        # sliding-window layers keep a ring buffer of `window` slots (slot =
+        # position mod window) -- O(W) memory regardless of context length,
+        # which is what makes gemma2/gemma3-style long_500k cells fit
+        S_alloc = min(S_max, spec.window) if spec.window else S_max
+        shp = (B, S_alloc, cfg.n_kv, cfg.head_dim)
+        return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}
+    if spec.mixer == "ssm":
+        return S.init_ssm_cache(cfg, B, dtype)
+    if spec.mixer == "rglru":
+        return R.init_rglru_cache(cfg, B, dtype)
+    raise ValueError(spec.mixer)
+
+
+def _rope_base_for(cfg: ModelConfig, spec: Block):
+    if spec.window is None and cfg.rope_base_global is not None:
+        return cfg.rope_base_global
+    return cfg.rope_base
+
+
+def apply_block(cfg: ModelConfig, spec: Block, p, x, ctx, cache=None):
+    """Returns (x, new_cache, moe_aux). ctx keys: positions, pos (decode
+    write index, None for train/prefill), decode (bool)."""
+    p = _gather(p)          # FSDP just-in-time weight gather (no-op untied)
+    aux = jnp.zeros((), jnp.float32)
+    h = L.apply_norm(p["norm1"], x, cfg.norm)
+    new_cache = cache
+    if spec.mixer == "attn":
+        q, k, v = L.attn_qkv(p["attn"], h, cfg, ctx["positions"],
+                             _rope_base_for(cfg, spec))
+        # M-RoPE carries (3,B,S) position streams; masking uses the temporal one
+        mask_pos = (ctx["positions"][0] if ctx["positions"].ndim == 3
+                    else ctx["positions"])
+        ring = (spec.window is not None
+                and cache is not None
+                and cache["k"].shape[-3] == spec.window)
+        if ctx["decode"]:
+            pos = ctx["pos"]
+            wpos = pos % spec.window if ring else pos
+            kc = jax.lax.dynamic_update_slice_in_dim(cache["k"],
+                                                     k.astype(cache["k"].dtype),
+                                                     wpos, axis=1)
+            vc = jax.lax.dynamic_update_slice_in_dim(cache["v"],
+                                                     v.astype(cache["v"].dtype),
+                                                     wpos, axis=1)
+            if ring:
+                o = L.decode_attention_ring(q, kc, vc, pos,
+                                            window=spec.window,
+                                            softcap=cfg.attn_softcap)
+            else:
+                o = L.decode_attention(q, kc, vc, pos, window=spec.window,
+                                       softcap=cfg.attn_softcap)
+            new_cache = {"k": kc, "v": vc}
+        else:
+            if (cfg.use_flash_attention and spec.window is None
+                    and ctx["positions"].ndim == 2):
+                from repro.kernels.flash_attention import flash_attention
+                o = flash_attention(q, k, v, softcap=cfg.attn_softcap)
+            else:
+                o = L.chunked_attention(q, k, v, mask_pos,
+                                        window=spec.window,
+                                        softcap=cfg.attn_softcap,
+                                        q_chunk=cfg.q_chunk)
+            if cache is not None:   # prefill: write back into the cache
+                S_in = k.shape[1]
+                W = cache["k"].shape[-3]
+                if ring and S_in >= W:
+                    # last W tokens, rolled so token p lands in slot p mod W
+                    shift = (S_in - W) % W
+                    wk = jnp.roll(k[:, S_in - W:], shift, axis=1)
+                    wv = jnp.roll(v[:, S_in - W:], shift, axis=1)
+                    new_cache = {"k": wk.astype(cache["k"].dtype),
+                                 "v": wv.astype(cache["v"].dtype)}
+                else:
+                    new_cache = {"k": cache["k"].at[:, :S_in].set(
+                                     k.astype(cache["k"].dtype)),
+                                 "v": cache["v"].at[:, :S_in].set(
+                                     v.astype(cache["v"].dtype))}
+        B, Sq = x.shape[:2]
+        o = o.reshape(B, Sq, cfg.n_heads * cfg.head_dim) @ p["attn"]["wo"]
+    elif spec.mixer == "ssm":
+        o, st = S.ssm_forward(p["ssm"], h, cfg, cache)
+        new_cache = st if cache is not None else cache
+    else:  # rglru
+        o, st = R.rglru_forward(p["rglru"], h, cfg, cache)
+        new_cache = st if cache is not None else cache
+    if cfg.post_norms:
+        o = L.apply_norm(p["norm1_post"], o, cfg.norm)
+    x = x + o
+    if spec.mlp is not None:
+        h2 = L.apply_norm(p["norm2"], x, cfg.norm)
+        if spec.mlp == "moe":
+            o2, aux = L.moe_forward(p["moe"], h2, cfg, _block_dff(cfg, spec))
+        else:
+            o2 = L.mlp_forward(p["mlp"], h2, spec.mlp)
+        if cfg.post_norms:
+            o2 = L.apply_norm(p["norm2_post"], o2, cfg.norm)
+        x = x + o2
+    return x, new_cache, aux
+
+
+# ----------------------------------------------------------------------------
+# decoder-only stack
+# ----------------------------------------------------------------------------
+
+def _split_layers(cfg: ModelConfig) -> Tuple[int, int]:
+    P = len(cfg.pattern)
+    return cfg.n_layers // P, cfg.n_layers % P
+
+
+def init_params(rng, cfg: ModelConfig):
+    if cfg.is_encdec():
+        return init_params_encdec(rng, cfg)
+    dtype = jnp.dtype(cfg.dtype)
+    n_full, rem = _split_layers(cfg)
+    r = jax.random.split(rng, 3 + rem)
+    params: Dict[str, Any] = {"embed": L.init_embed(r[0], cfg, dtype)}
+
+    def one_period(rk):
+        rs = jax.random.split(rk, len(cfg.pattern))
+        return tuple(init_block(rs[j], cfg, sp)
+                     for j, sp in enumerate(cfg.pattern))
+
+    if n_full > 0:
+        keys = jax.random.split(r[1], n_full)
+        stacked = jax.vmap(one_period)(keys)
+        params["scan"] = stacked
+    params["rest"] = [init_block(r[3 + i], cfg, cfg.pattern[i])
+                      for i in range(rem)]
+    params["final_norm"] = L.init_norm(r[2], cfg.d_model, cfg.norm, dtype)
+    return params
+
+
+def init_cache(cfg: ModelConfig, B: int, S_max: int):
+    dtype = jnp.dtype(cfg.dtype)
+    if cfg.is_encdec():
+        return init_cache_encdec(cfg, B, S_max)
+    n_full, rem = _split_layers(cfg)
+    cache: Dict[str, Any] = {}
+    if n_full > 0:
+        def one(_):
+            return tuple(init_block_cache(cfg, sp, B, S_max, dtype)
+                         for sp in cfg.pattern)
+        cache["scan"] = jax.vmap(one)(jnp.arange(n_full))
+    cache["rest"] = [init_block_cache(cfg, cfg.pattern[i], B, S_max, dtype)
+                     for i in range(rem)]
+    return cache
+
+
+def _embed_inputs(params, batch, cfg):
+    params = {**params, "embed": _gather(params["embed"])}
+    if cfg.input_mode == "embeddings":
+        x = batch["embeds"].astype(jnp.dtype(cfg.dtype))
+        if cfg.embed_scale:
+            x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+        return x
+    return L.embed_tokens(params["embed"], batch["tokens"], cfg)
+
+
+def _positions(cfg, batch, B, Sq, offset=0):
+    if "positions" in batch:
+        return batch["positions"]
+    pos = jnp.arange(Sq, dtype=jnp.int32)[None] + offset
+    pos = jnp.broadcast_to(pos, (B, Sq))
+    if cfg.mrope_sections is not None:
+        pos = jnp.broadcast_to(pos[None], (len(cfg.mrope_sections), B, Sq))
+    return pos
+
+
+def _run_stack(params, x, cfg, ctx, cache=None):
+    """Apply all layers. Returns (x, new_cache, aux_sum).
+
+    With a cache, the stacked period caches ride in the scan *carry* and are
+    updated in place (dynamic_update_slice at the period index). Stacking new
+    caches as scan `ys` instead would copy the entire multi-GB cache every
+    decode step -- XLA aliases while-loop carries, so the carry formulation
+    keeps cache traffic O(read) instead of O(read+full rewrite).
+    """
+    n_full, rem = _split_layers(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+    new_cache: Dict[str, Any] = {"rest": []}
+
+    if n_full > 0:
+        def period_body(x, pp, cc):
+            auxs = jnp.zeros((), jnp.float32)
+            ncs = []
+            for j, sp in enumerate(cfg.pattern):
+                x, nc, aux = apply_block(cfg, sp, pp[j], x, ctx,
+                                         None if cc is None else cc[j])
+                ncs.append(nc)
+                auxs = auxs + aux
+            return x, (tuple(ncs) if cc is not None else None), auxs
+
+        if cache is None:
+            def b2(x, pp):
+                x, _, auxs = period_body(x, pp, None)
+                return x, auxs
+            if cfg.remat:
+                policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                          if cfg.remat_policy == "dots" else None)
+                b2 = jax.checkpoint(b2, policy=policy)
+            x, auxs = jax.lax.scan(b2, x, params["scan"])
+            aux_total = aux_total + jnp.sum(auxs)
+        else:
+            take = lambda t, i: jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, i, 0,
+                                                       keepdims=False), t)
+            put = lambda t, u, i: jax.tree.map(
+                lambda a, b: jax.lax.dynamic_update_index_in_dim(
+                    a, b.astype(a.dtype), i, 0), t, u)
+
+            def b3(carry, pp):
+                x, full_cache, i = carry
+                cc = take(full_cache, i)
+                x, nc, auxs = period_body(x, pp, cc)
+                full_cache = put(full_cache, nc, i)
+                return (x, full_cache, i + 1), auxs
+
+            (x, ncache, _), auxs = jax.lax.scan(
+                b3, (x, cache["scan"], jnp.zeros((), jnp.int32)),
+                params["scan"])
+            new_cache["scan"] = ncache
+            aux_total = aux_total + jnp.sum(auxs)
+
+    for i in range(rem):
+        cc = cache["rest"][i] if cache is not None else None
+        x, nc, aux = apply_block(cfg, cfg.pattern[i], params["rest"][i], x,
+                                 ctx, cc)
+        if cache is not None:
+            new_cache["rest"].append(nc)
+        aux_total = aux_total + aux
+
+    x = L.apply_norm(params["final_norm"], x, cfg.norm)
+    return x, (new_cache if cache is not None else None), aux_total
+
+
+def chunked_xent(params, x, labels, mask, cfg):
+    """Cross-entropy without materializing (B,S,V): scan over seq chunks."""
+    B, Sq, d = x.shape
+    C = L.pick_chunk(Sq, cfg.loss_chunk)
+    nch = Sq // C
+
+    def chunk(carry, ci):
+        tot, cnt = carry
+        xs = jax.lax.dynamic_slice_in_dim(x, ci * C, C, axis=1)
+        ys = jax.lax.dynamic_slice_in_dim(labels, ci * C, C, axis=1)
+        ms = jax.lax.dynamic_slice_in_dim(mask, ci * C, C, axis=1)
+        logits = constrain(L.lm_logits(_gather(params["embed"]), xs, cfg),
+                           "logits")
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ys[..., None], axis=-1)[..., 0]
+        nll = (logz - gold) * ms
+        return (tot + jnp.sum(nll), cnt + jnp.sum(ms)), None
+
+    (tot, cnt), _ = jax.lax.scan(chunk, (jnp.zeros((), jnp.float32),
+                                         jnp.zeros((), jnp.float32)),
+                                 jnp.arange(nch))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def forward_train(params, batch, cfg: ModelConfig):
+    """batch: tokens/embeds + labels (+ loss_mask). Returns (loss, metrics)."""
+    if cfg.is_encdec():
+        return forward_train_encdec(params, batch, cfg)
+    x = constrain(_embed_inputs(params, batch, cfg), "act")
+    B, Sq = x.shape[:2]
+    ctx = {"positions": _positions(cfg, batch, B, Sq), "pos": None,
+           "decode": False}
+    x, _, aux = _run_stack(params, x, cfg, ctx, cache=None)
+    x = constrain(x, "act")
+    mask = batch.get("loss_mask", jnp.ones(batch["labels"].shape, jnp.float32))
+    loss = chunked_xent(params, x, batch["labels"], mask, cfg)
+    total = loss + 0.01 * aux
+    return total, {"xent": loss, "moe_aux": aux}
+
+
+def prefill(params, batch, cfg: ModelConfig, cache):
+    """Fill the cache with a prompt; returns (last_logits, cache)."""
+    x = _embed_inputs(params, batch, cfg)
+    B, Sq = x.shape[:2]
+    ctx = {"positions": _positions(cfg, batch, B, Sq), "pos": 0,
+           "decode": False}
+    x, cache, _ = _run_stack(params, x, cfg, ctx, cache=cache)
+    logits = L.lm_logits(params["embed"], x[:, -1:], cfg)
+    return logits, cache
+
+
+def decode_step(params, cache, tokens, pos, cfg: ModelConfig):
+    """One decode step. tokens: (B,1) int32; pos: scalar int32 (write index,
+    also the attended-up-to position). Returns (logits (B,1,V), new_cache)."""
+    if cfg.is_encdec():
+        return decode_step_encdec(params, cache, tokens, pos, cfg)
+    x = L.embed_tokens(params["embed"], tokens, cfg)
+    B = x.shape[0]
+    posv = jnp.full((B, 1), pos, jnp.int32)
+    if cfg.mrope_sections is not None:
+        posv = jnp.broadcast_to(posv[None], (len(cfg.mrope_sections), B, 1))
+    ctx = {"positions": posv, "pos": pos, "decode": True}
+    x, cache, _ = _run_stack(params, x, cfg, ctx, cache=cache)
+    logits = L.lm_logits(params["embed"], x, cfg)
+    return logits, cache
+
+
+# ----------------------------------------------------------------------------
+# whisper-style encoder-decoder
+# ----------------------------------------------------------------------------
+
+def _init_enc_layer(rng, cfg, dtype):
+    r = jax.random.split(rng, 4)
+    return {"norm1": L.init_norm(r[0], cfg.d_model, cfg.norm, dtype),
+            "attn": L.init_attn(r[1], cfg, dtype),
+            "norm2": L.init_norm(r[2], cfg.d_model, cfg.norm, dtype),
+            "mlp": L.init_mlp(r[3], cfg.d_model, cfg.d_ff, "gelu", dtype)}
+
+
+def _init_dec_layer(rng, cfg, dtype):
+    r = jax.random.split(rng, 6)
+    return {"norm1": L.init_norm(r[0], cfg.d_model, cfg.norm, dtype),
+            "self_attn": L.init_attn(r[1], cfg, dtype),
+            "norm_x": L.init_norm(r[2], cfg.d_model, cfg.norm, dtype),
+            "cross_attn": L.init_attn(r[3], cfg, dtype),
+            "norm2": L.init_norm(r[4], cfg.d_model, cfg.norm, dtype),
+            "mlp": L.init_mlp(r[5], cfg.d_model, cfg.d_ff, "gelu", dtype)}
+
+
+def init_params_encdec(rng, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.dtype)
+    r = jax.random.split(rng, 6)
+    enc_keys = jax.random.split(r[0], cfg.enc_layers)
+    dec_keys = jax.random.split(r[1], cfg.dec_layers)
+    return {
+        "embed": {"tok": L.dense_init(r[2], (cfg.vocab, cfg.d_model), dtype,
+                                      scale=0.02),
+                  "pos_dec": L.dense_init(r[3], (MAX_WHISPER_DEC, cfg.d_model),
+                                          dtype, scale=0.02)},
+        "enc": jax.vmap(lambda k: _init_enc_layer(k, cfg, dtype))(enc_keys),
+        "dec": jax.vmap(lambda k: _init_dec_layer(k, cfg, dtype))(dec_keys),
+        "enc_final": L.init_norm(r[4], cfg.d_model, cfg.norm, dtype),
+        "dec_final": L.init_norm(r[5], cfg.d_model, cfg.norm, dtype),
+    }
+
+
+def _enc_attention(p, x, cfg, positions):
+    q, k, v = L.attn_qkv(p["attn"], L.apply_norm(p["norm1"], x, cfg.norm),
+                         cfg, positions, None)
+    B, Sq = x.shape[:2]
+    o = L.chunked_attention(q, k, v, positions, causal=False,
+                            q_chunk=cfg.q_chunk)
+    return x + o.reshape(B, Sq, -1) @ p["attn"]["wo"]
+
+
+def _sinusoid(S, d, dtype):
+    pos = jnp.arange(S, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None]
+    ang = pos / (10000.0 ** (dim / d))
+    pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)[:, :d]
+    return pe.astype(dtype)
+
+
+def encode(params, frames, cfg: ModelConfig):
+    """frames: (B, T, d) precomputed conv-frontend output (stub)."""
+    B, T, d = frames.shape
+    dtype = jnp.dtype(cfg.dtype)
+    x = frames.astype(dtype) + _sinusoid(T, d, dtype)
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+
+    def body(x, p):
+        x = _enc_attention(p, x, cfg, positions)
+        h = L.apply_norm(p["norm2"], x, cfg.norm)
+        return x + L.mlp_forward(p["mlp"], h, "gelu"), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(lambda c, p: body(c, p), x, params["enc"])
+    return L.apply_norm(params["enc_final"], x, cfg.norm)
+
+
+def _dec_block(cfg, p, x, enc_kv, ctx, cache=None):
+    B, Sq = x.shape[:2]
+    h = L.apply_norm(p["norm1"], x, cfg.norm)
+    q, k, v = L.attn_qkv(p["self_attn"], h, cfg, ctx["positions"], None)
+    new_cache = cache
+    if ctx["decode"]:
+        pos = ctx["pos"]
+        kc = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), pos, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), pos, axis=1)
+        o = L.decode_attention(q, kc, vc, pos)
+        new_cache = {"k": kc, "v": vc}
+    else:
+        o = L.chunked_attention(q, k, v, ctx["positions"],
+                                q_chunk=min(cfg.q_chunk, Sq))
+    x = x + o.reshape(B, Sq, -1) @ p["self_attn"]["wo"]
+    # cross attention over precomputed encoder K/V
+    hx = L.apply_norm(p["norm_x"], x, cfg.norm)
+    qx = (hx @ p["cross_attn"]["wq"]).reshape(B, Sq, cfg.n_heads, cfg.head_dim)
+    ek, ev = enc_kv
+    o = L.decode_attention(qx, ek, ev, ek.shape[1] - 1) if Sq == 1 else \
+        L.chunked_attention(qx, ek, ev, ctx["positions"], causal=False,
+                            q_chunk=min(cfg.q_chunk, Sq))
+    x = x + o.reshape(B, Sq, -1) @ p["cross_attn"]["wo"]
+    h2 = L.apply_norm(p["norm2"], x, cfg.norm)
+    return x + L.mlp_forward(p["mlp"], h2, "gelu"), new_cache
+
+
+def _enc_kv_all(params, enc_out, cfg):
+    """Precompute per-decoder-layer cross K/V: (L, B, T, KV, hd)."""
+    def one(p):
+        B, T, _ = enc_out.shape
+        k = (enc_out @ p["cross_attn"]["wk"]).reshape(B, T, cfg.n_kv,
+                                                      cfg.head_dim)
+        v = (enc_out @ p["cross_attn"]["wv"]).reshape(B, T, cfg.n_kv,
+                                                      cfg.head_dim)
+        return k, v
+    return jax.vmap(one)(params["dec"])
+
+
+def forward_train_encdec(params, batch, cfg: ModelConfig):
+    enc_out = encode(params, batch["frames"], cfg)
+    enc_kv = _enc_kv_all(params, enc_out, cfg)
+    toks = batch["tokens"]                                 # (B, S_dec)
+    B, Sd = toks.shape
+    x = jnp.take(params["embed"]["tok"], toks, axis=0)
+    x = x + params["embed"]["pos_dec"][:Sd]
+    ctx = {"positions": jnp.broadcast_to(jnp.arange(Sd, dtype=jnp.int32),
+                                         (B, Sd)),
+           "pos": None, "decode": False}
+
+    def body(x, sliced):
+        p, ekv = sliced
+        x, _ = _dec_block(cfg, p, x, ekv, ctx)
+        return x, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, (params["dec"], enc_kv))
+    x = L.apply_norm(params["dec_final"], x, cfg.norm)
+    logits = constrain(
+        (x @ params["embed"]["tok"].T.astype(x.dtype)).astype(jnp.float32),
+        "logits")
+    labels = batch["labels"]
+    mask = batch.get("loss_mask", jnp.ones(labels.shape, jnp.float32))
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = jnp.sum((logz - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss, {"xent": loss, "moe_aux": jnp.zeros((), jnp.float32)}
+
+
+def init_cache_encdec(cfg: ModelConfig, B: int, T_enc: int):
+    dtype = jnp.dtype(cfg.dtype)
+    shp = (cfg.dec_layers, B, MAX_WHISPER_DEC, cfg.n_kv, cfg.head_dim)
+    xshp = (cfg.dec_layers, B, T_enc, cfg.n_kv, cfg.head_dim)
+    return {"self": {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)},
+            "cross": {"k": jnp.zeros(xshp, dtype),
+                      "v": jnp.zeros(xshp, dtype)}}
+
+
+def prefill_encdec(params, batch, cfg: ModelConfig, cache):
+    """Encoder pass + store cross K/V in the cache."""
+    enc_out = encode(params, batch["frames"], cfg)
+    ek, ev = _enc_kv_all(params, enc_out, cfg)
+    return {"self": cache["self"], "cross": {"k": ek, "v": ev}}
+
+
+def decode_step_encdec(params, cache, tokens, pos, cfg: ModelConfig):
+    B = tokens.shape[0]
+    x = jnp.take(params["embed"]["tok"], tokens, axis=0)
+    x = x + jax.lax.dynamic_slice_in_dim(params["embed"]["pos_dec"],
+                                         pos, 1, axis=0)
+    ctx = {"positions": jnp.full((B, 1), pos, jnp.int32), "pos": pos,
+           "decode": True}
+
+    # self-KV rides in the carry (in-place update; see _run_stack note)
+    def body(carry, sliced):
+        x, sk_all, sv_all, i = carry
+        p, ck, cv = sliced
+        sk = jax.lax.dynamic_index_in_dim(sk_all, i, 0, keepdims=False)
+        sv = jax.lax.dynamic_index_in_dim(sv_all, i, 0, keepdims=False)
+        x, nc = _dec_block(cfg, p, x, (ck, cv), ctx, {"k": sk, "v": sv})
+        sk_all = jax.lax.dynamic_update_index_in_dim(
+            sk_all, nc["k"].astype(sk_all.dtype), i, 0)
+        sv_all = jax.lax.dynamic_update_index_in_dim(
+            sv_all, nc["v"].astype(sv_all.dtype), i, 0)
+        return (x, sk_all, sv_all, i + 1), None
+
+    (x, nk, nv, _), _ = jax.lax.scan(
+        body, (x, cache["self"]["k"], cache["self"]["v"],
+               jnp.zeros((), jnp.int32)),
+        (params["dec"], cache["cross"]["k"], cache["cross"]["v"]))
+    x = L.apply_norm(params["dec_final"], x, cfg.norm)
+    logits = (x @ params["embed"]["tok"].T.astype(x.dtype)).astype(jnp.float32)
+    return logits, {"self": {"k": nk, "v": nv}, "cross": cache["cross"]}
+
+
+# ----------------------------------------------------------------------------
+# bookkeeping
+# ----------------------------------------------------------------------------
+
+def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
+    shapes = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    total = sum(math.prod(l.shape) if l.shape else 1
+                for l in jax.tree.leaves(shapes))
+    if active_only and cfg.n_experts > 1:
+        # replace E-expert tensors with top_k experts' worth
+        n_moe = sum(1 for b in cfg.blocks() if b.mlp == "moe")
+        dff = cfg.d_ff
+        per_expert = 3 * cfg.d_model * dff
+        total -= n_moe * (cfg.n_experts - cfg.top_k) * per_expert
+    return total

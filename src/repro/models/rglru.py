@@ -1,0 +1,86 @@
+"""RG-LRU recurrent block (Griffin / recurrentgemma-9b family).
+
+Recurrent block:  x -> { branch_y: gelu(W_y x) ;
+                         branch_x: W_x x -> causal conv1d -> RG-LRU }
+                  out = W_o (branch_x * branch_y)
+
+RG-LRU:  r_t = sigmoid(W_a u_t + b_a)          (recurrence gate)
+         i_t = sigmoid(W_i u_t + b_i)          (input gate)
+         a_t = exp(-c * softplus(Lambda) * r_t)            (c = 8)
+         h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+Same chunked-associative-scan execution as models/ssm.py; state is just
+(B, lru_width) + the conv tail, which is what makes the long_500k decode cell
+O(1)/token for 2/3 of recurrentgemma's layers.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+from .ssm import _causal_conv, _scan_chunk
+
+_C_RGLRU = 8.0
+
+
+def init_rglru(rng, cfg, dtype):
+    d, L, W = cfg.d_model, cfg.lru_width, cfg.conv_width
+    r = jax.random.split(rng, 6)
+    # Lambda init so a in [0.9, 0.999] at r=1 (griffin appendix)
+    u = jax.random.uniform(r[5], (L,), jnp.float32, 0.9 ** 2, 0.999 ** 2)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / (2 * _C_RGLRU)))
+    return {
+        "w_x": dense_init(r[0], (d, L), dtype),
+        "w_y": dense_init(r[1], (d, L), dtype),
+        "conv_w": dense_init(r[2], (W, L), dtype, scale=1.0 / math.sqrt(W)),
+        "conv_b": jnp.zeros((L,), dtype),
+        "w_a": dense_init(r[3], (L, L), dtype),
+        "b_a": jnp.zeros((L,), jnp.float32),
+        "w_i": dense_init(r[4], (L, L), dtype),
+        "b_i": jnp.zeros((L,), jnp.float32),
+        "lambda": lam,
+        "w_o": dense_init(jax.random.fold_in(rng, 7), (L, d), dtype),
+    }
+
+
+def rglru_forward(p, x, cfg, state=None):
+    """x: (B,S,d) -> (y, new_state); state {"h": (B,L) f32, "conv": (B,W-1,L)}."""
+    B, S, d = x.shape
+    L = cfg.lru_width
+    y_branch = jax.nn.gelu(x @ p["w_y"])
+    u = x @ p["w_x"]
+    conv_state = state["conv"] if state is not None else None
+    u, new_conv = _causal_conv(u, p["conv_w"], p["conv_b"], conv_state)
+
+    r = jax.nn.sigmoid((u @ p["w_a"]).astype(jnp.float32) + p["b_a"])
+    i = jax.nn.sigmoid((u @ p["w_i"]).astype(jnp.float32) + p["b_i"])
+    log_a = -_C_RGLRU * jax.nn.softplus(p["lambda"]) * r     # (B,S,L)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.clip(1.0 - a * a, 1e-12, None)) * i * u.astype(jnp.float32)
+
+    h0 = state["h"] if state is not None else jnp.zeros((B, L), jnp.float32)
+    from .layers import pick_chunk
+    C = pick_chunk(S, cfg.seq_chunk)
+
+    def chunk(h, idx):
+        sl = lambda t: jax.lax.dynamic_slice_in_dim(t, idx * C, C, axis=1)
+        ac, bc = sl(a), sl(gated)
+        hs, hl = _scan_chunk(h[:, :, None], ac[..., None], bc[..., None])
+        return hl[:, :, 0], hs[..., 0]
+
+    if S == C:
+        hl, hs = chunk(h0, 0)
+    else:
+        hl, hs = jax.lax.scan(chunk, h0, jnp.arange(S // C))
+        hs = jnp.moveaxis(hs, 0, 1).reshape(B, S, L)
+
+    out = (hs.astype(x.dtype) * y_branch) @ p["w_o"]
+    return out, {"h": hl, "conv": new_conv}
+
+
+def init_rglru_cache(cfg, B, dtype):
+    return {"h": jnp.zeros((B, cfg.lru_width), jnp.float32),
+            "conv": jnp.zeros((B, cfg.conv_width - 1, cfg.lru_width), dtype)}

@@ -1,0 +1,132 @@
+"""Mamba-1 selective SSM block (falcon-mamba-7b family).
+
+Linear time-varying diagonal recurrence
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t x_t,   y_t = C_t . h_t + D x_t
+run as a *chunked associative scan*: `lax.scan` over sequence chunks carrying
+h, `lax.associative_scan` inside a chunk. This bounds live memory at
+(B, chunk, d_inner, N) instead of (B, S, d_inner, N) while keeping the
+within-chunk parallelism TPUs need. Decode is the O(1) single-step update.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+
+def init_ssm(rng, cfg, dtype):
+    d, di, N, R, W = (cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank,
+                      cfg.conv_width)
+    r = jax.random.split(rng, 6)
+    A = jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": dense_init(r[0], (d, 2 * di), dtype),
+        "conv_w": dense_init(r[1], (W, di), dtype, scale=1.0 / math.sqrt(W)),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(r[2], (di, R + 2 * N), dtype),
+        "dt_proj": dense_init(r[3], (R, di), dtype, scale=R ** -0.5),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.clip(jax.random.uniform(r[4], (di,)) * 0.099 + 0.001,
+                     1e-4, None))).astype(jnp.float32),
+        "A_log": jnp.log(A),                                # (di, N) f32
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(r[5], (di, d), dtype),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv. x: (B,S,di), w: (W,di). state: (B,W-1,di) tail
+    from the previous segment (decode) or None (zeros)."""
+    B, S, di = x.shape
+    W = w.shape[0]
+    if state is None:
+        state = jnp.zeros((B, W - 1, di), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)                # (B, S+W-1, di)
+    out = sum(xp[:, i:i + S, :] * w[i] for i in range(W))
+    new_state = xp[:, -(W - 1):, :] if W > 1 else state
+    return out + b, new_state
+
+
+def _ssm_params(p, xin, cfg):
+    """Input-dependent dt, B, C from x. xin: (B,S,di)."""
+    N, R = cfg.ssm_state, cfg.dt_rank
+    proj = xin @ p["x_proj"]                                # (B,S,R+2N)
+    dt = jax.nn.softplus((proj[..., :R] @ p["dt_proj"]).astype(jnp.float32)
+                         + p["dt_bias"])                    # (B,S,di)
+    Bm = proj[..., R:R + N].astype(jnp.float32)             # (B,S,N)
+    Cm = proj[..., R + N:].astype(jnp.float32)              # (B,S,N)
+    return dt, Bm, Cm
+
+
+def _scan_chunk(h0, a, b):
+    """Diagonal linear recurrence h_t = a_t h_{t-1} + b_t via associative scan.
+    a,b: (B,C,di,N) f32; h0: (B,di,N)."""
+    def comb(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    aa, bb = jax.lax.associative_scan(comb, (a, b), axis=1)
+    h = aa * h0[:, None] + bb                               # include carry
+    return h, h[:, -1]
+
+
+def ssm_forward(p, x, cfg, state=None):
+    """x: (B,S,d). state: None (train) or {"h": (B,di,N) f32,
+    "conv": (B,W-1,di)} (decode / chunk streaming). Returns (y, new_state)."""
+    B, S, d = x.shape
+    di, N = cfg.d_inner, cfg.ssm_state
+    xz = x @ p["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)                      # (B,S,di) each
+    conv_state = state["conv"] if state is not None else None
+    xin, new_conv = _causal_conv(xin, p["conv_w"], p["conv_b"], conv_state)
+    xin = jax.nn.silu(xin)
+    dt, Bm, Cm = _ssm_params(p, xin, cfg)
+    A = -jnp.exp(p["A_log"])                                # (di,N)
+    h0 = (state["h"] if state is not None
+          else jnp.zeros((B, di, N), jnp.float32))
+
+    if cfg.use_fused_ssm and state is None:
+        from repro.kernels.ssm_scan import ssm_scan_pallas
+        pad = (-di) % 128
+        if pad:
+            raise ValueError("use_fused_ssm requires d_inner % 128 == 0")
+        bd = 256 if di % 256 == 0 else 128
+        y = ssm_scan_pallas(xin.astype(jnp.float32), dt, Bm, Cm, A,
+                            p["D"], block_d=bd)
+        y = (y.astype(x.dtype)) * jax.nn.silu(z)
+        return y @ p["out_proj"], {"h": h0, "conv": new_conv}
+
+    from .layers import pick_chunk
+    C = pick_chunk(S, cfg.seq_chunk)
+    xin32 = xin.astype(jnp.float32)
+
+    def chunk(h, idx):
+        sl = lambda t: jax.lax.dynamic_slice_in_dim(t, idx * C, C, axis=1)
+        dtc, Bc, Cc, xc = sl(dt), sl(Bm), sl(Cm), sl(xin32)
+        a = jnp.exp(dtc[..., None] * A)                     # (B,C,di,N)
+        b = (dtc * xc)[..., None] * Bc[:, :, None, :]       # (B,C,di,N)
+        hs, hl = _scan_chunk(h, a, b)
+        y = jnp.einsum("bcdn,bcn->bcd", hs, Cc)             # (B,C,di)
+        return hl, y
+
+    if S == C:
+        hl, y = chunk(h0, 0)
+        ys = y
+    else:
+        hl, ys = jax.lax.scan(chunk, h0, jnp.arange(S // C))
+        ys = jnp.moveaxis(ys, 0, 1).reshape(B, S, di)
+
+    y = ys + xin32 * p["D"]
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    new_state = {"h": hl, "conv": new_conv}
+    return out, new_state
+
+
+def init_ssm_cache(cfg, B, dtype):
+    return {"h": jnp.zeros((B, cfg.d_inner, cfg.ssm_state), jnp.float32),
+            "conv": jnp.zeros((B, cfg.conv_width - 1, cfg.d_inner), dtype)}

@@ -1,0 +1,56 @@
+"""AdamW with f32 master weights (no optax dependency).
+
+Optimizer state is a pytree mirroring params: {master, m, v} all f32 plus a
+scalar step. States inherit the parameter PartitionSpecs (launch/sharding.py
+shards every large tensor over (pod, data) x model, i.e. ZeRO-3/FSDP-style),
+which is what makes 400B-param cells fit 16 GB/chip in the dry run.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    master: object   # f32 copies of params
+    m: object
+    v: object
+    step: jnp.ndarray
+
+
+def adamw_init(params) -> AdamWState:
+    return AdamWState(
+        master=jax.tree.map(lambda p: p.astype(jnp.float32), params),
+        m=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        v=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def adamw_update(grads, state: AdamWState, params, *, lr=3e-4, b1=0.9,
+                 b2=0.95, eps=1e-8, weight_decay=0.1, grad_clip=1.0):
+    """Returns (new_params, new_state, grad_norm)."""
+    step = state.step + 1
+    gsq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree.leaves(grads))
+    gnorm = jnp.sqrt(gsq)
+    scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-12))
+
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    new_m = jax.tree.map(
+        lambda g, m: b1 * m + (1 - b1) * g.astype(jnp.float32) * scale,
+        grads, state.m)
+    new_v = jax.tree.map(
+        lambda g, v: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32) * scale),
+        grads, state.v)
+    new_master = jax.tree.map(
+        lambda m, v, w: w - lr * (m / bc1 / (jnp.sqrt(v / bc2) + eps)
+                                  + weight_decay * w),
+        new_m, new_v, state.master)
+    new_params = jax.tree.map(lambda w, p: w.astype(p.dtype),
+                              new_master, params)
+    return new_params, AdamWState(new_master, new_m, new_v, step), gnorm

@@ -1,0 +1,1 @@
+from . import elastic, failures, straggler

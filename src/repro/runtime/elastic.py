@@ -1,0 +1,38 @@
+"""Elastic scaling for CoCoA+: re-partition the (K, nk, ...) layout when
+workers join/leave. The dual state alpha carries over (it lives with its
+datapoints); only sigma' must be reset to gamma * K_new (Lemma 4), which the
+driver does by construction since CoCoAConfig.resolved_sigma(K) reads the
+current K.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def repartition(arrays: Dict[str, jnp.ndarray], mask: jnp.ndarray,
+                K_new: int) -> Tuple[Dict[str, jnp.ndarray], jnp.ndarray]:
+    """Re-split worker-major data onto K_new workers.
+
+    arrays: {"X": (K, nk, d), "y": (K, nk), "alpha": (K, nk), ...} -- every
+    array shares the (K, nk) leading layout. Valid rows (mask==1) are
+    flattened in worker-major order and re-split contiguously, so datapoints
+    keep their alpha and the objective is unchanged (up to partition-dependent
+    sigma'_min, which the safe bound gamma*K_new always covers).
+    """
+    m = np.asarray(mask).reshape(-1).astype(bool)
+    n = int(m.sum())
+    nk_new = (n + K_new - 1) // K_new
+    pad = nk_new * K_new - n
+    out = {}
+    for name, arr in arrays.items():
+        a = np.asarray(arr)
+        tail_shape = a.shape[2:]
+        flat = a.reshape(-1, *tail_shape)[m]
+        flat = np.concatenate(
+            [flat, np.zeros((pad, *tail_shape), flat.dtype)], axis=0)
+        out[name] = jnp.asarray(flat.reshape(K_new, nk_new, *tail_shape))
+    mnew = np.concatenate([np.ones(n, np.float32), np.zeros(pad, np.float32)])
+    return out, jnp.asarray(mnew.reshape(K_new, nk_new))

@@ -1,0 +1,37 @@
+"""Node-failure handling for CoCoA+.
+
+Dual-safe drop: losing worker k's state = resetting alpha_[k] to 0. Any
+alpha with alpha_[k] = 0 is still dual-feasible, so D(alpha) remains a valid
+lower bound and the duality-gap certificate stays correct -- the run degrades
+instead of corrupting. The shared w must then be re-derived as w(alpha)
+(eq. 3) to stay consistent with the surviving duals; the data shard itself is
+re-read from storage (here: regenerated/reloaded by the caller).
+
+For the LM trainer, failure handling is checkpoint/restart
+(checkpoint.CheckpointManager + launch/train.py `start_step`).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import duality
+from repro.core.cocoa import CoCoAState
+
+
+def drop_worker(state: CoCoAState, k: int) -> CoCoAState:
+    """Zero worker k's duals (its machine died and lost local state)."""
+    alpha = state.alpha.at[k].set(0.0)
+    bar = state.alpha_bar.at[k].set(0.0)
+    return state._replace(alpha=alpha, alpha_bar=bar)
+
+
+def recover_consistent_w(state: CoCoAState, X, mask, lam: float) -> CoCoAState:
+    """Recompute w = w(alpha) after a drop so (w, alpha) are consistent."""
+    n = duality.effective_n(mask)
+    w = duality.w_of_alpha(X, state.alpha, lam, n)
+    return state._replace(w=w)
+
+
+def fail_and_recover(state: CoCoAState, X, mask, lam: float,
+                     k: int) -> CoCoAState:
+    return recover_consistent_w(drop_worker(state, k), X, mask, lam)

@@ -1,0 +1,14 @@
+import os
+
+# Tests run on the single real CPU device (the dry-run spawns its own
+# subprocesses with XLA_FLAGS; see test_dryrun_small.py). Keep device count
+# at 1 here on purpose.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,96 @@
+"""Duality-gap certificate + Lemma-level theory objects made executable."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import duality, sigma
+from repro.core.losses import get_loss
+from repro.core.subproblem import subproblem_sum, subproblem_value
+from repro.data import make_classification, partition
+
+
+def _problem(n=256, d=16, K=4, seed=0):
+    X, y = make_classification(n, d, seed=seed)
+    return partition(X, y, K, seed=seed + 1)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from(["hinge", "smooth_hinge1",
+                                                "logistic", "absolute"]))
+def test_weak_duality_gap_nonneg(seed, loss_name):
+    Xp, yp, mk = _problem(seed=seed % 7)
+    loss = get_loss(loss_name)
+    rng = np.random.default_rng(seed)
+    t = rng.random(yp.shape).astype(np.float32)
+    if loss_name in ("hinge", "smooth_hinge1", "logistic"):
+        alpha = jnp.asarray(t) * yp
+    else:
+        alpha = jnp.asarray(2 * t - 1)
+    alpha = alpha * mk
+    g = float(duality.duality_gap(alpha, Xp, yp, mk, loss, 1e-3))
+    assert g >= -1e-5
+
+
+def test_w_of_alpha_matches_flat():
+    Xp, yp, mk = _problem()
+    rng = np.random.default_rng(0)
+    alpha = jnp.asarray(rng.standard_normal(yp.shape).astype(np.float32)) * mk
+    n = float(jnp.sum(mk))
+    w = duality.w_of_alpha(Xp, alpha, 1e-2, n)
+    Xf = np.asarray(Xp).reshape(-1, Xp.shape[-1])
+    af = np.asarray(alpha).reshape(-1)
+    w_ref = Xf.T @ af / (1e-2 * n)
+    np.testing.assert_allclose(np.asarray(w), w_ref, rtol=1e-5, atol=1e-6)
+
+
+def test_lemma17_initial_suboptimality_bounded():
+    """D(alpha*) - D(0) <= 1 when l_i(0) <= 1 (Lemma 17)."""
+    Xp, yp, mk = _problem()
+    loss = get_loss("hinge")
+    d0 = float(duality.dual(jnp.zeros_like(yp), Xp, yp, mk, loss, 1e-3))
+    # D(alpha*) <= P(w*) <= P(0) = mean l(0) <= 1
+    assert d0 <= 1.0 + 1e-6
+    p0 = float(duality.primal(jnp.zeros(Xp.shape[-1]), Xp, yp, mk, loss, 1e-3))
+    assert p0 - d0 <= 1.0 + 1e-6
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 1000), st.floats(0.25, 1.0))
+def test_lemma3_decomposition_inequality(seed, gamma):
+    """D(a + gamma sum dA_k) >= (1-gamma) D(a) + gamma sum G_k(dA_k)
+    with sigma' = gamma*K (Lemmas 3+4)."""
+    Xp, yp, mk = _problem(seed=seed % 5)
+    K = Xp.shape[0]
+    loss = get_loss("hinge")
+    lam = 1e-2
+    rng = np.random.default_rng(seed)
+    t0 = rng.random(yp.shape).astype(np.float32) * 0.5
+    alpha = jnp.asarray(t0) * yp * mk
+    # random feasible move: dalpha keeps y(alpha+dalpha) in [0,1]
+    t1 = rng.random(yp.shape).astype(np.float32) * 0.5
+    dalpha = (jnp.asarray(t1) * yp - alpha * 0.5) * mk
+    n = float(jnp.sum(mk))
+    w = duality.w_of_alpha(Xp, alpha, lam, n)
+    sp = gamma * K
+    lhs = duality.dual(alpha + gamma * dalpha, Xp, yp, mk, loss, lam)
+    gsum = subproblem_sum(dalpha, w, alpha, Xp, yp, mk, loss, lam, n, K, sp)
+    rhs = (1 - gamma) * duality.dual(alpha, Xp, yp, mk, loss, lam) + gamma * gsum
+    assert float(lhs) >= float(rhs) - 1e-5
+
+
+def test_subproblem_zero_matches_dual_decomposition():
+    """sum_k G_k(0; w(a), a) == D(a) when sigma' arbitrary (terms telescope)."""
+    Xp, yp, mk = _problem()
+    K = Xp.shape[0]
+    loss = get_loss("hinge")
+    lam = 1e-2
+    rng = np.random.default_rng(3)
+    alpha = (jnp.asarray(rng.random(yp.shape).astype(np.float32)) * yp) * mk
+    n = float(jnp.sum(mk))
+    w = duality.w_of_alpha(Xp, alpha, lam, n)
+    z = jnp.zeros_like(alpha)
+    gsum = float(subproblem_sum(z, w, alpha, Xp, yp, mk, loss, lam, n, K, 2.0))
+    dv = float(duality.dual(alpha, Xp, yp, mk, loss, lam))
+    assert abs(gsum - dv) < 1e-4

@@ -1,0 +1,101 @@
+"""Property tests for the model layer algebra (hypothesis + direct)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.layers import (apply_rope, chunked_attention, pick_chunk,
+                                 decode_attention)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 4096), st.integers(1, 1024))
+def test_pick_chunk_properties(S, want):
+    c = pick_chunk(S, want)
+    assert 1 <= c <= min(S, want) or (want > S and c == S)
+    assert S % c == 0
+
+
+def test_window_geq_seq_equals_global():
+    rng = np.random.default_rng(0)
+    B, S, H, hd = 2, 64, 4, 32
+    q = jnp.asarray(rng.standard_normal((B, S, H, hd)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((B, S, 2, hd)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((B, S, 2, hd)).astype(np.float32))
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    a = chunked_attention(q, k, v, pos, window=None, q_chunk=16)
+    b = chunked_attention(q, k, v, pos, window=S + 7, q_chunk=16)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_window_one_attends_self_only():
+    """window=1: each token sees only itself -> output = v of own position
+    (per kv-group)."""
+    rng = np.random.default_rng(1)
+    B, S, KV, hd = 1, 32, 2, 16
+    H = 4
+    q = jnp.asarray(rng.standard_normal((B, S, H, hd)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((B, S, KV, hd)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((B, S, KV, hd)).astype(np.float32))
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    out = chunked_attention(q, k, v, pos, window=1, q_chunk=8)
+    # head h belongs to kv group h // (H // KV)
+    expect = jnp.repeat(v, H // KV, axis=2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-5)
+
+
+def test_rope_is_isometry():
+    """Rotary embedding must preserve vector norms (it's a rotation)."""
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((2, 16, 4, 64)).astype(np.float32))
+    pos = jnp.broadcast_to(jnp.arange(16, dtype=jnp.int32), (2, 16))
+    y = apply_rope(x, pos, rope_pct=1.0, base=10_000.0)
+    np.testing.assert_allclose(np.asarray(jnp.linalg.norm(y, axis=-1)),
+                               np.asarray(jnp.linalg.norm(x, axis=-1)),
+                               rtol=1e-5)
+
+
+def test_rope_relative_position_property():
+    """<rope(q, p), rope(k, p+d)> depends only on the offset d."""
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.standard_normal((1, 1, 1, 64)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((1, 1, 1, 64)).astype(np.float32))
+
+    def dot_at(p, d):
+        pq = jnp.full((1, 1), p, jnp.int32)
+        pk = jnp.full((1, 1), p + d, jnp.int32)
+        qq = apply_rope(q, pq)
+        kk = apply_rope(k, pk)
+        return float(jnp.sum(qq * kk))
+
+    assert abs(dot_at(3, 5) - dot_at(40, 5)) < 1e-3
+    assert abs(dot_at(0, 2) - dot_at(17, 2)) < 1e-3
+
+
+def test_decode_attention_equals_chunked_last_row():
+    rng = np.random.default_rng(4)
+    B, S, H, KV, hd = 2, 48, 4, 2, 32
+    q = jnp.asarray(rng.standard_normal((B, S, H, hd)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((B, S, KV, hd)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((B, S, KV, hd)).astype(np.float32))
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    full = chunked_attention(q, k, v, pos, q_chunk=16)
+    dec = decode_attention(q[:, -1:], k, v, S - 1)
+    np.testing.assert_allclose(np.asarray(dec[:, 0]), np.asarray(full[:, -1]),
+                               atol=1e-5)
+
+
+def test_token_stream_deterministic_resume():
+    from repro.data.tokens import TokenStream
+    s1 = TokenStream(1000, 4, 32, seed=5)
+    s2 = TokenStream(1000, 4, 32, seed=5)
+    b1 = s1.batch_at(17)
+    b2 = s2.batch_at(17)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    # sharded reads partition the batch
+    sh0 = TokenStream(1000, 4, 32, seed=5, shard=0, shards=2)
+    sh1 = TokenStream(1000, 4, 32, seed=5, shard=1, shards=2)
+    full = np.concatenate([sh0.batch_at(3)["tokens"],
+                           sh1.batch_at(3)["tokens"]])
+    np.testing.assert_array_equal(full, s1.batch_at(3)["tokens"])

@@ -1,0 +1,91 @@
+"""Loss/conjugate correctness: Fenchel duality, coordinate-update optimality,
+subgradient validity. Property-based via hypothesis."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.losses import LOSSES, get_loss
+
+ALL = sorted(LOSSES)
+CLS = ["hinge", "smooth_hinge1", "logistic"]       # classification: y in ±1
+REG = ["squared", "absolute"]
+
+
+def _label(loss_name, raw):
+    return float(np.sign(raw) or 1.0) if loss_name in CLS else float(raw)
+
+
+def _feasible_alpha(loss_name, y, t):
+    """Map t in [0,1] to a dual-feasible alpha for this loss."""
+    if loss_name in ("hinge", "smooth_hinge1", "logistic"):
+        return y * t                       # y*alpha in [0,1]
+    if loss_name == "absolute":
+        return 2.0 * t - 1.0               # |alpha| <= 1
+    return 4.0 * (t - 0.5)                 # squared: unconstrained
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.sampled_from(ALL),
+       st.floats(-3, 3), st.floats(-2, 2), st.floats(0.01, 0.99))
+def test_fenchel_young(loss_name, z, yraw, t):
+    """l(z) + l*(-a) >= -z*a  (Fenchel-Young for the pair (l, l*))."""
+    loss = get_loss(loss_name)
+    y = _label(loss_name, yraw if abs(yraw) > 0.1 else 1.0)
+    a = _feasible_alpha(loss_name, y, t)
+    lv = float(loss.value(jnp.float32(z), jnp.float32(y)))
+    cv = float(loss.conj(jnp.float32(a), jnp.float32(y)))
+    assert lv + cv >= -z * a - 1e-4
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.sampled_from(ALL), st.floats(-2, 2), st.floats(0.05, 5.0),
+       st.floats(0.01, 0.99), st.floats(-2, 2))
+def test_cd_update_maximizes(loss_name, z, q, t, yraw):
+    """delta* from cd_update must beat random perturbations of J(delta)."""
+    loss = get_loss(loss_name)
+    y = _label(loss_name, yraw if abs(yraw) > 0.1 else 1.0)
+    abar = _feasible_alpha(loss_name, y, t)
+
+    def J(delta):
+        c = loss.conj(jnp.float32(abar + delta), jnp.float32(y))
+        return float(-c - delta * z - 0.5 * q * delta * delta)
+
+    dstar = float(loss.cd_update(jnp.float32(abar), jnp.float32(z),
+                                 jnp.float32(q), jnp.float32(y)))
+    base = J(dstar)
+    assert np.isfinite(base)
+    for eps in (-0.1, -0.01, 0.01, 0.1):
+        cand = J(dstar + eps)
+        if np.isfinite(cand):
+            assert base >= cand - 1e-3, (loss_name, dstar, eps, base, cand)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.sampled_from(ALL), st.floats(-3, 3), st.floats(-2, 2))
+def test_u_subgradient(loss_name, z, yraw):
+    """-u in dl(z): l(b) >= l(z) - u*(b - z) for probes b."""
+    loss = get_loss(loss_name)
+    y = _label(loss_name, yraw if abs(yraw) > 0.1 else 1.0)
+    u = float(loss.u_subgrad(jnp.float32(z), jnp.float32(y)))
+    lz = float(loss.value(jnp.float32(z), jnp.float32(y)))
+    for b in (z - 1.0, z - 0.1, z + 0.1, z + 1.0):
+        lb = float(loss.value(jnp.float32(b), jnp.float32(y)))
+        assert lb >= lz - u * (b - z) - 1e-4
+
+
+@pytest.mark.parametrize("loss_name", ALL)
+def test_zero_alpha_feasible_and_bounded(loss_name):
+    """alpha=0 must be dual-feasible with conj value 0 (paper eq. 5 setup)."""
+    loss = get_loss(loss_name)
+    for y in (-1.0, 1.0, 0.3):
+        v = float(loss.conj(jnp.float32(0.0), jnp.float32(y)))
+        assert np.isfinite(v) and abs(v) < 1e-5
+
+
+def test_lipschitz_and_smooth_metadata():
+    assert get_loss("hinge").L == 1.0 and get_loss("hinge").mu == 0.0
+    assert get_loss("smooth_hinge1").mu == 1.0
+    assert get_loss("squared").mu == 1.0
+    assert get_loss("logistic").mu == 4.0

@@ -1,0 +1,71 @@
+"""Partition-difficulty quantities: Lemma 4, Remark 7, Table-1 ratio."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+import scipy.linalg
+
+from repro.core import sigma
+from repro.data import make_classification, partition
+
+
+def _problem(n=192, d=24, K=4, seed=0, het=1.0):
+    X, y = make_classification(n, d, seed=seed)
+    return partition(X, y, K, seed=seed + 1, heterogeneity=het)
+
+
+def test_sigma_k_upper_bound_remark7():
+    """||x_i|| <= 1  =>  sigma_k <= n_k."""
+    Xp, yp, mk = _problem()
+    sk = np.asarray(sigma.sigma_k(Xp, mk))
+    nk = np.asarray(jnp.sum(mk, axis=1))
+    assert np.all(sk <= nk + 1e-3)
+    assert np.all(sk > 0)
+
+
+def test_sigma_k_matches_svd():
+    Xp, yp, mk = _problem()
+    sk = np.asarray(sigma.sigma_k(Xp, mk, iters=200))
+    for k in range(Xp.shape[0]):
+        Xk = np.asarray(Xp[k] * mk[k][:, None])
+        s = np.linalg.svd(Xk, compute_uv=False)[0] ** 2
+        np.testing.assert_allclose(sk[k], s, rtol=1e-3)
+
+
+def test_table1_ratio_geq_one():
+    Xp, yp, mk = _problem()
+    r = float(sigma.table1_ratio(Xp, mk))
+    assert r >= 1.0 - 1e-3
+
+
+def test_lemma4_safe_bound():
+    """sigma'_min <= gamma * K for random and for heterogeneous partitions."""
+    for het in (1.0, 0.3):
+        Xp, yp, mk = _problem(het=het)
+        smin, gk, ok = sigma.check_lemma4(Xp, mk, gamma=1.0, iters=300)
+        assert bool(ok), (float(smin), float(gk))
+        assert float(smin) >= 1.0 - 5e-2     # sigma'_min in [1, K]
+
+
+def test_sigma_prime_min_matches_dense_eig():
+    """Generalized power iteration vs scipy generalized eigensolver."""
+    Xp, yp, mk = _problem(n=96, d=16, K=3)
+    K, nk, d = Xp.shape
+    Xm = np.asarray(Xp * mk[..., None]).astype(np.float64)
+    A = Xm.reshape(K * nk, d).T                    # d x n
+    G = A.T @ A
+    B = scipy.linalg.block_diag(*[Xm[k] @ Xm[k].T for k in range(K)])
+    B += 1e-8 * np.eye(K * nk)
+    w = scipy.linalg.eigh(G, B, eigvals_only=True)
+    ref = float(np.max(w))
+    est = float(sigma.sigma_prime_min(Xp, mk, gamma=1.0, iters=2000))
+    assert abs(est - ref) / ref < 0.15, (est, ref)
+
+
+def test_heterogeneous_partition_lowers_sigma_prime_min():
+    """Correlated-on-worker data (low heterogeneity) -> smaller sigma'_min:
+    the practically-best sigma' < K regime of paper Figure 3."""
+    X1, _, m1 = _problem(seed=2, het=1.0)
+    X2, _, m2 = _problem(seed=2, het=0.0)
+    s1 = float(sigma.sigma_prime_min(X1, m1, iters=300))
+    s2 = float(sigma.sigma_prime_min(X2, m2, iters=300))
+    assert s2 <= s1 + 0.25
