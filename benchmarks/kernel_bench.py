@@ -2,10 +2,14 @@
 (interpret mode on CPU -- correctness/structure, not TPU timing) plus the
 VMEM working-set analysis that substitutes for a hardware profile.
 
-Reported: us per coordinate step (jnp path, jitted, CPU) and the kernel's
-per-block VMEM footprint vs the 16 MiB budget at production shapes."""
+Reported: us per coordinate step (jnp path, jitted, CPU), the kernel's
+per-block VMEM footprint vs the 16 MiB budget at production shapes, and the
+dense-vs-sparse HBM roofline at the paper's densities (bytes one SDCA pass
+must stream per layout: 4 bytes/element dense vs 8 bytes/stored-entry
+padded-ELL, i.e. a 0.5/density traffic cut)."""
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
@@ -13,8 +17,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.losses import get_loss
-from repro.core.solvers import local_sdca
-from repro.kernels.ops import local_sdca_block
+from repro.core.solvers import local_sdca, local_sdca_sparse
+from repro.kernels.ops import local_sdca_block, sparse_local_sdca_block
 
 from .common import save
 
@@ -47,6 +51,70 @@ def vmem_analysis(nk=16384, d=16384, block_rows=128):
     return dict(x_tile_mb=tile / 2**20, u_kb=u / 1024,
                 dalpha_kb=dalpha / 1024, total_mb=total / 2**20,
                 fits_16mb=total < 16 * 2**20)
+
+
+def sparse_roofline(densities=(0.003, 0.01, 0.05, 0.1), d=4096, nk=1024,
+                    quick=True):
+    """Dense vs padded-ELL bytes streamed per full SDCA pass over a shard,
+    plus measured us/step of the jnp sparse solver at one paper density.
+
+    One pass must re-stream the whole shard (SDCA is HBM-bound): dense moves
+    nk*d*4 bytes, ELL moves nk*r_max*(4+4) bytes (int32 col + f32 val), so
+    the cut is 0.5/density -- >= 5x everywhere at density <= 0.1."""
+    from repro.data import sparse as sp
+
+    rows = []
+    for rho in densities:
+        r_max = max(1, int(rho * d))           # exact-density rows
+        dense_b = nk * d * 4
+        ell_b = nk * r_max * 8
+        rows.append(dict(density=rho, r_max=r_max, dense_bytes=dense_b,
+                         ell_bytes=ell_b, cut=dense_b / ell_b))
+        print(f"kernel,sparse_roofline,density={rho},bytes_cut="
+              f"{dense_b / ell_b:.1f}x")
+
+    # measured: jnp sparse solver vs dense solver, same shard, H steps
+    rho = 0.01
+    H = 512 if quick else 4096
+    csr, y = sp.make_sparse_classification(nk, d, density=rho, seed=0)
+    sh, yp, mk = sp.partition_sparse(csr, y, 1, seed=0)
+    shard = jax.tree.map(lambda a: a[0], sh)
+    Xd = sp.densify(sh)[0]
+    loss = get_loss("hinge")
+    w = jnp.zeros(d)
+    a0 = jnp.zeros(yp.shape[1])
+
+    def timed(fn):
+        fn(jax.random.PRNGKey(0)).du.block_until_ready()
+        t0 = time.time()
+        for i in range(3):
+            fn(jax.random.PRNGKey(i)).du.block_until_ready()
+        return (time.time() - t0) / 3 / H * 1e6
+
+    f_sp = jax.jit(lambda r, s: local_sdca_sparse(
+        s, yp[0], a0, mk[0], w, r, loss, 1e-4, float(nk), 4.0, H))
+    f_de = jax.jit(lambda r, X: local_sdca(
+        X, yp[0], a0, mk[0], w, r, loss, 1e-4, float(nk), 4.0, H))
+    us_sp = timed(lambda r: f_sp(r, shard))
+    us_de = timed(lambda r: f_de(r, Xd))
+    print(f"kernel,sparse_jnp_us_per_step,{us_sp:.2f},dense={us_de:.2f},"
+          f"speedup={us_de / us_sp:.1f}x")
+
+    # interpret-mode sparse kernel roundtrip (interface under jit)
+    t0 = time.time()
+    res = sparse_local_sdca_block(
+        jax.tree.map(lambda a: a[:256], shard), yp[0][:256], a0[:256],
+        mk[0][:256], w, jax.random.PRNGKey(0), loss, 1e-4, 256.0, 4.0, 256,
+        interpret=True)
+    res.du.block_until_ready()
+    print(f"kernel,sparse_pallas_interpret_roundtrip_s,{time.time() - t0:.2f}")
+
+    from repro.kernels.sparse_sdca import vmem_budget as sparse_vmem
+    svm = sparse_vmem(nk=16384, d=47236, r_max=128)   # rcv1-scale shard
+    print(f"kernel,sparse_vmem_total_mb,{svm['total_mb']:.2f},"
+          f"fits={svm['fits_16mb']},dense_tile_mb={svm['dense_tile_mb']:.1f}")
+    return dict(roofline=rows, sparse_us_per_step=us_sp,
+                dense_us_per_step=us_de, vmem=svm)
 
 
 def run(quick: bool = True):
@@ -87,13 +155,22 @@ def run(quick: bool = True):
     print(f"kernel,ssm_scan_err,{err:.2e}")
     print(f"kernel,ssm_scan_vmem_mb,{svm['total_mb']:.2f},fits={svm['fits_16mb']}")
     print(f"kernel,ssm_scan_hbm_cut,{jnp_path/fused:.1f}x")
+    sparse = sparse_roofline(quick=quick)
     save("kernel_bench", dict(jnp_us_per_step=us, vmem=vm, ssm_err=err,
-                              ssm_vmem=svm, ssm_hbm_cut=jnp_path / fused))
+                              ssm_vmem=svm, ssm_hbm_cut=jnp_path / fused,
+                              sparse=sparse))
     return vm
 
 
 def main():
-    run(quick=True)
+    ap = argparse.ArgumentParser()
+    mode = ap.add_mutually_exclusive_group()
+    mode.add_argument("--quick", action="store_true",
+                      help="CI smoke mode: fewer inner steps (the default)")
+    mode.add_argument("--full", action="store_true",
+                      help="full step counts for stable timings")
+    args = ap.parse_args()
+    run(quick=not args.full)
 
 
 if __name__ == "__main__":

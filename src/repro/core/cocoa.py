@@ -30,6 +30,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.data.sparse import SparseShards
+
 from . import duality
 from .losses import Loss, get_loss
 from .solvers import SOLVERS, SDCAResult
@@ -85,7 +87,35 @@ def _solver_fn(name: str):
     if name == "sdca_kernel":
         from repro.kernels import ops as kernel_ops
         return kernel_ops.local_sdca_block
+    if name == "sdca_sparse_kernel":
+        from repro.kernels import ops as kernel_ops
+        return kernel_ops.sparse_local_sdca_block
     return SOLVERS[name]
+
+
+# dense solver name -> its ELL-shard counterpart (used when round inputs are
+# SparseShards; solvers without a sparse path raise below)
+_SPARSE_SOLVERS = {
+    "sdca": "sdca_sparse",
+    "sdca_sparse": "sdca_sparse",
+    "sdca_kernel": "sdca_sparse_kernel",
+    "sdca_sparse_kernel": "sdca_sparse_kernel",
+}
+
+
+def _resolve_solver(name: str, sparse: bool) -> str:
+    if not sparse:
+        if name in ("sdca_sparse", "sdca_sparse_kernel"):
+            raise ValueError(
+                f"solver {name!r} needs SparseShards inputs; dense arrays "
+                f"take 'sdca' / 'sdca_kernel' (mapped automatically when the "
+                f"data is sparse)")
+        return name
+    if name not in _SPARSE_SOLVERS:
+        raise ValueError(
+            f"solver {name!r} has no sparse path; pick one of "
+            f"{sorted(set(_SPARSE_SOLVERS))} for SparseShards inputs")
+    return _SPARSE_SOLVERS[name]
 
 
 def _worker_body(X_k, y_k, alpha_k, mask_k, w, rng, *, loss: Loss, lam: float,
@@ -95,7 +125,7 @@ def _worker_body(X_k, y_k, alpha_k, mask_k, w, rng, *, loss: Loss, lam: float,
     if solver == "sdca_deadline":
         return fn(X_k, y_k, alpha_k, mask_k, w, rng, loss, lam, n, sigma_p, H,
                   budget if budget is not None else jnp.asarray(H))
-    if solver in ("sdca", "sdca_importance"):
+    if solver in ("sdca", "sdca_importance", "sdca_sparse"):
         return fn(X_k, y_k, alpha_k, mask_k, w, rng, loss, lam, n, sigma_p, H,
                   sqnorms=sqnorms)
     return fn(X_k, y_k, alpha_k, mask_k, w, rng, loss, lam, n, sigma_p, H)
@@ -107,16 +137,24 @@ def _worker_body(X_k, y_k, alpha_k, mask_k, w, rng, *, loss: Loss, lam: float,
 
 def make_round_vmap(cfg: CoCoAConfig, K: int,
                     n_total=None) -> Callable[..., CoCoAState]:
+    """Simulated K-worker round. `X` may be a dense (K, nk, d) array or a
+    SparseShards pytree -- vmap maps over the leading K axis of either, and
+    cfg.solver is transparently mapped to its ELL counterpart for sparse
+    inputs (sdca -> sdca_sparse, sdca_kernel -> sdca_sparse_kernel)."""
     loss = get_loss(cfg.loss)
     sigma_p = cfg.resolved_sigma(K)
 
     def round_fn(state: CoCoAState, X, y, mask, budget=None) -> CoCoAState:
         n = duality.effective_n(mask) if n_total is None else n_total
         rng, sub = jax.random.split(state.rng)
-        rngs = jax.random.split(sub, K)
+        # fold_in (not split) so worker k's stream is identical to the
+        # shard_map backend's fold_in(sub, axis_index) -- backend parity is
+        # exact, not statistical (tests/test_sharded.py)
+        rngs = jax.vmap(lambda i: jax.random.fold_in(sub, i))(jnp.arange(K))
+        solver = _resolve_solver(cfg.solver, isinstance(X, SparseShards))
         body = functools.partial(
             _worker_body, loss=loss, lam=cfg.lam, n=n, sigma_p=sigma_p,
-            H=cfg.H, solver=cfg.solver)
+            H=cfg.H, solver=solver)
         if budget is None:
             res = jax.vmap(lambda Xk, yk, ak, mk, r: body(Xk, yk, ak, mk, state.w, r)
                            )(X, y, alpha_split(state.alpha, K), mask, rngs)
@@ -197,6 +235,10 @@ def make_round_sharded(cfg: CoCoAConfig, mesh) -> Callable[..., CoCoAState]:
 
     def round_fn(state: CoCoAState, X, y, mask, n=None,
                  sqnorms=None) -> CoCoAState:
+        if isinstance(X, SparseShards):
+            raise NotImplementedError(
+                "SparseShards inputs currently run on the vmap backend; "
+                "shard_map sparse execution is a ROADMAP item")
         n_ = duality.effective_n(mask) if n is None else n
         if sqnorms is None:
             sqnorms = jnp.sum(X * X, axis=-1) * mask
@@ -215,7 +257,7 @@ def make_round_sharded(cfg: CoCoAConfig, mesh) -> Callable[..., CoCoAState]:
 
 class SolveResult(NamedTuple):
     state: CoCoAState
-    history: dict            # lists: round, gap, primal, dual, comm_vectors
+    history: dict   # lists: round, gap, primal, dual, comm_vectors, comm_floats
 
 
 def solve(cfg: CoCoAConfig, X, y, mask, *, rounds: int, eps_gap: float = 0.0,
@@ -224,13 +266,23 @@ def solve(cfg: CoCoAConfig, X, y, mask, *, rounds: int, eps_gap: float = 0.0,
           state: Optional[CoCoAState] = None) -> SolveResult:
     """Run CoCoA+/CoCoA until `rounds` or duality gap <= eps_gap.
 
-    `on_round(t, state, gap)` is the checkpoint/telemetry hook.
-    `budget_fn(t) -> (K,) int array` enables deadline-budgeted solving.
+    `X` is a dense (K, nk, d) array or a data.sparse.SparseShards (vmap
+    backend only). `on_round(t, state, gap)` is the checkpoint/telemetry
+    hook. `budget_fn(t) -> (K,) int array` enables deadline-budgeted solving.
     """
-    K, nk, d = X.shape
+    if isinstance(X, SparseShards):
+        if cfg.backend != "vmap":
+            raise NotImplementedError(
+                "SparseShards inputs currently run on the vmap backend")
+        K, nk = X.cols.shape[:2]
+        d = X.d
+        dtype = X.vals.dtype
+    else:
+        K, nk, d = X.shape
+        dtype = X.dtype
     loss = get_loss(cfg.loss)
     if state is None:
-        state = init_state(d, K, nk, seed, X.dtype)
+        state = init_state(d, K, nk, seed, dtype)
 
     if cfg.backend == "shard_map":
         assert mesh is not None, "shard_map backend needs a mesh"
@@ -241,7 +293,17 @@ def solve(cfg: CoCoAConfig, X, y, mask, *, rounds: int, eps_gap: float = 0.0,
     gap_fn = jax.jit(functools.partial(
         duality.gap_decomposed, loss=loss, lam=cfg.lam))
 
-    hist = {"round": [], "gap": [], "primal": [], "dual": [], "comm_vectors": []}
+    # per-round communication: each worker reduces one w-shard per round.
+    # Under a 2-D (data, model) mesh the feature axis is sharded, so each
+    # worker moves d / |model| floats, not d -- account in floats so Fig-2
+    # communication claims stay honest under tensor sharding.
+    d_local = d
+    if (cfg.model_axis is not None and mesh is not None
+            and cfg.model_axis in dict(getattr(mesh, "shape", {}))):
+        d_local = -(-d // mesh.shape[cfg.model_axis])
+
+    hist = {"round": [], "gap": [], "primal": [], "dual": [],
+            "comm_vectors": [], "comm_floats": []}
     gap = float("inf")
     for t in range(rounds):
         if cfg.backend == "shard_map":
@@ -260,7 +322,8 @@ def solve(cfg: CoCoAConfig, X, y, mask, *, rounds: int, eps_gap: float = 0.0,
             hist["gap"].append(gap)
             hist["primal"].append(float(p))
             hist["dual"].append(float(dval))
-            hist["comm_vectors"].append((t + 1) * K)   # one d-vector per worker-round
+            hist["comm_vectors"].append((t + 1) * K)   # one w-shard per worker-round
+            hist["comm_floats"].append((t + 1) * K * d_local)
             if on_round is not None:
                 on_round(t + 1, state, gap)
             if gap <= eps_gap:

@@ -5,6 +5,11 @@ stored partitioned as X with shape (K, n_k, d)  -- K workers, n_k rows each,
 row i = x_i^T. Labels y and duals alpha are (K, n_k). A `mask` (K, n_k) of
 {0,1} marks real rows (padding rows are all-zero and masked out of n).
 
+`X` may equivalently be a `repro.data.sparse.SparseShards` padded-ELL
+container; every objective then evaluates via the sparse matvec family
+(gather for A^T w, segment-sum scatter for A alpha) so gap certificates on
+sparse runs cost O(nnz), not O(n d).
+
 All objective functions take the *global effective n* so that padded
 partitions reproduce the unpadded math exactly.
 """
@@ -13,6 +18,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.data import sparse as sparse_data
+from repro.data.sparse import SparseShards
+
 from .losses import Loss
 
 
@@ -20,20 +28,29 @@ def effective_n(mask: jnp.ndarray) -> jnp.ndarray:
     return jnp.sum(mask)
 
 
-def w_of_alpha(X: jnp.ndarray, alpha: jnp.ndarray, lam: float, n) -> jnp.ndarray:
-    """w(alpha) = A alpha / (lambda n)  (eq. 3). X: (K, nk, d), alpha: (K, nk)."""
+def _Atw(X, w: jnp.ndarray) -> jnp.ndarray:
+    """Per-row predictions z = A^T w, shape (K, nk)."""
+    if isinstance(X, SparseShards):
+        return sparse_data.matvec(X, w)
+    return jnp.einsum("kid,d->ki", X, w)
+
+
+def w_of_alpha(X, alpha: jnp.ndarray, lam: float, n) -> jnp.ndarray:
+    """w(alpha) = A alpha / (lambda n)  (eq. 3). X: (K, nk, d) or shards."""
+    if isinstance(X, SparseShards):
+        return sparse_data.rmatvec(X, alpha) / (lam * n)
     return jnp.einsum("kid,ki->d", X, alpha) / (lam * n)
 
 
-def primal(w: jnp.ndarray, X: jnp.ndarray, y: jnp.ndarray, mask: jnp.ndarray,
+def primal(w: jnp.ndarray, X, y: jnp.ndarray, mask: jnp.ndarray,
            loss: Loss, lam: float) -> jnp.ndarray:
     n = effective_n(mask)
-    z = jnp.einsum("kid,d->ki", X, w)
+    z = _Atw(X, w)
     vals = loss.value(z, y) * mask
     return jnp.sum(vals) / n + 0.5 * lam * jnp.dot(w, w)
 
 
-def dual(alpha: jnp.ndarray, X: jnp.ndarray, y: jnp.ndarray, mask: jnp.ndarray,
+def dual(alpha: jnp.ndarray, X, y: jnp.ndarray, mask: jnp.ndarray,
          loss: Loss, lam: float) -> jnp.ndarray:
     n = effective_n(mask)
     v = w_of_alpha(X, alpha, lam, n)
@@ -41,7 +58,7 @@ def dual(alpha: jnp.ndarray, X: jnp.ndarray, y: jnp.ndarray, mask: jnp.ndarray,
     return -jnp.sum(conj) / n - 0.5 * lam * jnp.dot(v, v)
 
 
-def duality_gap(alpha: jnp.ndarray, X: jnp.ndarray, y: jnp.ndarray,
+def duality_gap(alpha: jnp.ndarray, X, y: jnp.ndarray,
                 mask: jnp.ndarray, loss: Loss, lam: float) -> jnp.ndarray:
     """G(alpha) = P(w(alpha)) - D(alpha)  (eq. 4). Non-negative by weak duality."""
     n = effective_n(mask)
@@ -58,7 +75,7 @@ def gap_decomposed(alpha, X, y, mask, loss, lam):
     return p, d, p - d
 
 
-def u_vector(w: jnp.ndarray, X: jnp.ndarray, y: jnp.ndarray, loss: Loss) -> jnp.ndarray:
+def u_vector(w: jnp.ndarray, X, y: jnp.ndarray, loss: Loss) -> jnp.ndarray:
     """u with -u_i in d l_i(x_i^T w)  (eq. 17) -- used in Lemma-5 style tests."""
-    z = jnp.einsum("kid,d->ki", X, w)
+    z = _Atw(X, w)
     return loss.u_subgrad(z, y)

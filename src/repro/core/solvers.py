@@ -35,6 +35,26 @@ class SDCAResult(NamedTuple):
     steps: jnp.ndarray      # number of inner steps actually executed
 
 
+def _install_barrier_batching_rule():
+    """optimization_barrier has no vmap batching rule in this jax version,
+    which breaks every vmap-backend round (the K-worker simulation). The
+    barrier is semantically the identity, so batching it is just binding on
+    the batched operands and passing the batch dims through."""
+    from jax.interpreters import batching
+
+    prim = getattr(jax.lax, "optimization_barrier_p", None)
+    if prim is None or prim in batching.primitive_batchers:
+        return
+
+    def _rule(args, dims):
+        return prim.bind(*args), dims
+
+    batching.primitive_batchers[prim] = _rule
+
+
+_install_barrier_batching_rule()
+
+
 def local_sdca(X_k: jnp.ndarray, y_k: jnp.ndarray, alpha_k: jnp.ndarray,
                mask_k: jnp.ndarray, w: jnp.ndarray, rng: jax.Array,
                loss: Loss, lam: float, n, sigma_p: float, H: int,
@@ -171,9 +191,48 @@ def local_sdca_importance(X_k, y_k, alpha_k, mask_k, w, rng, loss, lam, n,
     return SDCAResult(dalpha, u - w, jnp.asarray(H))
 
 
+def local_sdca_sparse(shard, y_k, alpha_k, mask_k, w, rng, loss: Loss,
+                      lam: float, n, sigma_p: float, H: int,
+                      sqnorms=None) -> SDCAResult:
+    """LocalSDCA over a padded-ELL shard (repro.data.sparse.SparseShards,
+    per-worker: cols/vals (nk, r_max)). Per step one r_max-gather dot and
+    one r_max scatter-axpy (a segment-sum over the row's columns) instead
+    of the dense d-dot/d-axpy -- O(nnz) work at the paper's densities.
+
+    This is the portable jnp fallback for the Pallas kernel in
+    repro.kernels.sparse_sdca; padding slots (col 0, val 0) are exact
+    arithmetic no-ops, so no per-row nnz bookkeeping is needed here."""
+    cols, vals = shard.cols, shard.vals
+    nk = cols.shape[0]
+    if sqnorms is None:
+        sqnorms = jnp.sum(vals * vals, axis=-1) * mask_k
+    scale = sigma_p / (lam * n)
+    idxs = jax.random.randint(rng, (H,), 0, nk)
+
+    def body(h, carry):
+        dalpha, u = carry
+        i = idxs[h]
+        # same barrier as the dense solver: ci/vi each feed two consumers
+        # (gather-dot + scatter-axpy); without it XLA duplicates the row
+        # gather per consumer (2x ELL-row traffic)
+        ci, vi = jax.lax.optimization_barrier((cols[i], vals[i]))
+        z = jnp.dot(vi, u[ci])
+        abar = alpha_k[i] + dalpha[i]
+        q = scale * sqnorms[i]
+        delta = loss.cd_update(abar, z, q, y_k[i]) * mask_k[i]
+        dalpha = dalpha.at[i].add(delta)
+        u = u.at[ci].add((scale * delta) * vi)
+        return dalpha, u
+
+    dalpha0 = jnp.zeros(nk, vals.dtype)
+    dalpha, u = jax.lax.fori_loop(0, H, body, (dalpha0, w.astype(vals.dtype)))
+    return SDCAResult(dalpha, u - w, jnp.asarray(H))
+
+
 SOLVERS = {
     "sdca": local_sdca,
     "sdca_deadline": local_sdca_deadline,
     "sdca_importance": local_sdca_importance,
+    "sdca_sparse": local_sdca_sparse,
     "gd": local_gd,
 }

@@ -1,0 +1,276 @@
+"""Sparse data subsystem: CSR on the host, padded-ELL on the device.
+
+The paper's headline datasets (rcv1, news20, url, webspam) have densities
+0.0003-0.16, so storing them dense moves 10-100x more bytes per SDCA step
+than necessary. This module provides the sparse pipeline end to end:
+
+  * `CSRMatrix` -- a scipy-free host-side CSR triple (data, indices, indptr)
+    produced by `load_libsvm` (LIBSVM text format) or the synthetic
+    generators (`make_sparse_classification`).
+  * `csr_to_ell` / `ell_to_csr` -- conversion to/from the padded-ELL layout
+    `(n, r_max)` of (col_idx, value) pairs. Padding entries are (col 0,
+    val 0.0), which makes every gather/scatter an exact arithmetic no-op:
+    gather contributes u[0] * 0, scatter adds 0 to u[0].
+  * `SparseShards` -- the device container mirroring the dense `(K, nk, d)`
+    partition contract: `cols`/`vals` are `(K, nk, r_max)`, `nnz` holds the
+    true per-row entry count, `d` is static metadata. Registered as a JAX
+    pytree so it flows through jit / vmap unchanged (vmap over the leading
+    K axis yields per-worker shards).
+  * `partition_sparse` -- worker partitioner with the same shuffle, padding
+    and mask semantics as `data.synthetic.partition` (shared `split_order`).
+  * `matvec` / `rmatvec` / `row_sqnorms` / `densify` -- the sparse matvec
+    family used by `core.duality` for gap certificates and by tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import pathlib
+from typing import Iterable, NamedTuple, Optional, Tuple, Union
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .synthetic import split_order
+
+
+# ----------------------------------------------------------------------------
+# Host-side CSR + LIBSVM parser
+# ----------------------------------------------------------------------------
+
+class CSRMatrix(NamedTuple):
+    """Compressed sparse rows: row i owns indices[indptr[i]:indptr[i+1]]."""
+    data: np.ndarray       # (nnz,) float32
+    indices: np.ndarray    # (nnz,) int32, column ids, sorted within a row
+    indptr: np.ndarray     # (n + 1,) int64
+    shape: Tuple[int, int]
+
+    @property
+    def nnz(self) -> int:
+        return int(self.indptr[-1])
+
+    @property
+    def density(self) -> float:
+        n, d = self.shape
+        return self.nnz / max(n * d, 1)
+
+    def row_nnz(self) -> np.ndarray:
+        return np.diff(self.indptr).astype(np.int32)
+
+    def toarray(self) -> np.ndarray:
+        n, d = self.shape
+        out = np.zeros((n, d), np.float32)
+        rows = np.repeat(np.arange(n), self.row_nnz())
+        # accumulate, don't assign: duplicate (row, col) entries must agree
+        # with the device path (densify/matvec sum them)
+        np.add.at(out, (rows, self.indices), self.data)
+        return out
+
+
+def load_libsvm(source: Union[str, pathlib.Path, Iterable[str]], *,
+                n_features: Optional[int] = None,
+                zero_based: bool = False) -> Tuple[CSRMatrix, np.ndarray]:
+    """Parse LIBSVM-format text: ``<label> <idx>:<val> <idx>:<val> ...``.
+
+    `source` is a path or an iterable of lines. Indices are 1-based by
+    default (the LIBSVM convention); '#' starts a comment. Columns are
+    sorted within each row. Returns (CSRMatrix, labels float32).
+    """
+    if isinstance(source, (str, pathlib.Path)):
+        lines: Iterable[str] = pathlib.Path(source).read_text().splitlines()
+    else:
+        lines = source
+    off = 0 if zero_based else 1
+    labels, data, indices, indptr = [], [], [], [0]
+    for line in lines:
+        line = line.split("#", 1)[0].strip()
+        if not line:
+            continue
+        parts = line.split()
+        labels.append(float(parts[0]))
+        row = []
+        for tok in parts[1:]:
+            i, v = tok.split(":")
+            idx = int(i) - off
+            if idx < 0:
+                raise ValueError(f"negative feature index in {tok!r} "
+                                 f"(zero_based={zero_based})")
+            row.append((idx, float(v)))
+        row.sort()
+        for (a, _), (b, _) in zip(row, row[1:]):
+            if a == b:
+                raise ValueError(f"duplicate feature index {a + off} on "
+                                 f"line {len(labels)}")
+        indices.extend(i for i, _ in row)
+        data.extend(v for _, v in row)
+        indptr.append(len(indices))
+    top = int(max(indices)) + 1 if indices else 0
+    d = n_features if n_features is not None else top
+    if top > d:
+        # reject here: the jnp gather path would silently clamp the index
+        raise ValueError(f"feature index {top - 1} out of range for "
+                         f"n_features={d}")
+    csr = CSRMatrix(np.asarray(data, np.float32),
+                    np.asarray(indices, np.int32),
+                    np.asarray(indptr, np.int64),
+                    (len(labels), d))
+    return csr, np.asarray(labels, np.float32)
+
+
+# ----------------------------------------------------------------------------
+# CSR <-> padded-ELL
+# ----------------------------------------------------------------------------
+
+def csr_to_ell(csr: CSRMatrix, r_max: Optional[int] = None
+               ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """(cols (n, r_max) int32, vals (n, r_max) f32, nnz (n,) int32).
+
+    Padding entries are (0, 0.0) -- exact no-ops for gather/scatter."""
+    nnz = csr.row_nnz()
+    need = int(nnz.max()) if nnz.size else 0
+    r_max = need if r_max is None else r_max
+    if r_max < need:
+        raise ValueError(f"r_max={r_max} < max row nnz {need}")
+    n = csr.shape[0]
+    slot = np.arange(max(r_max, 1))[None, :] < nnz[:, None]   # (n, r_max)
+    cols = np.zeros((n, max(r_max, 1)), np.int32)
+    vals = np.zeros((n, max(r_max, 1)), np.float32)
+    cols[slot] = csr.indices
+    vals[slot] = csr.data
+    return cols, vals, nnz
+
+
+def ell_to_csr(cols: np.ndarray, vals: np.ndarray, nnz: np.ndarray,
+               d: int) -> CSRMatrix:
+    """Inverse of `csr_to_ell` (drops padding entries)."""
+    cols = np.asarray(cols)
+    vals = np.asarray(vals)
+    nnz = np.asarray(nnz).astype(np.int64)
+    n, r_max = cols.shape
+    slot = np.arange(max(r_max, 1))[None, :] < nnz[:, None]
+    indptr = np.concatenate([[0], np.cumsum(nnz)])
+    return CSRMatrix(vals[slot].astype(np.float32),
+                     cols[slot].astype(np.int32),
+                     indptr, (n, d))
+
+
+# ----------------------------------------------------------------------------
+# Device container
+# ----------------------------------------------------------------------------
+
+@functools.partial(jax.tree_util.register_dataclass,
+                   data_fields=("cols", "vals", "nnz"), meta_fields=("d",))
+@dataclasses.dataclass(frozen=True)
+class SparseShards:
+    """Padded-ELL worker shards: the sparse analogue of the dense (K, nk, d)
+    partition. Leaves carry a leading K axis (per-worker shards under vmap
+    drop it); `d` is static so shapes stay available under jit."""
+    cols: jnp.ndarray    # (..., nk, r_max) int32, padding -> 0
+    vals: jnp.ndarray    # (..., nk, r_max) float32, padding -> 0.0
+    nnz: jnp.ndarray     # (..., nk) int32 true entries per row
+    d: int
+
+    @property
+    def r_max(self) -> int:
+        return self.cols.shape[-1]
+
+    @property
+    def density(self) -> float:
+        rows = int(np.prod(self.nnz.shape))
+        return float(jnp.sum(self.nnz)) / max(rows * self.d, 1)
+
+
+def matvec(sh: SparseShards, w: jnp.ndarray) -> jnp.ndarray:
+    """z = A^T w per row:  z_i = sum_r vals[i, r] * w[cols[i, r]]."""
+    return jnp.sum(sh.vals * w[sh.cols], axis=-1)
+
+
+def rmatvec(sh: SparseShards, coef: jnp.ndarray) -> jnp.ndarray:
+    """A coef = sum_i coef_i x_i as a (d,) scatter-add (segment sum)."""
+    contrib = sh.vals * coef[..., None]
+    return jnp.zeros(sh.d, contrib.dtype).at[sh.cols.reshape(-1)].add(
+        contrib.reshape(-1))
+
+
+def row_sqnorms(sh: SparseShards) -> jnp.ndarray:
+    return jnp.sum(sh.vals * sh.vals, axis=-1)
+
+
+def densify(sh: SparseShards) -> jnp.ndarray:
+    """Materialize (..., nk, d) dense rows (tests / densified baselines)."""
+    cols = np.asarray(sh.cols)
+    vals = np.asarray(sh.vals)
+    lead = cols.shape[:-1]
+    rows = int(np.prod(lead)) if lead else 1
+    flat = np.zeros((rows, sh.d), np.float32)
+    ridx = np.repeat(np.arange(rows), cols.shape[-1])
+    np.add.at(flat, (ridx, cols.reshape(-1)), vals.reshape(-1))
+    return jnp.asarray(flat.reshape(*lead, sh.d))
+
+
+# ----------------------------------------------------------------------------
+# Synthetic sparse generators (true density, unlike the dense zeroed stand-ins)
+# ----------------------------------------------------------------------------
+
+def make_sparse_classification(n: int, d: int, *, density: float,
+                               seed: int = 0, noise: float = 0.1
+                               ) -> Tuple[CSRMatrix, np.ndarray]:
+    """Binary labels in {-1, +1} on rows with ~density*d nonzeros, ||x|| <= 1.
+
+    Row nnz is Poisson around density*d (clipped to [1, d]) so r_max stays a
+    small multiple of the mean -- the padded-ELL waste is bounded."""
+    rng = np.random.default_rng(seed)
+    base = max(1, int(round(density * d)))
+    nnz = np.clip(rng.poisson(base, n), 1, d).astype(np.int64)
+    indptr = np.concatenate([[0], np.cumsum(nnz)])
+    indices = np.empty(int(indptr[-1]), np.int32)
+    data = rng.standard_normal(int(indptr[-1])).astype(np.float32)
+    for i in range(n):
+        lo, hi = indptr[i], indptr[i + 1]
+        indices[lo:hi] = np.sort(rng.choice(d, hi - lo, replace=False))
+    # normalize rows (paper Remark 7: ||x_i|| <= 1)
+    norms = np.sqrt(np.add.reduceat(data * data, indptr[:-1]))
+    data /= np.maximum(np.repeat(norms, nnz), 1e-12)
+    csr = CSRMatrix(data, indices, indptr, (n, d))
+    w_star = rng.standard_normal(d).astype(np.float32)
+    margin = np.add.reduceat(data * w_star[indices], indptr[:-1])
+    flip = rng.random(n) < noise
+    yv = np.sign(margin) * np.where(flip, -1.0, 1.0)
+    yv[yv == 0] = 1.0
+    return csr, yv.astype(np.float32)
+
+
+# ----------------------------------------------------------------------------
+# Worker partitioner (mirrors data.synthetic.partition: shuffle, pad, mask)
+# ----------------------------------------------------------------------------
+
+def partition_sparse(csr: CSRMatrix, y: np.ndarray, K: int, *, seed: int = 0,
+                     heterogeneity: float = 1.0,
+                     r_max: Optional[int] = None
+                     ) -> Tuple[SparseShards, jnp.ndarray, jnp.ndarray]:
+    """Shuffle + split CSR rows into (SparseShards, y (K, nk), mask (K, nk)).
+
+    Same contract as the dense `partition` (identical rng stream, padding
+    rows are all-zero with mask 0); heterogeneity < 1 concentrates
+    correlated rows on the same worker via the shared `split_order`."""
+    n, d = csr.shape
+    cols_e, vals_e, nnz_e = csr_to_ell(csr, r_max)
+    rng = np.random.default_rng(seed)
+    order = split_order(
+        n, rng, heterogeneity,
+        lambda r: np.sum(
+            vals_e * r.standard_normal(d).astype(np.float32)[cols_e], axis=1))
+    nk = (n + K - 1) // K
+    pad = nk * K - n
+    rm = cols_e.shape[1]
+    colsp = np.concatenate([cols_e[order], np.zeros((pad, rm), np.int32)])
+    valsp = np.concatenate([vals_e[order], np.zeros((pad, rm), np.float32)])
+    nnzp = np.concatenate([nnz_e[order], np.zeros(pad, np.int32)])
+    yp = np.concatenate([np.asarray(y)[order],
+                         np.zeros(pad, np.asarray(y).dtype)])
+    mk = np.concatenate([np.ones(n, np.float32), np.zeros(pad, np.float32)])
+    shards = SparseShards(jnp.asarray(colsp.reshape(K, nk, rm)),
+                          jnp.asarray(valsp.reshape(K, nk, rm)),
+                          jnp.asarray(nnzp.reshape(K, nk)), d=d)
+    return shards, jnp.asarray(yp.reshape(K, nk)), jnp.asarray(mk.reshape(K, nk))

@@ -45,6 +45,27 @@ def make_regression(n: int, d: int, *, seed: int = 0, noise: float = 0.1):
     return X, yv.astype(np.float32)
 
 
+def split_order(n: int, rng: np.random.Generator, heterogeneity: float,
+                proj_of) -> np.ndarray:
+    """Row visit order shared by the dense and sparse partitioners.
+
+    `proj_of(rng) -> (n,)` projects every example onto a random direction;
+    it is only invoked when heterogeneity < 1 so the rng stream matches
+    between callers that do and don't use it.
+    """
+    order = rng.permutation(n)
+    if heterogeneity < 1.0:
+        proj = proj_of(rng)
+        sorted_idx = np.argsort(proj)
+        n_sorted = int((1.0 - heterogeneity) * n)
+        take = sorted_idx[:n_sorted]
+        # keep the permutation order for the unsorted fraction: setdiff1d
+        # returns sorted indices, which would silently undo the shuffle
+        rest = order[~np.isin(order, take)]
+        order = np.concatenate([take, rest])
+    return order
+
+
 def partition(X: np.ndarray, y: np.ndarray, K: int, *, seed: int = 0,
               heterogeneity: float = 1.0):
     """Shuffle + split into (K, nk, d) with zero-padding + mask.
@@ -55,14 +76,9 @@ def partition(X: np.ndarray, y: np.ndarray, K: int, *, seed: int = 0,
     """
     n, d = X.shape
     rng = np.random.default_rng(seed)
-    order = rng.permutation(n)
-    if heterogeneity < 1.0:
-        proj = X @ rng.standard_normal(d).astype(np.float32)
-        sorted_idx = np.argsort(proj)
-        n_sorted = int((1.0 - heterogeneity) * n)
-        take = sorted_idx[:n_sorted]
-        rest = np.setdiff1d(order, take, assume_unique=False)
-        order = np.concatenate([take, rest])
+    order = split_order(
+        n, rng, heterogeneity,
+        lambda r: X @ r.standard_normal(d).astype(np.float32))
     nk = (n + K - 1) // K
     pad = nk * K - n
     Xp = np.concatenate([X[order], np.zeros((pad, d), X.dtype)])
@@ -79,21 +95,36 @@ class DatasetSpec:
     n: int
     d: int
     kind: str = "classification"   # or "regression"
-    sparsity: float = 0.0
+    sparsity: float = 0.0          # dense format: fraction of zeroed entries
+    format: str = "dense"          # "dense" -> (n, d) array; "sparse" -> CSR
+    density: float = 0.0           # sparse format: true nnz / (n * d)
 
 
 # Offline stand-ins matched (scaled-down) to paper Table 2 aspect ratios.
+# The *_sparse specs carry the paper's true densities in CSR/ELL layout
+# (rcv1: 0.0016, news20: ~3e-4 scaled up to keep rows non-degenerate);
+# `load` returns (CSRMatrix, y) for them -- see repro.data.sparse.
 DATASETS = {
     "covtype_like": DatasetSpec("covtype_like", n=52_288, d=54),
     "rcv1_like":    DatasetSpec("rcv1_like", n=20_480, d=1024, sparsity=0.9),
     "epsilon_like": DatasetSpec("epsilon_like", n=16_384, d=512),
     "news_like":    DatasetSpec("news_like", n=8_192, d=2048, sparsity=0.95),
     "tiny":         DatasetSpec("tiny", n=1_024, d=64),
+    "rcv1_sparse":  DatasetSpec("rcv1_sparse", n=20_480, d=16_384,
+                                format="sparse", density=0.0016),
+    "news_sparse":  DatasetSpec("news_sparse", n=8_192, d=65_536,
+                                format="sparse", density=0.0005),
+    "tiny_sparse":  DatasetSpec("tiny_sparse", n=1_024, d=512,
+                                format="sparse", density=0.05),
 }
 
 
 def load(spec_name: str, *, seed: int = 0):
     spec = DATASETS[spec_name]
+    if spec.format == "sparse":
+        from . import sparse                      # local import: no cycle
+        return sparse.make_sparse_classification(
+            spec.n, spec.d, density=spec.density, seed=seed)
     if spec.kind == "classification":
         return make_classification(spec.n, spec.d, seed=seed,
                                    sparsity=spec.sparsity)

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from repro.core.losses import Loss
 from repro.core.solvers import SDCAResult
 from .local_sdca import local_sdca_pallas
+from .sparse_sdca import sparse_local_sdca
 
 
 def _pad_to(x, m, axis):
@@ -60,4 +61,45 @@ def local_sdca_block(X_k, y_k, alpha_k, mask_k, w, rng, loss: Loss,
     # un-permute dalpha; drop padding
     dalpha = jnp.zeros(nk, da_p.dtype).at[perm].set(da_p[:nk])
     return SDCAResult(dalpha.astype(X_k.dtype), du_p[:d].astype(w.dtype),
+                      jnp.asarray(n_passes * nk))
+
+
+def sparse_local_sdca_block(shard, y_k, alpha_k, mask_k, w, rng, loss: Loss,
+                            lam: float, n, sigma_p: float, H: int,
+                            *, block_rows: int = 128,
+                            interpret: bool | None = None) -> SDCAResult:
+    """Drop-in solver: block-shuffled SDCA over a padded-ELL shard.
+
+    `shard` is a per-worker SparseShards (cols/vals (nk, r_max)). Same
+    responsibilities as `local_sdca_block` -- fresh row permutation per call,
+    padding to the kernel's alignment contract (r_max and d to multiples of
+    128 on real TPUs; padding entries are exact no-ops), H -> whole passes.
+    """
+    cols, vals = shard.cols, shard.vals
+    nk, r_max = cols.shape
+    d = w.shape[0]
+    n_passes = max(1, int(round(H / max(nk, 1))))
+
+    perm = jax.random.permutation(rng, nk)
+    cp = jnp.take(cols, perm, axis=0)
+    vp = jnp.take(vals, perm, axis=0)
+    yp = jnp.take(y_k, perm)
+    ap = jnp.take(alpha_k, perm)
+    mp = jnp.take(mask_k, perm)
+
+    br = min(block_rows, max(8, nk))
+    lane = 128 if jax.default_backend() == "tpu" else 1
+    cp = _pad_to(_pad_to(cp, br, 0), lane, 1)
+    vp = _pad_to(_pad_to(vp, br, 0), lane, 1)
+    yp = _pad_to(yp, br, 0)
+    ap = _pad_to(ap, br, 0)
+    mp = _pad_to(mp, br, 0)
+    wp = _pad_to(w, lane, 0)
+
+    scale = sigma_p / (lam * jnp.asarray(n, jnp.float32))
+    da_p, du_p = sparse_local_sdca(cp, vp, yp, ap, mp, wp, scale, loss=loss,
+                                   n_passes=n_passes, block_rows=br,
+                                   interpret=interpret)
+    dalpha = jnp.zeros(nk, da_p.dtype).at[perm].set(da_p[:nk])
+    return SDCAResult(dalpha.astype(vals.dtype), du_p[:d].astype(w.dtype),
                       jnp.asarray(n_passes * nk))

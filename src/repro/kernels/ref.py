@@ -41,6 +41,58 @@ def local_sdca_ref(X, y, alpha, mask, w, scale, *, loss: Loss,
     return dalpha, u - u0
 
 
+def sparse_local_sdca_ref(cols, vals, y, alpha, mask, w, scale, *,
+                          loss: Loss, n_passes: int = 1):
+    """Reference for kernels.sparse_sdca.sparse_local_sdca.
+
+    Replays the kernel's exact op sequence -- scalar-indexed gather dot
+    (accumulated in row-slot order), scale * jnp.sum(v*v) row norm, and
+    sequential per-slot scatter-axpy -- so the comparison is bit-for-bit in
+    interpret mode, including rows with duplicate columns. Padding slots
+    (col 0, val 0.0) are exact no-ops, as in the kernel."""
+    nk, r_max = cols.shape
+    cols = cols.astype(jnp.int32)
+    vals = vals.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    alpha = alpha.astype(jnp.float32)
+    mask = mask.astype(jnp.float32)
+    scale = jnp.asarray(scale, jnp.float32)
+
+    def body(h, carry):
+        dalpha, u = carry
+        i = h % nk
+        ci = jax.lax.dynamic_index_in_dim(cols, i, axis=0, keepdims=False)
+        vi = jax.lax.dynamic_index_in_dim(vals, i, axis=0, keepdims=False)
+
+        def gather_dot(r, z):
+            c = jax.lax.dynamic_index_in_dim(ci, r, keepdims=False)
+            uv = jax.lax.dynamic_index_in_dim(u, c, keepdims=False)
+            vv = jax.lax.dynamic_index_in_dim(vi, r, keepdims=False)
+            return z + uv * vv
+
+        z = jax.lax.fori_loop(0, r_max, gather_dot, jnp.float32(0.0))
+        q = scale * jnp.sum(vi * vi)
+        abar = alpha[i] + dalpha[i]
+        delta = loss.cd_update(abar, z, q, y[i]) * mask[i]
+        dalpha = dalpha.at[i].add(delta)
+        coef = scale * delta
+
+        def scatter_axpy(r, u):
+            c = jax.lax.dynamic_index_in_dim(ci, r, keepdims=False)
+            uv = jax.lax.dynamic_index_in_dim(u, c, keepdims=False)
+            vv = jax.lax.dynamic_index_in_dim(vi, r, keepdims=False)
+            return jax.lax.dynamic_update_index_in_dim(
+                u, uv + coef * vv, c, axis=0)
+
+        u = jax.lax.fori_loop(0, r_max, scatter_axpy, u)
+        return dalpha, u
+
+    dalpha0 = jnp.zeros(nk, jnp.float32)
+    u0 = w.astype(jnp.float32)
+    dalpha, u = jax.lax.fori_loop(0, n_passes * nk, body, (dalpha0, u0))
+    return dalpha, u - u0
+
+
 def ssm_scan_ref(xin, dt, Bm, Cm, A, D):
     """Oracle for kernels.ssm_scan: direct sequential recurrence in f64-ish
     f32, same math as models/ssm.py's chunked associative scan."""

@@ -7,8 +7,14 @@ elastic re-partitioning).
         --gamma add --ckpt /tmp/cocoa_ckpt [--simulate-failure 20] \
         [--simulate-straggler 2] [--elastic-to 16@30]
 
+    # the paper's sparse regime: padded-ELL shards + sparse LocalSDCA
+    PYTHONPATH=src python -m repro.launch.cocoa_train \
+        --dataset rcv1_sparse --format sparse --workers 16 --rounds 40
+
 On a real TPU mesh pass --backend shard_map (workers = data-axis shards);
 the default vmap backend simulates any K on one device with identical math.
+--format auto picks the layout from the dataset spec; sparse runs execute
+on the vmap backend with the sdca_sparse / sdca_sparse_kernel solvers.
 """
 from __future__ import annotations
 
@@ -23,7 +29,8 @@ from repro.checkpoint import CheckpointManager
 from repro.core import CoCoAConfig, duality, solve
 from repro.core.cocoa import CoCoAState, init_state
 from repro.core.losses import get_loss
-from repro.data import load, partition
+from repro.data import DATASETS, load, partition
+from repro.data.sparse import SparseShards, partition_sparse
 from repro.runtime import elastic, failures, straggler
 
 
@@ -38,8 +45,13 @@ def main():
     ap.add_argument("--eps", type=float, default=1e-3)
     ap.add_argument("--gamma", choices=["add", "avg"], default="add")
     ap.add_argument("--solver", default="sdca",
-                    choices=["sdca", "sdca_kernel", "gd", "sdca_deadline"])
+                    choices=["sdca", "sdca_kernel", "sdca_sparse",
+                             "sdca_sparse_kernel", "gd", "sdca_deadline"])
     ap.add_argument("--backend", default="vmap", choices=["vmap", "shard_map"])
+    ap.add_argument("--format", default="auto",
+                    choices=["auto", "dense", "sparse"],
+                    help="data layout; auto follows the dataset spec "
+                         "(sparse -> padded-ELL shards + sparse solvers)")
     ap.add_argument("--ckpt", default="")
     ap.add_argument("--ckpt-every", type=int, default=10)
     ap.add_argument("--simulate-failure", type=int, default=0,
@@ -50,11 +62,25 @@ def main():
                     help="'K@round': re-partition to K workers at round")
     args = ap.parse_args()
 
-    X, y = load(args.dataset)
+    spec = DATASETS[args.dataset]
+    fmt = spec.format if args.format == "auto" else args.format
     K = args.workers
-    Xp, yp, mk = partition(X, y, K, seed=0)
-    mk0 = mk
-    mk_arr = {"X": Xp, "y": yp}
+    if fmt == "sparse":
+        if spec.format != "sparse":
+            raise SystemExit(f"--format sparse needs a sparse dataset spec; "
+                             f"{args.dataset!r} is {spec.format}")
+        if args.backend != "vmap":
+            raise SystemExit("sparse runs currently use --backend vmap")
+        csr, y = load(args.dataset)
+        Xp, yp, mk = partition_sparse(csr, y, K, seed=0)
+        print(f"sparse shards: nnz/row r_max={Xp.r_max} "
+              f"density={csr.density:.4g} d={Xp.d}")
+    else:
+        X, y = load(args.dataset)
+        if spec.format == "sparse":
+            # --format dense on a sparse spec: densified baseline run
+            X = X.toarray()
+        Xp, yp, mk = partition(X, y, K, seed=0)
 
     mk_cfg = dict(loss=args.loss, lam=args.lam, H=args.H, solver=args.solver,
                   backend=args.backend)
@@ -64,8 +90,14 @@ def main():
     if args.backend == "shard_map":
         mesh = jax.make_mesh((K,), ("data",))
 
+    def dims(Xp):
+        if isinstance(Xp, SparseShards):
+            return Xp.d, Xp.cols.shape[1]
+        return Xp.shape[2], Xp.shape[1]
+
     mgr = CheckpointManager(pathlib.Path(args.ckpt), keep=2) if args.ckpt else None
-    state = init_state(Xp.shape[2], K, Xp.shape[1])
+    d_dim, nk_dim = dims(Xp)
+    state = init_state(d_dim, K, nk_dim)
     start = 0
     if mgr and mgr.latest_step():
         loaded, man = mgr.restore(state._asdict())
@@ -112,13 +144,23 @@ def main():
             args.simulate_failure = 0
         if done == el_round and el_K:
             print(f"elastic re-partition {K} -> {el_K} workers")
-            arrs = {"X": Xp, "y": yp, "alpha": state.alpha}
-            new, mk = elastic.repartition(arrs, mk, el_K)
-            Xp, yp = new["X"], new["y"]
+            if isinstance(Xp, SparseShards):
+                # every leaf shares the (K, nk) leading layout, so the ELL
+                # shards re-split exactly like dense rows (alpha travels too)
+                arrs = {"cols": Xp.cols, "vals": Xp.vals, "nnz": Xp.nnz,
+                        "y": yp, "alpha": state.alpha}
+                new, mk = elastic.repartition(arrs, mk, el_K)
+                Xp = SparseShards(new["cols"], new["vals"], new["nnz"], d=Xp.d)
+                yp = new["y"]
+            else:
+                arrs = {"X": Xp, "y": yp, "alpha": state.alpha}
+                new, mk = elastic.repartition(arrs, mk, el_K)
+                Xp, yp = new["X"], new["y"]
             K = el_K
             cfg = (CoCoAConfig.adding(K, **mk_cfg) if args.gamma == "add"
                    else CoCoAConfig.averaging(K, **mk_cfg))
-            st = init_state(Xp.shape[2], K, Xp.shape[1])
+            d_dim, nk_dim = dims(Xp)
+            st = init_state(d_dim, K, nk_dim)
             state = st._replace(alpha=new["alpha"], w=state.w,
                                 rounds=state.rounds)
             el_round = -1

@@ -61,6 +61,15 @@ def _mem_dict(compiled):
     return out
 
 
+def _cost_dict(compiled) -> dict:
+    """compiled.cost_analysis() returns a dict in older jax and a list of
+    per-computation dicts in newer versions -- normalize to one dict."""
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
 def _abstract_bytes(tree) -> int:
     import math
     return sum((math.prod(l.shape) if l.shape else 1) * l.dtype.itemsize
@@ -133,7 +142,7 @@ def lower_cell(cell: Sp.Cell, mesh, mesh_name: str) -> dict:
     compiled = lowered.compile()
     t2 = time.time()
 
-    cost = compiled.cost_analysis() or {}
+    cost = _cost_dict(compiled)
     hlo = compiled.as_text()
     st = full_stats(hlo)
     rec = {
@@ -216,7 +225,7 @@ def run_paper_cell(mesh_name: str, outdir: pathlib.Path) -> dict:
     lowered = jitted.lower(*state, X, y, mask)
     compiled = lowered.compile()
     t1 = time.time()
-    cost = compiled.cost_analysis() or {}
+    cost = _cost_dict(compiled)
     st = full_stats(compiled.as_text())
     rec = {
         "arch": "paper-svm", "shape": f"n{W.n}_d{W.d}_H{W.H}",

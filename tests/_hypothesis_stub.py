@@ -1,0 +1,65 @@
+"""Minimal hypothesis fallback so the property tests still run (not skip)
+when hypothesis isn't installed.
+
+Implements just what this repo's tests use -- `given` over positional
+`integers` / `floats` / `sampled_from` strategies with a `settings`
+max_examples knob -- as a deterministic seeded loop. No shrinking, no
+database; a failing example is reported with its drawn values. Real
+hypothesis is preferred automatically when importable (see the try/except
+at each test module's top).
+"""
+from __future__ import annotations
+
+import random
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+class _Strategies:
+    @staticmethod
+    def integers(lo: int, hi: int) -> _Strategy:
+        return _Strategy(lambda r: r.randint(lo, hi))
+
+    @staticmethod
+    def floats(lo: float, hi: float) -> _Strategy:
+        return _Strategy(lambda r: r.uniform(lo, hi))
+
+    @staticmethod
+    def sampled_from(seq) -> _Strategy:
+        items = list(seq)
+        return _Strategy(lambda r: r.choice(items))
+
+
+st = _Strategies()
+
+
+def settings(max_examples: int = 20, deadline=None, **_ignored):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strategies):
+    def deco(fn):
+        # deliberately (*args, **kwargs): pytest must not see the generated
+        # parameters in the signature and try to resolve them as fixtures
+        def run(*args, **kwargs):
+            n = getattr(run, "_max_examples", 20)
+            rng = random.Random(0)
+            for _ in range(n):
+                drawn = tuple(s.draw(rng) for s in strategies)
+                try:
+                    fn(*args, *drawn, **kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example {fn.__name__}{drawn}: {e}") from e
+        run.__name__ = fn.__name__
+        run.__doc__ = fn.__doc__
+        run.__module__ = fn.__module__
+        run._max_examples = getattr(fn, "_max_examples", 20)
+        return run
+    return deco

@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                     # vendored deterministic fallback
+    from _hypothesis_stub import given, settings, st
 
 from repro.models.layers import (apply_rope, chunked_attention, pick_chunk,
                                  decode_attention)

@@ -98,6 +98,30 @@ def test_elastic_repartition_objective_invariant(problem):
         assert r2.history["gap"][-1] <= r.history["gap"][-1] + 1e-6
 
 
+def test_elastic_repartition_gap_roundtrip(problem):
+    """K -> K' -> K round trip: alpha travels with its datapoints, so the
+    primal, dual, and duality gap are invariant across the cycle."""
+    Xp, yp, mk = problem
+    loss = get_loss("hinge")
+    cfg = CoCoAConfig.adding(8, loss="hinge", lam=1e-3, H=128)
+    r = solve(cfg, Xp, yp, mk, rounds=4, gap_every=4)
+    arrs = {"X": Xp, "y": yp, "alpha": r.state.alpha}
+    p0, d0, g0 = (float(v) for v in duality.gap_decomposed(
+        r.state.alpha, Xp, yp, mk, loss, cfg.lam))
+    for K_mid in (3, 5, 16):
+        a1, m1 = elastic.repartition(arrs, mk, K_mid)
+        p1, d1, g1 = (float(v) for v in duality.gap_decomposed(
+            a1["alpha"], a1["X"], a1["y"], m1, loss, cfg.lam))
+        a2, m2 = elastic.repartition(a1, m1, 8)
+        p2, d2, g2 = (float(v) for v in duality.gap_decomposed(
+            a2["alpha"], a2["X"], a2["y"], m2, loss, cfg.lam))
+        for p, d, g in ((p1, d1, g1), (p2, d2, g2)):
+            assert abs(p - p0) < 1e-5 and abs(d - d0) < 1e-5
+            assert abs(g - g0) < 1e-5
+        # back at K=8 the per-worker shapes match the originals
+        assert a2["X"].shape == Xp.shape and a2["alpha"].shape == mk.shape
+
+
 def test_straggler_budgeted_round_converges(problem):
     """One 10x-slow worker: deadline budgets keep rounds useful (Theta < 1)
     instead of blocking; gap still shrinks."""
@@ -122,7 +146,10 @@ def test_throughput_tracker_updates():
     assert b[3] < b[0]
 
 
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                     # vendored deterministic fallback
+    from _hypothesis_stub import given, settings, st
 
 
 @settings(max_examples=10, deadline=None)

@@ -1,0 +1,288 @@
+"""Sparse subsystem: LIBSVM parser, CSR<->ELL round-trip, SparseShards
+partitioner parity with the dense contract, sparse duality-gap evaluation,
+and the Pallas sparse LocalSDCA kernel vs its pure-jnp oracle (bit-for-bit,
+same visit order -- not statistical)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CoCoAConfig, duality, solve
+from repro.core.losses import get_loss
+from repro.core.solvers import local_sdca, local_sdca_sparse
+from repro.data import sparse as sp
+from repro.data.synthetic import partition
+from repro.kernels.ops import sparse_local_sdca_block
+from repro.kernels.ref import local_sdca_ref, sparse_local_sdca_ref
+from repro.kernels.sparse_sdca import sparse_local_sdca, vmem_budget
+
+
+def _problem(n=256, d=128, density=0.05, K=4, seed=0):
+    csr, y = sp.make_sparse_classification(n, d, density=density, seed=seed)
+    return csr, y, sp.partition_sparse(csr, y, K, seed=seed + 1)
+
+
+# ----------------------------------------------------------------------------
+# parser
+# ----------------------------------------------------------------------------
+
+def test_libsvm_parser_basic():
+    lines = [
+        "+1 1:0.5 3:-0.25   # trailing comment",
+        "-1 2:1.0",
+        "",                     # blank line ignored
+        "1 1:2.0 2:3.0 4:4.0",
+    ]
+    csr, y = sp.load_libsvm(lines)
+    np.testing.assert_array_equal(y, [1.0, -1.0, 1.0])
+    assert csr.shape == (3, 4)
+    assert csr.nnz == 6
+    expect = np.array([[0.5, 0.0, -0.25, 0.0],
+                       [0.0, 1.0, 0.0, 0.0],
+                       [2.0, 3.0, 0.0, 4.0]], np.float32)
+    np.testing.assert_allclose(csr.toarray(), expect)
+
+
+def test_libsvm_parser_file_and_options(tmp_path):
+    p = tmp_path / "data.svm"
+    p.write_text("2.5 0:1.0 7:2.0\n-1.5 3:4.0\n")
+    csr, y = sp.load_libsvm(p, zero_based=True, n_features=10)
+    assert csr.shape == (2, 10)
+    np.testing.assert_allclose(y, [2.5, -1.5])
+    np.testing.assert_allclose(csr.toarray()[0, [0, 7]], [1.0, 2.0])
+    with pytest.raises(ValueError):
+        sp.load_libsvm(["1 0:1.0"])     # 1-based parse of a 0 index
+
+
+def test_libsvm_parser_sorts_columns():
+    csr, _ = sp.load_libsvm(["1 5:5.0 2:2.0 9:9.0"])
+    np.testing.assert_array_equal(csr.indices, [1, 4, 8])
+    np.testing.assert_allclose(csr.data, [2.0, 5.0, 9.0])
+
+
+# ----------------------------------------------------------------------------
+# CSR <-> ELL round-trip
+# ----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("density", [0.01, 0.1, 0.5])
+def test_ell_roundtrip(density):
+    csr, _ = sp.make_sparse_classification(97, 64, density=density, seed=3)
+    cols, vals, nnz = sp.csr_to_ell(csr)
+    back = sp.ell_to_csr(cols, vals, nnz, csr.shape[1])
+    np.testing.assert_array_equal(back.indices, csr.indices)
+    np.testing.assert_allclose(back.data, csr.data)
+    np.testing.assert_array_equal(back.indptr, csr.indptr)
+    assert back.shape == csr.shape
+    # padding slots are exact no-op entries
+    slot = np.arange(cols.shape[1])[None, :] >= nnz[:, None]
+    assert np.all(cols[slot] == 0) and np.all(vals[slot] == 0.0)
+
+
+def test_ell_r_max_override_and_validation():
+    csr, _ = sp.make_sparse_classification(31, 32, density=0.1, seed=1)
+    need = int(csr.row_nnz().max())
+    cols, vals, _ = sp.csr_to_ell(csr, r_max=need + 5)
+    assert cols.shape == (31, need + 5)
+    with pytest.raises(ValueError):
+        sp.csr_to_ell(csr, r_max=need - 1)
+
+
+# ----------------------------------------------------------------------------
+# partitioner: dense-contract parity
+# ----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("heterogeneity", [1.0, 0.5])
+def test_partition_sparse_matches_dense_contract(heterogeneity):
+    """Same seed => the sparse partitioner places rows exactly like the dense
+    one (shared split_order, same rng stream), with identical mask/padding."""
+    csr, y, _ = _problem(n=131, K=4, seed=5)      # prime n: padding rows
+    Xd = csr.toarray()
+    Xp, yp_d, mk_d = partition(Xd, y, 4, seed=9, heterogeneity=heterogeneity)
+    sh, yp_s, mk_s = sp.partition_sparse(csr, y, 4, seed=9,
+                                         heterogeneity=heterogeneity)
+    np.testing.assert_array_equal(np.asarray(mk_s), np.asarray(mk_d))
+    np.testing.assert_array_equal(np.asarray(yp_s), np.asarray(yp_d))
+    np.testing.assert_allclose(np.asarray(sp.densify(sh)), np.asarray(Xp),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_partition_heterogeneity_preserves_shuffle():
+    """The non-sorted fraction must stay in permutation order, not index
+    order (regression: np.setdiff1d silently sorted it)."""
+    from repro.data.synthetic import split_order
+    n = 400
+    order = split_order(n, np.random.default_rng(3), 0.75,
+                        lambda r: r.standard_normal(n))
+    assert sorted(order) == list(range(n))        # still a permutation
+    rest = order[100:]                            # the shuffled 75%
+    # a sorted tail would be monotonically increasing; a shuffle is not
+    assert np.sum(np.diff(rest) < 0) > len(rest) // 4
+
+
+# ----------------------------------------------------------------------------
+# sparse matvec family + duality certificates
+# ----------------------------------------------------------------------------
+
+def test_sparse_gap_matches_densified():
+    _, _, (sh, yp, mk) = _problem(seed=2)
+    Xd = sp.densify(sh)
+    loss = get_loss("hinge")
+    rng = np.random.default_rng(0)
+    alpha = (jnp.asarray(rng.random(yp.shape).astype(np.float32)) * yp) * mk
+    for fn in (duality.w_of_alpha,):
+        np.testing.assert_allclose(np.asarray(fn(sh, alpha, 1e-3, 256.0)),
+                                   np.asarray(fn(Xd, alpha, 1e-3, 256.0)),
+                                   rtol=1e-5, atol=1e-6)
+    ps, ds, gs = duality.gap_decomposed(alpha, sh, yp, mk, loss, 1e-3)
+    pd, dd, gd = duality.gap_decomposed(alpha, Xd, yp, mk, loss, 1e-3)
+    assert abs(float(ps) - float(pd)) < 1e-5
+    assert abs(float(ds) - float(dd)) < 1e-5
+    assert abs(float(gs) - float(gd)) < 1e-5
+
+
+# ----------------------------------------------------------------------------
+# kernel vs oracle: bit-for-bit on every closed-form loss
+# ----------------------------------------------------------------------------
+
+def _shard(nk, d, density, seed=0):
+    csr, y = sp.make_sparse_classification(nk, d, density=density, seed=seed)
+    sh, yp, mk = sp.partition_sparse(csr, y, 1, seed=seed + 1)
+    shard = jax.tree.map(lambda a: a[0], sh)
+    rng = np.random.default_rng(seed + 2)
+    w = jnp.asarray((rng.standard_normal(d) * 0.01).astype(np.float32))
+    return shard, yp[0], jnp.zeros(nk), mk[0], w
+
+
+@pytest.mark.parametrize("loss_name", ["hinge", "smooth_hinge1", "squared",
+                                       "absolute"])
+@pytest.mark.parametrize("nk,d,br", [(64, 128, 32), (128, 256, 64)])
+def test_sparse_kernel_bitexact_vs_oracle(loss_name, nk, d, br):
+    loss = get_loss(loss_name)
+    shard, y, a, m, w = _shard(nk, d, density=0.08, seed=nk + d)
+    scale = 4.0 / (1e-3 * nk)
+    da_k, du_k = sparse_local_sdca(shard.cols, shard.vals, y, a, m, w, scale,
+                                   loss=loss, n_passes=1, block_rows=br,
+                                   interpret=True)
+    da_r, du_r = sparse_local_sdca_ref(shard.cols, shard.vals, y, a, m, w,
+                                       scale, loss=loss, n_passes=1)
+    np.testing.assert_array_equal(np.asarray(da_k), np.asarray(da_r))
+    np.testing.assert_array_equal(np.asarray(du_k), np.asarray(du_r))
+
+
+def test_sparse_kernel_bitexact_multipass():
+    loss = get_loss("hinge")
+    shard, y, a, m, w = _shard(128, 128, density=0.1, seed=7)
+    scale = 2.0 / (1e-3 * 128)
+    da_k, du_k = sparse_local_sdca(shard.cols, shard.vals, y, a, m, w, scale,
+                                   loss=loss, n_passes=3, block_rows=64,
+                                   interpret=True)
+    da_r, du_r = sparse_local_sdca_ref(shard.cols, shard.vals, y, a, m, w,
+                                       scale, loss=loss, n_passes=3)
+    np.testing.assert_array_equal(np.asarray(da_k), np.asarray(da_r))
+    np.testing.assert_array_equal(np.asarray(du_k), np.asarray(du_r))
+
+
+def test_sparse_oracle_matches_dense_oracle():
+    """Same rows, sparse vs densified layout: identical math up to fp
+    reduction order."""
+    loss = get_loss("hinge")
+    shard, y, a, m, w = _shard(96, 64, density=0.15, seed=11)
+    Xd = sp.densify(shard)
+    scale = 4.0 / (1e-3 * 96)
+    da_s, du_s = sparse_local_sdca_ref(shard.cols, shard.vals, y, a, m, w,
+                                       scale, loss=loss, n_passes=1)
+    da_d, du_d = local_sdca_ref(Xd, y, a, m, w, scale, loss=loss, n_passes=1)
+    np.testing.assert_allclose(np.asarray(da_s), np.asarray(da_d),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(du_s), np.asarray(du_d),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_sparse_kernel_masked_rows_are_noops():
+    loss = get_loss("hinge")
+    shard, y, a, m, w = _shard(64, 64, density=0.1, seed=13)
+    m = m.at[-9:].set(0.0)
+    scale = 2.0 / (1e-3 * 55)
+    da_k, _ = sparse_local_sdca(shard.cols, shard.vals, y, a, m, w, scale,
+                                loss=loss, n_passes=1, block_rows=32,
+                                interpret=True)
+    assert float(jnp.max(jnp.abs(da_k[-9:]))) == 0.0
+
+
+def test_sparse_kernel_rejects_logistic():
+    shard, y, a, m, w = _shard(32, 32, density=0.2, seed=1)
+    with pytest.raises(ValueError):
+        sparse_local_sdca(shard.cols, shard.vals, y, a, m, w, 1.0,
+                          loss=get_loss("logistic"), interpret=True)
+
+
+def test_sparse_ops_wrapper_solver_interface():
+    """sparse_local_sdca_block: permutation + padding + SDCAResult contract
+    (du == scale * A^T dalpha) on non-aligned shapes."""
+    loss = get_loss("hinge")
+    shard, y, a, m, w = _shard(100, 130, density=0.1, seed=17)
+    res = sparse_local_sdca_block(shard, y, a, m, w, jax.random.PRNGKey(0),
+                                  loss, 1e-3, 100.0, 4.0, 200, interpret=True)
+    assert res.dalpha.shape == (100,)
+    assert res.du.shape == (130,)
+    scale = 4.0 / (1e-3 * 100)
+    Xd = np.asarray(sp.densify(shard))
+    ref = scale * (Xd.T @ np.asarray(res.dalpha))
+    np.testing.assert_allclose(np.asarray(res.du), ref, rtol=2e-4, atol=1e-4)
+
+
+def test_sparse_vmem_budget_production_shape():
+    vm = vmem_budget(nk=16384, d=47236, r_max=128)    # rcv1-scale shard
+    assert vm["fits_16mb"]
+    assert vm["dense_tile_mb"] > 10 * vm["total_mb"]  # the point of the kernel
+
+
+# ----------------------------------------------------------------------------
+# solvers + end-to-end CoCoA+ parity
+# ----------------------------------------------------------------------------
+
+def test_sparse_jnp_solver_matches_dense_solver():
+    """local_sdca_sparse visits the same coordinates (same rng) as the dense
+    local_sdca on the densified shard -> same updates up to fp order."""
+    loss = get_loss("smooth_hinge1")
+    shard, y, a, m, w = _shard(128, 64, density=0.1, seed=19)
+    Xd = sp.densify(shard)
+    rng = jax.random.PRNGKey(4)
+    rs = local_sdca_sparse(shard, y, a, m, w, rng, loss, 1e-3, 128.0, 4.0, 256)
+    rd = local_sdca(Xd, y, a, m, w, rng, loss, 1e-3, 128.0, 4.0, 256)
+    np.testing.assert_allclose(np.asarray(rs.dalpha), np.asarray(rd.dalpha),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(rs.du), np.asarray(rd.du),
+                               rtol=2e-4, atol=2e-5)
+
+
+@pytest.mark.parametrize("solver", ["sdca", "sdca_kernel"])
+def test_cocoa_sparse_matches_densified_run(solver):
+    """Acceptance: CoCoA+ on sparse shards reaches the same duality gap per
+    round as the equivalent densified run (identical rng stream)."""
+    _, _, (sh, yp, mk) = _problem(n=512, d=256, density=0.05, K=4, seed=23)
+    Xd = sp.densify(sh)
+    cfg = CoCoAConfig.adding(4, loss="hinge", lam=1e-3, H=256, solver=solver)
+    rs = solve(cfg, sh, yp, mk, rounds=5, gap_every=1, seed=3)
+    rd = solve(cfg, Xd, yp, mk, rounds=5, gap_every=1, seed=3)
+    assert rs.history["round"] == rd.history["round"]
+    np.testing.assert_allclose(rs.history["gap"], rd.history["gap"],
+                               rtol=1e-4, atol=1e-5)
+    assert rs.history["gap"][-1] < rs.history["gap"][0]    # actually converges
+
+
+def test_cocoa_sparse_rejects_solver_without_sparse_path():
+    _, _, (sh, yp, mk) = _problem(seed=29)
+    cfg = CoCoAConfig.adding(4, loss="smooth_hinge1", lam=1e-3, H=32,
+                             solver="gd")
+    with pytest.raises(ValueError, match="no sparse path"):
+        solve(cfg, sh, yp, mk, rounds=1)
+
+
+def test_cocoa_sparse_comm_floats_accounting():
+    _, _, (sh, yp, mk) = _problem(seed=31)
+    cfg = CoCoAConfig.adding(4, loss="hinge", lam=1e-3, H=64)
+    r = solve(cfg, sh, yp, mk, rounds=3, gap_every=1)
+    K, d = 4, sh.d
+    assert r.history["comm_floats"] == [K * d, 2 * K * d, 3 * K * d]
+    assert r.history["comm_vectors"] == [K, 2 * K, 3 * K]
