@@ -6,7 +6,11 @@ Reported: us per coordinate step (jnp path, jitted, CPU), the kernel's
 per-block VMEM footprint vs the 16 MiB budget at production shapes, and the
 dense-vs-sparse HBM roofline at the paper's densities (bytes one SDCA pass
 must stream per layout: 4 bytes/element dense vs 8 bytes/stored-entry
-padded-ELL, i.e. a 0.5/density traffic cut)."""
+padded-ELL, i.e. a 0.5/density traffic cut).
+
+`--comm` runs the comm-volume vs gap-per-round sweep instead: the
+repro.comm wire compressors at equal round count (floats actually
+transmitted per round next to the duality gap reached)."""
 from __future__ import annotations
 
 import argparse
@@ -117,6 +121,47 @@ def sparse_roofline(densities=(0.003, 0.01, 0.05, 0.1), d=4096, nk=1024,
                 dense_us_per_step=us_de, vmem=svm)
 
 
+def comm_sweep(quick=True, K=4, n=512, d=2048, density=0.01):
+    """Comm-volume vs gap-per-round: the repro.comm compressors at equal
+    round count on one sparse problem.
+
+    For each wire scheme (dense baseline, top-k, rand-k, 8-bit stochastic
+    quantization, int8) run the same CoCoA+ rounds and report the tracer's
+    actual floats/round next to the duality gap reached -- the trade the
+    paper's Fig-2 communication model prices. The gap under compression is
+    certified at the w the algorithm carries (duality.gap_at_w)."""
+    from repro.core import CoCoAConfig, solve
+    from repro.data import sparse as sp
+
+    rounds = 6 if quick else 24
+    H = 256 if quick else 1024
+    k = 64
+    csr, y = sp.make_sparse_classification(n, d, density=density, seed=0)
+    sh, yp, mk = sp.partition_sparse(csr, y, K, seed=1)
+
+    rows = []
+    dense_floats = None
+    for method in ("none", "topk", "randk", "qsgd", "int8"):
+        cfg = CoCoAConfig.adding(K, loss="hinge", lam=1e-3, H=H,
+                                 compress=method, compress_k=k)
+        r = solve(cfg, sh, yp, mk, rounds=rounds, gap_every=1, seed=2)
+        fl = r.history["comm_floats"][-1] // r.history["round"][-1]
+        if method == "none":
+            dense_floats = fl
+        cut = dense_floats / max(fl, 1)
+        rows.append(dict(method=method, k=k, floats_per_round=fl, cut=cut,
+                         gap=r.history["gap"][-1],
+                         gap_first=r.history["gap"][0],
+                         monotone=all(b <= a * 1.05 for a, b in
+                                      zip(r.history["gap"],
+                                          r.history["gap"][1:]))))
+        print(f"comm,sweep,method={method},k={k},floats_per_round={fl},"
+              f"cut={cut:.1f}x,gap={r.history['gap'][-1]:.3e}")
+    save("comm_sweep", dict(K=K, n=n, d=d, density=density, rounds=rounds,
+                            rows=rows))
+    return rows
+
+
 def run(quick: bool = True):
     us = bench_jnp(H=1024 if quick else 8192)
     print(f"kernel,jnp_sdca_us_per_step,{us:.2f}")
@@ -169,8 +214,13 @@ def main():
                       help="CI smoke mode: fewer inner steps (the default)")
     mode.add_argument("--full", action="store_true",
                       help="full step counts for stable timings")
+    ap.add_argument("--comm", action="store_true",
+                    help="run only the comm-volume vs gap sweep")
     args = ap.parse_args()
-    run(quick=not args.full)
+    if args.comm:
+        comm_sweep(quick=not args.full)
+    else:
+        run(quick=not args.full)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,162 @@
+"""Pluggable aggregation for the CoCoA round: how partial updates combine.
+
+The paper's central dial is the (gamma, sigma') pair: workers solve the
+sigma'-damped subproblem (eq. 9) and the driver applies
+
+    w     <- w     + gamma * sum_k Delta w_k,     Delta w_k = du_k / sigma'
+    alpha <- alpha + gamma * Delta alpha_k                       (Algorithm 1)
+
+with convergence guaranteed whenever sigma' >= sigma'_min (eq. 11), for
+which sigma' = gamma * K is the always-safe Lemma-4 bound (computed by
+`core.sigma.lemma3_safe_sigma`; `core.sigma.sigma_prime_min` measures the
+data-dependent optimum). The named strategies:
+
+    add      gamma = 1,   sigma' = K    CoCoA+ (adding, Lemma 4)
+    average  gamma = 1/K, sigma' = 1    original CoCoA (Remark 12)
+    gamma:g  gamma = g,   sigma' = g*K  the full interpolation; exact `add`
+                                        at g=1 and `average` at g=1/K
+
+`exchange` is the one communication step both backends route through:
+damp by 1/sigma', compress with error feedback, all-reduce over the
+topology. `apply_update` is the gamma application. core/cocoa.py holds no
+aggregation arithmetic of its own.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from typing import NamedTuple, Optional
+
+from .compress import Compressor, NoCompression
+from .topology import Topology
+
+# rng domain separation: the compression stream (rand-k index draws,
+# stochastic rounding) must not alias the solver's coordinate-sampling
+# stream; both derive from the per-worker round key via fold_in
+COMM_RNG_SALT = 0x5EED
+
+
+class AggParams(NamedTuple):
+    """The (gamma, sigma') pair a round runs with."""
+    gamma: float
+    sigma_prime: float
+
+
+class Aggregator:
+    """Strategy object producing the (gamma, sigma') pair for K workers."""
+    name: str = "abstract"
+
+    def params(self, K: int) -> AggParams:
+        raise NotImplementedError
+
+
+class Add(Aggregator):
+    """CoCoA+ adding: gamma = 1 with the safe bound sigma' = K (Lemma 4)."""
+    name = "add"
+
+    def params(self, K: int) -> AggParams:
+        return AggParams(1.0, _safe_sigma(1.0, K))
+
+
+class Average(Aggregator):
+    """Original CoCoA averaging: gamma = 1/K, sigma' = 1 (Remark 12)."""
+    name = "average"
+
+    def params(self, K: int) -> AggParams:
+        return AggParams(1.0 / K, 1.0)
+
+
+class GammaInterp(Aggregator):
+    """gamma-interpolated aggregation with the matching Lemma-4 safe bound
+    sigma' = gamma * K; exact `Add` at gamma=1 and `Average` at gamma=1/K
+    (gamma*K = 1 there, and sigma'=1 is the Remark-12 averaging pair)."""
+    name = "gamma"
+
+    def __init__(self, gamma: float):
+        if not 0.0 < gamma <= 1.0:
+            raise ValueError(f"gamma must be in (0, 1], got {gamma}")
+        self.gamma = float(gamma)
+
+    def params(self, K: int) -> AggParams:
+        return AggParams(self.gamma, _safe_sigma(self.gamma, K))
+
+
+def _safe_sigma(gamma: float, K: int) -> float:
+    # late import: core.cocoa imports this module at load time, and
+    # importing repro.core.sigma at our top level would re-enter
+    # repro.core.__init__ mid-import
+    from repro.core.sigma import lemma3_safe_sigma
+    return lemma3_safe_sigma(gamma, K)
+
+
+def resolve(spec) -> Aggregator:
+    """Aggregator from a config string: "add" | "average"/"avg" | "gamma:<g>"."""
+    if isinstance(spec, Aggregator):
+        return spec
+    if spec == "add":
+        return Add()
+    if spec in ("average", "avg"):
+        return Average()
+    if isinstance(spec, str) and spec.startswith("gamma:"):
+        return GammaInterp(float(spec.split(":", 1)[1]))
+    raise ValueError(f"unknown aggregator {spec!r}; "
+                     f"use 'add', 'average', or 'gamma:<g>'")
+
+
+def from_config(gamma: float, sigma_p: Optional[float], K: int,
+                aggregator: Optional[str] = None) -> AggParams:
+    """The round's (gamma, sigma'): a named strategy if one is set, else the
+    explicit (gamma, sigma_p) pair with sigma_p=None meaning the safe bound."""
+    if aggregator:
+        return resolve(aggregator).params(K)
+    sp = float(sigma_p) if sigma_p is not None else _safe_sigma(gamma, K)
+    return AggParams(float(gamma), sp)
+
+
+# ----------------------------------------------------------------------------
+# The communication step itself (both backends route through these two)
+# ----------------------------------------------------------------------------
+
+def exchange(topo: Topology, du, ef, rng, params: AggParams,
+             compressor: Optional[Compressor] = None):
+    """Communicate-and-reduce one round's local updates.
+
+    Each worker's wire message is Delta w_k = du_k / sigma' (eq. 14's
+    single d-vector), optionally compressed with error feedback; the
+    topology supplies the all-reduce (driver-side sum for the simulated
+    backend, one psum inside shard_map).
+
+    Simulated topology: `du`/`ef` carry a leading K axis and `rng` is a
+    (K, ...) batch of per-worker keys. Mesh topology: per-worker values as
+    seen inside shard_map. Returns (dw_sum, new_ef) with dw_sum =
+    sum_k C(Delta w_k) already damped by 1/sigma'.
+    """
+    comp = compressor if compressor is not None else NoCompression()
+    if topo.is_mesh:
+        msg, ef = comp(du / params.sigma_prime, ef, rng)
+    else:
+        msg, ef = jax.vmap(comp)(du / params.sigma_prime, ef, rng)
+    return topo.all_sum(msg), ef
+
+
+def apply_update(w, alpha, dw_sum, dalpha, params: AggParams):
+    """Algorithm-1 line 9: the gamma application to (w, alpha). `dw_sum`
+    comes from `exchange` (already 1/sigma'-damped)."""
+    return w + params.gamma * dw_sum, alpha + params.gamma * dalpha
+
+
+def flush_ef(w, ef, params: AggParams):
+    """Send all outstanding error-feedback debt at once, uncompressed:
+    w += gamma * sum_k ef_k. The residuals are un-transmitted message mass
+    (already 1/sigma'-damped), so this is exactly what EF would eventually
+    deliver -- use it before elastic re-partitioning or teardown, where the
+    per-worker residual state is about to be rebuilt and would otherwise
+    be silently dropped."""
+    return w + params.gamma * jnp.sum(ef, axis=0)
+
+
+def comm_rng(worker_rng) -> jax.Array:
+    """Per-worker compression key, domain-separated from the solver key.
+    Both backends derive it identically so compressed runs keep the
+    vmap/shard_map parity contract."""
+    return jax.random.fold_in(worker_rng, COMM_RNG_SALT)

@@ -1,0 +1,230 @@
+"""Update compression for the communicated Delta w_k vectors.
+
+Every scheme carries error feedback (EF): the compressor is applied to
+(update + residual) and whatever it drops accumulates into the next
+round's residual instead of being lost -- the standard fix that keeps
+sparsified/quantized first-order methods converging to the exact optimum.
+The residual is per-worker state with the same shape as the message and is
+carried as a pytree leaf of `CoCoAState` through rounds (it checkpoints,
+restores, and re-partitions like any other state).
+
+Vector compressors (the CoCoA comm pipeline; one (d,)-message per worker):
+
+    none   identity                              d floats on the wire
+    topk   keep the k largest-|v| entries        2k floats (value+index pairs)
+    randk  keep k uniformly random entries       k floats (indices re-derived
+                                                 from the shared round seed)
+    qsgd   8-bit stochastic quantization         d/4 + 1 floats (levels+norm)
+    int8   deterministic symmetric int8          d/4 + 1 floats
+
+`floats_per_message(d)` is the wire model the tracer and the
+`history["comm_floats"]` accounting use: equivalent f32 floats actually
+transmitted, not the dense d.
+
+The pytree API at the bottom (`EFState`/`ef_init`/`compress`/
+`compressed_bytes`) is the original `repro.optim.compress` interface,
+absorbed here; `repro.optim.compress` remains as a re-export shim for its
+users (CoCoA-DP parameter deltas).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class Compressor:
+    """Per-worker message compressor with error feedback.
+
+    Callable as `compressor(x, residual, rng) -> (x_hat, new_residual)` on a
+    single (d,) message; deterministic schemes ignore `rng`. Works under
+    jit / vmap / shard_map (k and bit widths are static).
+    """
+    name: str = "none"
+
+    def __call__(self, x, residual, rng):
+        raise NotImplementedError
+
+    def floats_per_message(self, d: int) -> int:
+        """Equivalent f32 floats one worker puts on the wire per round."""
+        raise NotImplementedError
+
+
+class NoCompression(Compressor):
+    name = "none"
+
+    def __call__(self, x, residual, rng):
+        return x, residual
+
+    def floats_per_message(self, d: int) -> int:
+        return d
+
+
+class TopK(Compressor):
+    """Keep the k largest-magnitude entries of (x + residual)."""
+    name = "topk"
+
+    def __init__(self, k: int):
+        if k <= 0:
+            raise ValueError(f"topk needs k >= 1, got {k}")
+        self.k = int(k)
+
+    def __call__(self, x, residual, rng):
+        xc = x + residual
+        k = min(self.k, xc.shape[-1])
+        _, idx = jax.lax.top_k(jnp.abs(xc), k)
+        xhat = jnp.zeros_like(xc).at[idx].set(xc[idx])
+        return xhat, xc - xhat
+
+    def floats_per_message(self, d: int) -> int:
+        return 2 * min(self.k, d)      # (value, index) pairs
+
+    def __repr__(self):
+        return f"TopK(k={self.k})"
+
+
+class RandK(Compressor):
+    """Keep k uniformly random entries of (x + residual). The index set is
+    drawn from the shared per-round worker key, so the receiver re-derives
+    it and only the k values travel (EF absorbs the 1-k/d shrinkage bias)."""
+    name = "randk"
+
+    def __init__(self, k: int):
+        if k <= 0:
+            raise ValueError(f"randk needs k >= 1, got {k}")
+        self.k = int(k)
+
+    def __call__(self, x, residual, rng):
+        xc = x + residual
+        d = xc.shape[-1]
+        k = min(self.k, d)
+        idx = jax.random.choice(rng, d, (k,), replace=False)
+        xhat = jnp.zeros_like(xc).at[idx].set(xc[idx])
+        return xhat, xc - xhat
+
+    def floats_per_message(self, d: int) -> int:
+        return min(self.k, d)          # values only; indices are seed-derived
+
+    def __repr__(self):
+        return f"RandK(k={self.k})"
+
+
+class StochasticQuant(Compressor):
+    """QSGD-style stochastic quantization to 2^(bits-1)-1 magnitude levels
+    against the max-|v| norm; rounding direction is random with probability
+    equal to the fractional level, so the quantizer is unbiased given the
+    norm."""
+    name = "qsgd"
+
+    def __init__(self, bits: int = 8):
+        if not 2 <= bits <= 16:
+            raise ValueError(f"bits must be in [2, 16], got {bits}")
+        self.bits = int(bits)
+
+    def __call__(self, x, residual, rng):
+        xc = x + residual
+        s = float(2 ** (self.bits - 1) - 1)
+        norm = jnp.max(jnp.abs(xc)) + 1e-12
+        y = jnp.abs(xc) / norm * s
+        lo = jnp.floor(y)
+        up = jax.random.bernoulli(rng, jnp.clip(y - lo, 0.0, 1.0))
+        xhat = jnp.sign(xc) * (lo + up.astype(xc.dtype)) / s * norm
+        return xhat, xc - xhat
+
+    def floats_per_message(self, d: int) -> int:
+        return -(-d * self.bits // 32) + 1      # packed levels + the norm
+
+    def __repr__(self):
+        return f"StochasticQuant(bits={self.bits})"
+
+
+class Int8(Compressor):
+    """Deterministic per-message symmetric int8 quantization."""
+    name = "int8"
+
+    def __call__(self, x, residual, rng):
+        xc = x + residual
+        xhat = _int8_one(xc)
+        return xhat, xc - xhat
+
+    def floats_per_message(self, d: int) -> int:
+        return -(-d // 4) + 1
+
+
+def resolve(method: Optional[str], k: int = 0) -> Compressor:
+    """Compressor from config: "none" | "topk" | "randk" | "qsgd" | "int8"
+    (`k` is the sparsifier budget for topk/randk)."""
+    if method in (None, "none", ""):
+        return NoCompression()
+    if method == "topk":
+        return TopK(k)
+    if method == "randk":
+        return RandK(k)
+    if method == "qsgd":
+        return StochasticQuant(8)
+    if method == "int8":
+        return Int8()
+    raise ValueError(f"unknown compressor {method!r}; use "
+                     f"'none', 'topk', 'randk', 'qsgd', or 'int8'")
+
+
+def init_residual(K: int, d: int, dtype=jnp.float32) -> jnp.ndarray:
+    """Fresh per-worker EF residuals (zeros; identity for 'none')."""
+    return jnp.zeros((K, d), dtype)
+
+
+# ----------------------------------------------------------------------------
+# Pytree API (formerly repro.optim.compress; kept for CoCoA-DP and tests)
+# ----------------------------------------------------------------------------
+
+class EFState(NamedTuple):
+    residual: object      # pytree matching the compressed tree
+
+
+def ef_init(tree) -> EFState:
+    return EFState(jax.tree.map(lambda x: jnp.zeros_like(x), tree))
+
+
+def _topk_one(x, frac: float):
+    flat = x.reshape(-1)
+    k = max(1, int(frac * flat.size))
+    thresh = jnp.sort(jnp.abs(flat))[-k]
+    kept = jnp.where(jnp.abs(flat) >= thresh, flat, 0.0)
+    return kept.reshape(x.shape)
+
+
+def _int8_one(x):
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127)
+    return q * scale
+
+
+def compress(tree, ef: Optional[EFState], method: str):
+    """Returns (compressed_tree, new_ef). method: "none"|"int8"|"topk:<f>"."""
+    if method in (None, "none"):
+        return tree, ef
+    if ef is None:
+        ef = ef_init(tree)
+    corrected = jax.tree.map(lambda g, r: g + r, tree, ef.residual)
+    if method == "int8":
+        comp = jax.tree.map(_int8_one, corrected)
+    elif method.startswith("topk:"):
+        frac = float(method.split(":")[1])
+        comp = jax.tree.map(lambda x: _topk_one(x, frac), corrected)
+    else:
+        raise ValueError(method)
+    new_res = jax.tree.map(lambda c, x: x - c, comp, corrected)
+    return comp, EFState(new_res)
+
+
+def compressed_bytes(tree, method: str) -> int:
+    n = sum(l.size for l in jax.tree.leaves(tree))
+    if method in (None, "none"):
+        return 4 * n
+    if method == "int8":
+        return n
+    if method.startswith("topk:"):
+        frac = float(method.split(":")[1])
+        return int(frac * n * 8)      # value + index
+    raise ValueError(method)

@@ -1,0 +1,101 @@
+"""Worker-topology descriptors shared by the vmap and shard_map backends.
+
+A `Topology` answers the questions every cross-worker reduction needs:
+how many workers there are, which mesh axes carry them, how a worker
+derives its index inside SPMD code, how many floats of the shared vector
+each worker actually moves per round (feature sharding divides it), and
+how to all-reduce a per-worker value.
+
+Two flavors share the dataclass:
+
+  * `simulated(K)` -- the vmap backend: K workers live on the leading axis
+    of every array, the all-reduce is a `jnp.sum(axis=0)` on the driver.
+  * `from_mesh(mesh, data_axis, model_axis)` -- the shard_map backend: the
+    data axis (or axes, mixed-radix) carries workers, the all-reduce is a
+    `lax.psum` over those axes, and an optional model axis shards the
+    feature dimension d so each device only moves d/|model| floats.
+
+Both backends in `core.cocoa` build their reduction through
+`comm.aggregate.exchange(topo, ...)`, so swapping topologies (e.g. a future
+hierarchical / multi-pod reduce) is a descriptor change, not a solver
+rewrite.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    K: int                                  # number of CoCoA workers
+    data_axes: Tuple[str, ...] = ()         # () -> simulated (vmap) topology
+    model_axis: Optional[str] = None        # feature-sharding axis, if any
+    mesh: Any = None                        # jax Mesh for the shard_map flavor
+
+    @property
+    def is_mesh(self) -> bool:
+        return bool(self.data_axes)
+
+    # -- construction --------------------------------------------------------
+
+    @staticmethod
+    def simulated(K: int) -> "Topology":
+        """The vmap backend: K workers on the leading array axis."""
+        return Topology(K=K)
+
+    @staticmethod
+    def from_mesh(mesh, data_axis, model_axis: Optional[str] = None
+                  ) -> "Topology":
+        """The shard_map backend: workers = product of the data axes."""
+        daxes = ((data_axis,) if isinstance(data_axis, str)
+                 else tuple(data_axis))
+        K = 1
+        for a in daxes:
+            K *= mesh.shape[a]
+        return Topology(K=K, data_axes=daxes, model_axis=model_axis, mesh=mesh)
+
+    # -- SPMD helpers --------------------------------------------------------
+
+    def worker_index(self) -> jnp.ndarray:
+        """Mixed-radix worker id from the data axes (inside shard_map only)."""
+        assert self.is_mesh, "worker_index is meaningful only inside shard_map"
+        widx = jnp.zeros((), jnp.int32)
+        for a in self.data_axes:
+            widx = widx * self.mesh.shape[a] + jax.lax.axis_index(a)
+        return widx
+
+    def all_sum(self, x):
+        """Cross-worker sum. Simulated: collapse the leading K axis on the
+        driver; mesh: one psum over the data axes (the paper's single
+        w-vector reduce per round, eq. 14)."""
+        if self.is_mesh:
+            return jax.lax.psum(x, self.data_axes)
+        return jnp.sum(x, axis=0)
+
+    def d_local(self, d: int) -> int:
+        """Floats of the shared d-vector each worker moves per reduce
+        (feature sharding over the model axis divides it)."""
+        if (self.model_axis is not None and self.mesh is not None
+                and self.model_axis in dict(getattr(self.mesh, "shape", {}))):
+            return -(-d // self.mesh.shape[self.model_axis])
+        return d
+
+    # -- shard_map PartitionSpecs -------------------------------------------
+
+    def _dspec(self):
+        return (self.data_axes[0] if len(self.data_axes) == 1
+                else self.data_axes)
+
+    def w_spec(self) -> P:
+        """Spec of the shared primal vector (replicated, or model-sharded)."""
+        return P(self.model_axis) if self.model_axis else P()
+
+    def row_spec(self, *trailing) -> P:
+        """Spec of a worker-major (K, nk, ...) array: shard the K axis over
+        the data axes, pass trailing dim specs through (None or model axis)."""
+        return P(self._dspec(), *trailing)

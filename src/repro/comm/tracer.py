@@ -1,0 +1,75 @@
+"""Structured per-round communication accounting.
+
+One place that knows what a round actually moves: K workers each reduce
+one message of `floats_per_message` equivalent f32 floats (the compressor's
+wire model applied to the d_local floats a worker owns under feature
+sharding), through `psums_per_round` collective(s). This replaces the
+hand-rolled `comm_floats` bookkeeping that used to live inline in
+`core.cocoa.solve`, and is what `launch.cocoa_train` and the
+`benchmarks.kernel_bench` comm sweep report from.
+
+The uncompressed model is unchanged from before the comm subsystem:
+`floats(t) = t * K * d_local` (one w-shard per worker-round). Under top-k
+it is `t * K * 2k` -- the actual (value, index) pairs transmitted, not the
+dense vector length.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from .compress import Compressor, NoCompression
+
+
+@dataclasses.dataclass
+class CommTracer:
+    """Counts rounds and converts them to wire volume.
+
+    `floats_per_message` is per worker per round; bytes are 4 * floats
+    (values and int32 indices are both 4-byte words in the wire model).
+    """
+    K: int
+    floats_per_message: int
+    psums_per_round: int = 1
+    rounds: int = 0
+
+    @staticmethod
+    def for_run(K: int, d_local: int,
+                compressor: Optional[Compressor] = None,
+                psums_per_round: int = 1) -> "CommTracer":
+        comp = compressor if compressor is not None else NoCompression()
+        return CommTracer(K=K,
+                          floats_per_message=comp.floats_per_message(d_local),
+                          psums_per_round=psums_per_round)
+
+    def tick(self, rounds: int = 1) -> None:
+        self.rounds += rounds
+
+    # -- cumulative totals (as of the last tick) -----------------------------
+
+    @property
+    def vectors(self) -> int:
+        """Messages sent so far: one per worker-round."""
+        return self.rounds * self.K
+
+    @property
+    def floats(self) -> int:
+        return self.rounds * self.K * self.floats_per_message
+
+    @property
+    def bytes(self) -> int:
+        return 4 * self.floats
+
+    @property
+    def psums(self) -> int:
+        return self.rounds * self.psums_per_round
+
+    def totals(self) -> dict:
+        """Snapshot for history logging / benchmark rows."""
+        return {"comm_vectors": self.vectors, "comm_floats": self.floats,
+                "comm_bytes": self.bytes, "comm_psums": self.psums}
+
+    def per_round(self) -> dict:
+        return {"floats": self.K * self.floats_per_message,
+                "bytes": 4 * self.K * self.floats_per_message,
+                "psums": self.psums_per_round}

@@ -3,22 +3,28 @@
 One outer round:
     1. each worker k solves the sigma'-damped local subproblem (eq. 9)
        Theta-approximately (any solver from core.solvers, incl. the Pallas
-       TPU kernel path),
-    2. communicates a single d-vector Delta w_k = (1/lambda n) A Delta a_[k],
-    3. driver aggregates  w <- w + gamma * sum_k Delta w_k,
+       TPU kernel paths, dense and sparse),
+    2. communicates a single d-vector Delta w_k = (1/lambda n) A Delta a_[k]
+       (optionally compressed with error feedback -- repro.comm.compress),
+    3. the comm layer aggregates  w <- w + gamma * sum_k C(Delta w_k),
        alpha_[k] <- alpha_[k] + gamma * Delta a_[k].
 
+The (gamma, sigma') pair is a pluggable repro.comm.aggregate strategy:
 gamma = 1/K, sigma' = 1  -> original CoCoA (averaging)   [Remark 12]
 gamma = 1,   sigma' = K  -> CoCoA+ (adding, safe bound)  [Lemma 4]
 
-Two execution backends share the same per-worker body:
+Two execution backends share the same per-worker body and route every
+cross-worker reduction through repro.comm (exchange -> apply_update):
   * "vmap":      simulates K workers on any device count (tests, laptops),
   * "shard_map": production SPMD over a mesh axis; the aggregate is a psum
-                 and each device keeps only its own (A_[k], alpha_[k]) shard.
-                 With a 2-D (data, model) mesh the feature dimension d is
-                 additionally sharded over "model", so the per-round psum
-                 moves d/|model| floats per device -- the paper's
-                 one-vector-per-round communication model, tensor-sharded.
+                 and each device keeps only its own (A_[k], alpha_[k]) shard
+                 -- dense (K, nk, d) blocks or padded-ELL SparseShards
+                 feeding the sparse LocalSDCA solvers. With a 2-D
+                 (data, model) mesh the feature dimension d is additionally
+                 sharded over "model" (dense only; ELL column ids are
+                 global), so the per-round psum moves d/|model| floats per
+                 device -- the paper's one-vector-per-round communication
+                 model, tensor-sharded.
 """
 from __future__ import annotations
 
@@ -30,6 +36,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import comm
+from repro.comm.topology import Topology
 from repro.data.sparse import SparseShards
 
 from . import duality
@@ -49,9 +57,21 @@ class CoCoAConfig:
     data_axis: str = "data"            # mesh axis carrying the partition
     model_axis: Optional[str] = None   # optional feature-sharding axis
     average_iterates: bool = False     # Theorem-8 averaged iterate output
+    aggregator: Optional[str] = None   # "add"|"average"|"gamma:<g>" strategy;
+                                       # overrides (gamma, sigma_p) when set
+    compress: str = "none"             # comm.compress scheme for Delta w_k
+    compress_k: int = 0                # sparsifier budget for topk/randk
 
     def resolved_sigma(self, K: int) -> float:
-        return float(self.sigma_p) if self.sigma_p is not None else self.gamma * K
+        return self.agg_params(K).sigma_prime
+
+    def agg_params(self, K: int) -> comm.AggParams:
+        """The (gamma, sigma') pair this config runs with at K workers."""
+        return comm.from_config(self.gamma, self.sigma_p, K,
+                                aggregator=self.aggregator)
+
+    def compressor(self) -> comm.Compressor:
+        return comm.resolve_compressor(self.compress, self.compress_k)
 
     @staticmethod
     def averaging(K: int, **kw) -> "CoCoAConfig":
@@ -70,6 +90,8 @@ class CoCoAState(NamedTuple):
     rng: jax.Array
     rounds: jnp.ndarray   # scalar int32
     alpha_bar: jnp.ndarray  # running sum for averaged iterate (or zeros)
+    ef: jnp.ndarray       # (K, d) per-worker error-feedback residuals
+                          # (zeros while compression is off)
 
 
 def init_state(d: int, K: int, nk: int, seed: int = 0,
@@ -80,6 +102,7 @@ def init_state(d: int, K: int, nk: int, seed: int = 0,
         rng=jax.random.PRNGKey(seed),
         rounds=jnp.zeros((), jnp.int32),
         alpha_bar=jnp.zeros((K, nk), dtype),
+        ef=comm.init_residual(K, d, dtype),
     )
 
 
@@ -142,7 +165,9 @@ def make_round_vmap(cfg: CoCoAConfig, K: int,
     cfg.solver is transparently mapped to its ELL counterpart for sparse
     inputs (sdca -> sdca_sparse, sdca_kernel -> sdca_sparse_kernel)."""
     loss = get_loss(cfg.loss)
-    sigma_p = cfg.resolved_sigma(K)
+    topo = Topology.simulated(K)
+    p = cfg.agg_params(K)
+    compressor = cfg.compressor()
 
     def round_fn(state: CoCoAState, X, y, mask, budget=None) -> CoCoAState:
         n = duality.effective_n(mask) if n_total is None else n_total
@@ -153,7 +178,7 @@ def make_round_vmap(cfg: CoCoAConfig, K: int,
         rngs = jax.vmap(lambda i: jax.random.fold_in(sub, i))(jnp.arange(K))
         solver = _resolve_solver(cfg.solver, isinstance(X, SparseShards))
         body = functools.partial(
-            _worker_body, loss=loss, lam=cfg.lam, n=n, sigma_p=sigma_p,
+            _worker_body, loss=loss, lam=cfg.lam, n=n, sigma_p=p.sigma_prime,
             H=cfg.H, solver=solver)
         if budget is None:
             res = jax.vmap(lambda Xk, yk, ak, mk, r: body(Xk, yk, ak, mk, state.w, r)
@@ -162,11 +187,14 @@ def make_round_vmap(cfg: CoCoAConfig, K: int,
             res = jax.vmap(lambda Xk, yk, ak, mk, r, b: body(
                 Xk, yk, ak, mk, state.w, r, budget=b)
             )(X, y, alpha_split(state.alpha, K), mask, rngs, budget)
-        dw = jnp.sum(res.du, axis=0) / sigma_p          # sum_k Delta w_k
-        alpha = state.alpha + cfg.gamma * res.dalpha
-        w = state.w + cfg.gamma * dw
+        # --- the communication step: damp, compress, reduce, apply ---
+        crngs = jax.vmap(comm.comm_rng)(rngs)
+        dw_sum, ef = comm.exchange(topo, res.du, state.ef, crngs, p,
+                                   compressor)
+        w, alpha = comm.apply_update(state.w, state.alpha, dw_sum,
+                                     res.dalpha, p)
         return CoCoAState(w, alpha, rng, state.rounds + 1,
-                          state.alpha_bar + alpha)
+                          state.alpha_bar + alpha, ef)
 
     return round_fn
 
@@ -184,69 +212,126 @@ def alpha_split(alpha, K):
 def make_round_sharded(cfg: CoCoAConfig, mesh) -> Callable[..., CoCoAState]:
     """Rounds over a mesh: K = mesh.shape[data_axis] workers.
 
-    Layouts (global -> per-shard under shard_map):
+    Layouts (global -> per-shard under shard_map), dense:
       X     (K, nk, d)  P(data, None, model?)   -> (1, nk, d_loc)
       y,mask,alpha (K, nk)  P(data, None)       -> (1, nk)
       w     (d,)        P(model?)               -> (d_loc,)
+      ef    (K, d)      P(data, model?)         -> (1, d_loc)
+    and sparse (padded-ELL SparseShards; model_axis is unsupported here
+    because ELL column ids index the global feature space):
+      cols/vals (K, nk, r_max)  P(data, None, None) -> (1, nk, r_max)
+      nnz       (K, nk)         P(data, None)       -> (1, nk)
+      w         (d,)            P()                 -> (d,) replicated
     The per-round communication is exactly one psum of w-sized shards over
-    the data axis (the paper's single-vector reduce, eq. 14).
+    the data axis (the paper's single-vector reduce, eq. 14), routed
+    through comm.exchange exactly like the vmap backend.
     """
     from jax.experimental.shard_map import shard_map
 
     loss = get_loss(cfg.loss)
-    daxes = ((cfg.data_axis,) if isinstance(cfg.data_axis, str)
-             else tuple(cfg.data_axis))
-    K = 1
-    for a in daxes:
-        K *= mesh.shape[a]
-    sigma_p = cfg.resolved_sigma(K)
+    topo = Topology.from_mesh(mesh, cfg.data_axis, cfg.model_axis)
+    K = topo.K
+    p = cfg.agg_params(K)
+    compressor = cfg.compressor()
     mspec = cfg.model_axis  # None -> replicated features
-    dspec = daxes[0] if len(daxes) == 1 else daxes
 
-    def per_shard(w, X, y, alpha, mask, rng, n, rounds, alpha_bar, sqn):
-        # shapes: w (d_loc,), X (1, nk, d_loc), y/alpha/mask (1, nk)
-        Xk, yk, ak, mk = X[0], y[0], alpha[0], mask[0]
-        # fold the worker index into the rng so workers de-correlate
-        widx = jnp.zeros((), jnp.int32)
-        for a in daxes:
-            widx = widx * mesh.shape[a] + jax.lax.axis_index(a)
-        rngk = jax.random.fold_in(rng, widx)
+    def _per_worker(w, Xk, yk, ak, mk, efk, rng, n, sqn_k, solver):
+        # fold the worker index into the rng so workers de-correlate (and
+        # match the vmap backend's fold_in(sub, k) stream exactly)
+        rngk = jax.random.fold_in(rng, topo.worker_index())
         res = _worker_body(Xk, yk, ak, mk, w, rngk, loss=loss, lam=cfg.lam,
-                           n=n, sigma_p=sigma_p, H=cfg.H, solver=cfg.solver,
-                           sqnorms=sqn[0] if sqn is not None else None)
+                           n=n, sigma_p=p.sigma_prime, H=cfg.H, solver=solver,
+                           sqnorms=sqn_k)
         # --- the one communicated vector per round per worker ---
-        dw = jax.lax.psum(res.du, daxes) / sigma_p
-        alpha_new = alpha + cfg.gamma * res.dalpha[None]
-        w_new = w + cfg.gamma * dw
-        return w_new, alpha_new, rounds + 1, alpha_bar + alpha_new
+        dw_sum, ef_new = comm.exchange(topo, res.du, efk, comm.comm_rng(rngk),
+                                       p, compressor)
+        return res, dw_sum, ef_new
 
-    wspec = P(mspec) if mspec else P()
-    in_specs = (wspec,                         # w
-                P(dspec, None, mspec),         # X
-                P(dspec, None),                # y
-                P(dspec, None),                # alpha
-                P(dspec, None),                # mask
-                P(), P(), P(), P(dspec, None),
-                P(dspec, None))                # sqnorms
-    out_specs = (wspec, P(dspec, None), P(), P(dspec, None))
+    def _build_dense():
+        solver = _resolve_solver(cfg.solver, sparse=False)
 
-    sharded = shard_map(per_shard, mesh=mesh, in_specs=in_specs,
-                        out_specs=out_specs, check_rep=False)
+        def per_shard(w, X, y, alpha, mask, ef, rng, n, rounds, alpha_bar,
+                      sqn):
+            # shapes: w (d_loc,), X (1, nk, d_loc), y/alpha/mask (1, nk)
+            res, dw_sum, ef_new = _per_worker(
+                w, X[0], y[0], alpha[0], mask[0], ef[0], rng, n, sqn[0],
+                solver)
+            w_new, alpha_new = comm.apply_update(w, alpha, dw_sum,
+                                                 res.dalpha[None], p)
+            return (w_new, alpha_new, rounds + 1, alpha_bar + alpha_new,
+                    ef_new[None])
+
+        in_specs = (topo.w_spec(),                 # w
+                    topo.row_spec(None, mspec),    # X
+                    topo.row_spec(None),           # y
+                    topo.row_spec(None),           # alpha
+                    topo.row_spec(None),           # mask
+                    topo.row_spec(mspec),          # ef
+                    P(), P(), P(),                 # rng, n, rounds
+                    topo.row_spec(None),           # alpha_bar
+                    topo.row_spec(None))           # sqnorms
+        out_specs = (topo.w_spec(), topo.row_spec(None), P(),
+                     topo.row_spec(None), topo.row_spec(mspec))
+        return shard_map(per_shard, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=False)
+
+    def _build_sparse():
+        if cfg.model_axis is not None:
+            raise ValueError(
+                "model_axis feature sharding is not supported for "
+                "SparseShards inputs: padded-ELL column ids index the "
+                "global feature space, so w must stay replicated")
+        solver = _resolve_solver(cfg.solver, sparse=True)
+
+        def per_shard(w, cols, vals, nnz, y, alpha, mask, ef, rng, n, rounds,
+                      alpha_bar):
+            # shapes: w (d,) replicated, cols/vals (1, nk, r_max),
+            # nnz/y/alpha/mask (1, nk), ef (1, d)
+            shard = SparseShards(cols[0], vals[0], nnz[0], d=w.shape[0])
+            res, dw_sum, ef_new = _per_worker(
+                w, shard, y[0], alpha[0], mask[0], ef[0], rng, n, None,
+                solver)
+            w_new, alpha_new = comm.apply_update(w, alpha, dw_sum,
+                                                 res.dalpha[None], p)
+            return (w_new, alpha_new, rounds + 1, alpha_bar + alpha_new,
+                    ef_new[None])
+
+        in_specs = (P(),                           # w (replicated)
+                    topo.row_spec(None, None),     # cols
+                    topo.row_spec(None, None),     # vals
+                    topo.row_spec(None),           # nnz
+                    topo.row_spec(None),           # y
+                    topo.row_spec(None),           # alpha
+                    topo.row_spec(None),           # mask
+                    topo.row_spec(None),           # ef
+                    P(), P(), P(),                 # rng, n, rounds
+                    topo.row_spec(None))           # alpha_bar
+        out_specs = (P(), topo.row_spec(None), P(), topo.row_spec(None),
+                     topo.row_spec(None))
+        return shard_map(per_shard, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=False)
+
+    built = {}
 
     def round_fn(state: CoCoAState, X, y, mask, n=None,
                  sqnorms=None) -> CoCoAState:
-        if isinstance(X, SparseShards):
-            raise NotImplementedError(
-                "SparseShards inputs currently run on the vmap backend; "
-                "shard_map sparse execution is a ROADMAP item")
         n_ = duality.effective_n(mask) if n is None else n
-        if sqnorms is None:
-            sqnorms = jnp.sum(X * X, axis=-1) * mask
         rng, sub = jax.random.split(state.rng)
-        w, alpha, rounds, abar = sharded(state.w, X, y, state.alpha, mask, sub,
-                                         n_, state.rounds, state.alpha_bar,
-                                         sqnorms)
-        return CoCoAState(w, alpha, rng, rounds, abar)
+        if isinstance(X, SparseShards):
+            if "sparse" not in built:
+                built["sparse"] = _build_sparse()
+            w, alpha, rounds, abar, ef = built["sparse"](
+                state.w, X.cols, X.vals, X.nnz, y, state.alpha, mask,
+                state.ef, sub, n_, state.rounds, state.alpha_bar)
+        else:
+            if sqnorms is None:
+                sqnorms = jnp.sum(X * X, axis=-1) * mask
+            if "dense" not in built:
+                built["dense"] = _build_dense()
+            w, alpha, rounds, abar, ef = built["dense"](
+                state.w, X, y, state.alpha, mask, state.ef, sub, n_,
+                state.rounds, state.alpha_bar, sqnorms)
+        return CoCoAState(w, alpha, rng, rounds, abar, ef)
 
     return round_fn
 
@@ -257,7 +342,8 @@ def make_round_sharded(cfg: CoCoAConfig, mesh) -> Callable[..., CoCoAState]:
 
 class SolveResult(NamedTuple):
     state: CoCoAState
-    history: dict   # lists: round, gap, primal, dual, comm_vectors, comm_floats
+    history: dict   # lists: round, gap, primal, dual, comm_vectors,
+                    # comm_floats, comm_bytes, comm_psums
 
 
 def solve(cfg: CoCoAConfig, X, y, mask, *, rounds: int, eps_gap: float = 0.0,
@@ -266,14 +352,12 @@ def solve(cfg: CoCoAConfig, X, y, mask, *, rounds: int, eps_gap: float = 0.0,
           state: Optional[CoCoAState] = None) -> SolveResult:
     """Run CoCoA+/CoCoA until `rounds` or duality gap <= eps_gap.
 
-    `X` is a dense (K, nk, d) array or a data.sparse.SparseShards (vmap
-    backend only). `on_round(t, state, gap)` is the checkpoint/telemetry
-    hook. `budget_fn(t) -> (K,) int array` enables deadline-budgeted solving.
+    `X` is a dense (K, nk, d) array or a data.sparse.SparseShards (either
+    backend). `on_round(t, state, gap)` is the checkpoint/telemetry hook.
+    `budget_fn(t) -> (K,) int array` enables deadline-budgeted solving
+    (vmap backend).
     """
     if isinstance(X, SparseShards):
-        if cfg.backend != "vmap":
-            raise NotImplementedError(
-                "SparseShards inputs currently run on the vmap backend")
         K, nk = X.cols.shape[:2]
         d = X.d
         dtype = X.vals.dtype
@@ -286,24 +370,32 @@ def solve(cfg: CoCoAConfig, X, y, mask, *, rounds: int, eps_gap: float = 0.0,
 
     if cfg.backend == "shard_map":
         assert mesh is not None, "shard_map backend needs a mesh"
+        topo = Topology.from_mesh(mesh, cfg.data_axis, cfg.model_axis)
         round_fn = jax.jit(make_round_sharded(cfg, mesh))
     else:
+        topo = Topology.simulated(K)
         round_fn = jax.jit(make_round_vmap(cfg, K))
 
-    gap_fn = jax.jit(functools.partial(
-        duality.gap_decomposed, loss=loss, lam=cfg.lam))
+    compressed = cfg.compress not in (None, "none", "")
+    if compressed:
+        # with lossy messages w drifts from w(alpha); certify the w the
+        # algorithm actually carries (still >= D by weak duality)
+        gap_fn = jax.jit(functools.partial(
+            duality.gap_at_w, loss=loss, lam=cfg.lam))
+    else:
+        gap_fn = jax.jit(functools.partial(
+            duality.gap_decomposed, loss=loss, lam=cfg.lam))
 
-    # per-round communication: each worker reduces one w-shard per round.
-    # Under a 2-D (data, model) mesh the feature axis is sharded, so each
-    # worker moves d / |model| floats, not d -- account in floats so Fig-2
-    # communication claims stay honest under tensor sharding.
-    d_local = d
-    if (cfg.model_axis is not None and mesh is not None
-            and cfg.model_axis in dict(getattr(mesh, "shape", {}))):
-        d_local = -(-d // mesh.shape[cfg.model_axis])
+    # per-round communication accounting: each worker reduces one (possibly
+    # compressed) w-shard per round; feature sharding divides the dense
+    # message length (comm.tracer holds the wire model -- Fig-2 claims stay
+    # honest under tensor sharding AND compression)
+    tracer = comm.CommTracer.for_run(K=K, d_local=topo.d_local(d),
+                                     compressor=cfg.compressor())
 
     hist = {"round": [], "gap": [], "primal": [], "dual": [],
-            "comm_vectors": [], "comm_floats": []}
+            "comm_vectors": [], "comm_floats": [], "comm_bytes": [],
+            "comm_psums": []}
     gap = float("inf")
     for t in range(rounds):
         if cfg.backend == "shard_map":
@@ -312,18 +404,22 @@ def solve(cfg: CoCoAConfig, X, y, mask, *, rounds: int, eps_gap: float = 0.0,
             state = round_fn(state, X, y, mask, budget_fn(t))
         else:
             state = round_fn(state, X, y, mask)
+        tracer.tick()
         if (t + 1) % gap_every == 0 or t == rounds - 1:
             alpha_eval = state.alpha
             if cfg.average_iterates:
                 alpha_eval = state.alpha_bar / jnp.maximum(state.rounds, 1)
-            p, dval, g = gap_fn(alpha_eval, X, y, mask)
+            if compressed:
+                pval, dval, g = gap_fn(state.w, alpha_eval, X, y, mask)
+            else:
+                pval, dval, g = gap_fn(alpha_eval, X, y, mask)
             gap = float(g)
             hist["round"].append(t + 1)
             hist["gap"].append(gap)
-            hist["primal"].append(float(p))
+            hist["primal"].append(float(pval))
             hist["dual"].append(float(dval))
-            hist["comm_vectors"].append((t + 1) * K)   # one w-shard per worker-round
-            hist["comm_floats"].append((t + 1) * K * d_local)
+            for key, val in tracer.totals().items():
+                hist[key].append(val)
             if on_round is not None:
                 on_round(t + 1, state, gap)
             if gap <= eps_gap:

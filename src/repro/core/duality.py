@@ -75,6 +75,19 @@ def gap_decomposed(alpha, X, y, mask, loss, lam):
     return p, d, p - d
 
 
+def gap_at_w(w, alpha, X, y, mask, loss, lam):
+    """(P(w), D(alpha), P(w) - D(alpha)) for an arbitrary primal iterate.
+
+    Under compressed communication (comm.compress with error feedback) the
+    algorithm's shared w drifts from w(alpha) -- only the exact duals are
+    aggregated, the wire carries a lossy Delta w. Weak duality still gives
+    P(w) >= P(w*) >= D(alpha) for ANY w, so certifying the w the algorithm
+    actually serves stays a valid (if slightly larger) gap certificate."""
+    p = primal(w, X, y, mask, loss, lam)
+    d = dual(alpha, X, y, mask, loss, lam)
+    return p, d, p - d
+
+
 def u_vector(w: jnp.ndarray, X, y: jnp.ndarray, loss: Loss) -> jnp.ndarray:
     """u with -u_i in d l_i(x_i^T w)  (eq. 17) -- used in Lemma-5 style tests."""
     z = _Atw(X, w)

@@ -17,6 +17,17 @@ import jax
 import jax.numpy as jnp
 
 
+def lemma3_safe_sigma(gamma: float, K: int) -> float:
+    """The Lemma-3/4 safe subproblem bound sigma' = gamma * K.
+
+    Always >= sigma'_min (eq. 11) for any data partition, so any
+    (gamma, gamma*K) pair converges; `sigma_prime_min` below measures how
+    loose it is on actual data. This is the single formula the
+    comm.aggregate strategies (add: gamma=1 -> sigma'=K; gamma-interpolated)
+    build their pairs from."""
+    return float(gamma) * K
+
+
 def sigma_k(X: jnp.ndarray, mask: jnp.ndarray, iters: int = 50,
             seed: int = 0) -> jnp.ndarray:
     """Per-worker top squared singular value. X: (K, nk, d) -> (K,)."""

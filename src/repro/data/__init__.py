@@ -1,5 +1,5 @@
 from .synthetic import (DATASETS, load, make_classification,
                         make_regression, partition)
-from .sparse import (CSRMatrix, SparseShards, csr_to_ell, ell_to_csr,
-                     densify, load_libsvm, make_sparse_classification,
-                     partition_sparse)
+from .sparse import (CSRMatrix, SparseShards, csr_to_ell, csr_vstack,
+                     densify, ell_to_csr, iter_libsvm_chunks, load_libsvm,
+                     make_sparse_classification, partition_sparse)

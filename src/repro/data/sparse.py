@@ -68,27 +68,56 @@ class CSRMatrix(NamedTuple):
         return out
 
 
-def load_libsvm(source: Union[str, pathlib.Path, Iterable[str]], *,
-                n_features: Optional[int] = None,
-                zero_based: bool = False) -> Tuple[CSRMatrix, np.ndarray]:
-    """Parse LIBSVM-format text: ``<label> <idx>:<val> <idx>:<val> ...``.
-
-    `source` is a path or an iterable of lines. Indices are 1-based by
-    default (the LIBSVM convention); '#' starts a comment. Columns are
-    sorted within each row. Returns (CSRMatrix, labels float32).
-    """
+def _iter_source_lines(source: Union[str, pathlib.Path, Iterable[str]]
+                       ) -> Iterable[str]:
+    """Lazily yield lines: a path streams through open() (never holding the
+    file in memory -- url/webspam-sized inputs), an iterable passes through."""
     if isinstance(source, (str, pathlib.Path)):
-        lines: Iterable[str] = pathlib.Path(source).read_text().splitlines()
+        with open(source, "r") as f:
+            yield from f
     else:
-        lines = source
+        yield from source
+
+
+def iter_libsvm_chunks(source: Union[str, pathlib.Path, Iterable[str]], *,
+                       chunk_rows: int,
+                       n_features: Optional[int] = None,
+                       zero_based: bool = False
+                       ) -> Iterable[Tuple[CSRMatrix, np.ndarray]]:
+    """Stream LIBSVM text as (CSRMatrix, labels) blocks of <= chunk_rows rows.
+
+    Memory stays O(chunk nnz) regardless of file size -- the ingest path for
+    datasets that don't fit as one parse (ROADMAP real-dataset item). Pass
+    `n_features` for a stable column count across chunks; without it each
+    chunk's width is its own max index + 1 (`load_libsvm` widens to the
+    global max when it stitches chunks back together).
+    """
+    if chunk_rows < 1:
+        raise ValueError(f"chunk_rows must be >= 1, got {chunk_rows}")
     off = 0 if zero_based else 1
     labels, data, indices, indptr = [], [], [], [0]
-    for line in lines:
+    row_no = 0   # global data-row count, for error messages across chunks
+
+    def flush():
+        top = int(max(indices)) + 1 if indices else 0
+        d = n_features if n_features is not None else top
+        if top > d:
+            # reject here: the jnp gather path would silently clamp the index
+            raise ValueError(f"feature index {top - 1} out of range for "
+                             f"n_features={d}")
+        csr = CSRMatrix(np.asarray(data, np.float32),
+                        np.asarray(indices, np.int32),
+                        np.asarray(indptr, np.int64),
+                        (len(labels), d))
+        return csr, np.asarray(labels, np.float32)
+
+    for line in _iter_source_lines(source):
         line = line.split("#", 1)[0].strip()
         if not line:
             continue
         parts = line.split()
         labels.append(float(parts[0]))
+        row_no += 1
         row = []
         for tok in parts[1:]:
             i, v = tok.split(":")
@@ -101,21 +130,62 @@ def load_libsvm(source: Union[str, pathlib.Path, Iterable[str]], *,
         for (a, _), (b, _) in zip(row, row[1:]):
             if a == b:
                 raise ValueError(f"duplicate feature index {a + off} on "
-                                 f"line {len(labels)}")
+                                 f"line {row_no}")
         indices.extend(i for i, _ in row)
         data.extend(v for _, v in row)
         indptr.append(len(indices))
-    top = int(max(indices)) + 1 if indices else 0
-    d = n_features if n_features is not None else top
-    if top > d:
-        # reject here: the jnp gather path would silently clamp the index
-        raise ValueError(f"feature index {top - 1} out of range for "
-                         f"n_features={d}")
-    csr = CSRMatrix(np.asarray(data, np.float32),
-                    np.asarray(indices, np.int32),
-                    np.asarray(indptr, np.int64),
-                    (len(labels), d))
-    return csr, np.asarray(labels, np.float32)
+        if len(labels) == chunk_rows:
+            yield flush()
+            labels, data, indices, indptr = [], [], [], [0]
+    if labels or row_no == 0:     # trailing partial chunk, or empty input
+        yield flush()
+
+
+def csr_vstack(blocks: Iterable[CSRMatrix],
+               d: Optional[int] = None) -> CSRMatrix:
+    """Stack CSR blocks row-wise. `d` defaults to the widest block (chunked
+    parses without n_features infer width per chunk)."""
+    blocks = list(blocks)
+    if not blocks:
+        raise ValueError("csr_vstack needs at least one block")
+    d = max(b.shape[1] for b in blocks) if d is None else d
+    for b in blocks:
+        if b.shape[1] > d:
+            raise ValueError(f"block width {b.shape[1]} exceeds d={d}")
+    indptr = [np.asarray([0], np.int64)]
+    base = 0
+    for b in blocks:
+        indptr.append(b.indptr[1:] + base)
+        base += b.nnz
+    return CSRMatrix(np.concatenate([b.data for b in blocks]),
+                     np.concatenate([b.indices for b in blocks]),
+                     np.concatenate(indptr),
+                     (sum(b.shape[0] for b in blocks), d))
+
+
+def load_libsvm(source: Union[str, pathlib.Path, Iterable[str]], *,
+                n_features: Optional[int] = None,
+                zero_based: bool = False,
+                chunk_rows: Optional[int] = None
+                ) -> Tuple[CSRMatrix, np.ndarray]:
+    """Parse LIBSVM-format text: ``<label> <idx>:<val> <idx>:<val> ...``.
+
+    `source` is a path or an iterable of lines. Indices are 1-based by
+    default (the LIBSVM convention); '#' starts a comment. Columns are
+    sorted within each row. Returns (CSRMatrix, labels float32).
+
+    `chunk_rows` streams the parse in CSR blocks of that many rows instead
+    of materializing all parsed rows at once (same result, bounded python
+    list overhead); use `iter_libsvm_chunks` directly to keep even the
+    stitched CSR from materializing.
+    """
+    chunks = list(iter_libsvm_chunks(
+        source, chunk_rows=chunk_rows if chunk_rows is not None else 2**62,
+        n_features=n_features, zero_based=zero_based))
+    labels = np.concatenate([y for _, y in chunks])
+    if len(chunks) == 1:
+        return chunks[0][0], labels
+    return csr_vstack([c for c, _ in chunks], d=n_features), labels
 
 
 # ----------------------------------------------------------------------------

@@ -11,10 +11,18 @@ elastic re-partitioning).
     PYTHONPATH=src python -m repro.launch.cocoa_train \
         --dataset rcv1_sparse --format sparse --workers 16 --rounds 40
 
+    # compressed communication: top-64 sparsified Delta w with error
+    # feedback -- the tracer reports actual floats on the wire per round
+    PYTHONPATH=src python -m repro.launch.cocoa_train \
+        --dataset rcv1_sparse --workers 16 --rounds 40 \
+        --compress topk --compress-k 64
+
 On a real TPU mesh pass --backend shard_map (workers = data-axis shards);
-the default vmap backend simulates any K on one device with identical math.
---format auto picks the layout from the dataset spec; sparse runs execute
-on the vmap backend with the sdca_sparse / sdca_sparse_kernel solvers.
+the default vmap backend simulates any K on one device with identical
+math. Both layouts run on both backends (sparse = per-device padded-ELL
+shards + one psum of w-sized shards per round). --format auto picks the
+layout from the dataset spec; --aggregator {add,avg,gamma:<g>} picks the
+repro.comm aggregation strategy (overriding the legacy --gamma switch).
 """
 from __future__ import annotations
 
@@ -25,6 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import comm
 from repro.checkpoint import CheckpointManager
 from repro.core import CoCoAConfig, duality, solve
 from repro.core.cocoa import CoCoAState, init_state
@@ -44,6 +53,14 @@ def main():
     ap.add_argument("--rounds", type=int, default=60)
     ap.add_argument("--eps", type=float, default=1e-3)
     ap.add_argument("--gamma", choices=["add", "avg"], default="add")
+    ap.add_argument("--aggregator", default="",
+                    help="comm aggregation strategy: add | avg | gamma:<g> "
+                         "(overrides --gamma when set)")
+    ap.add_argument("--compress", default="none",
+                    choices=["none", "topk", "randk", "qsgd", "int8"],
+                    help="wire compression for Delta w_k (error feedback)")
+    ap.add_argument("--compress-k", type=int, default=64,
+                    help="kept coordinates for --compress topk/randk")
     ap.add_argument("--solver", default="sdca",
                     choices=["sdca", "sdca_kernel", "sdca_sparse",
                              "sdca_sparse_kernel", "gd", "sdca_deadline"])
@@ -69,8 +86,6 @@ def main():
         if spec.format != "sparse":
             raise SystemExit(f"--format sparse needs a sparse dataset spec; "
                              f"{args.dataset!r} is {spec.format}")
-        if args.backend != "vmap":
-            raise SystemExit("sparse runs currently use --backend vmap")
         csr, y = load(args.dataset)
         Xp, yp, mk = partition_sparse(csr, y, K, seed=0)
         print(f"sparse shards: nnz/row r_max={Xp.r_max} "
@@ -83,9 +98,16 @@ def main():
         Xp, yp, mk = partition(X, y, K, seed=0)
 
     mk_cfg = dict(loss=args.loss, lam=args.lam, H=args.H, solver=args.solver,
-                  backend=args.backend)
-    cfg = (CoCoAConfig.adding(K, **mk_cfg) if args.gamma == "add"
-           else CoCoAConfig.averaging(K, **mk_cfg))
+                  backend=args.backend, compress=args.compress,
+                  compress_k=args.compress_k)
+
+    def make_cfg(K):
+        if args.aggregator:
+            return CoCoAConfig(aggregator=args.aggregator, **mk_cfg)
+        return (CoCoAConfig.adding(K, **mk_cfg) if args.gamma == "add"
+                else CoCoAConfig.averaging(K, **mk_cfg))
+
+    cfg = make_cfg(K)
     mesh = None
     if args.backend == "shard_map":
         mesh = jax.make_mesh((K,), ("data",))
@@ -100,7 +122,15 @@ def main():
     state = init_state(d_dim, K, nk_dim)
     start = 0
     if mgr and mgr.latest_step():
-        loaded, man = mgr.restore(state._asdict())
+        tmpl = state._asdict()
+        try:
+            loaded, man = mgr.restore(tmpl)
+        except KeyError:
+            # checkpoint predates the comm subsystem (no 'ef' leaf):
+            # restore the old layout, start with zero EF residuals
+            tmpl.pop("ef")
+            loaded, man = mgr.restore(tmpl)
+            loaded["ef"] = state.ef
         state = CoCoAState(**loaded)
         start = man["step"]
         print(f"resumed from round {start}")
@@ -135,7 +165,9 @@ def main():
         state = r.state
         done += r.history["round"][-1] if r.history["round"] else stop - done
         gap = r.history["gap"][-1] if r.history["gap"] else float("inf")
-        print(f"round {done}: gap={gap:.3e}")
+        fl = (r.history["comm_floats"][-1] // r.history["round"][-1]
+              if r.history["round"] else 0)
+        print(f"round {done}: gap={gap:.3e} comm={fl} floats/round")
         if gap <= args.eps:
             break
         if done == args.simulate_failure and args.simulate_failure:
@@ -144,6 +176,12 @@ def main():
             args.simulate_failure = 0
         if done == el_round and el_K:
             print(f"elastic re-partition {K} -> {el_K} workers")
+            if args.compress != "none":
+                # every worker is alive here (unlike drop_worker): flush the
+                # outstanding EF debt into w before the per-worker residual
+                # state is rebuilt at the new K, so no update mass is lost
+                state = state._replace(w=comm.flush_ef(
+                    state.w, state.ef, cfg.agg_params(K)))
             if isinstance(Xp, SparseShards):
                 # every leaf shares the (K, nk) leading layout, so the ELL
                 # shards re-split exactly like dense rows (alpha travels too)
@@ -157,8 +195,7 @@ def main():
                 new, mk = elastic.repartition(arrs, mk, el_K)
                 Xp, yp = new["X"], new["y"]
             K = el_K
-            cfg = (CoCoAConfig.adding(K, **mk_cfg) if args.gamma == "add"
-                   else CoCoAConfig.averaging(K, **mk_cfg))
+            cfg = make_cfg(K)
             d_dim, nk_dim = dims(Xp)
             st = init_state(d_dim, K, nk_dim)
             state = st._replace(alpha=new["alpha"], w=state.w,
@@ -167,9 +204,22 @@ def main():
 
     if mgr:
         mgr.wait()
-    p, d, g = duality.gap_decomposed(state.alpha, Xp, yp, mk, loss, args.lam)
+    if args.compress != "none":
+        # lossy wire: certify the w the algorithm actually carries
+        p, d, g = duality.gap_at_w(state.w, state.alpha, Xp, yp, mk, loss,
+                                   args.lam)
+    else:
+        p, d, g = duality.gap_decomposed(state.alpha, Xp, yp, mk, loss,
+                                         args.lam)
     print(f"final: P={float(p):.6f} D={float(d):.6f} gap={float(g):.3e} "
           f"(certificate: primal suboptimality <= gap)")
+    pr = comm.CommTracer.for_run(K=K, d_local=d_dim,
+                                 compressor=cfg.compressor()).per_round()
+    dense_floats = K * d_dim
+    print(f"comm: {pr['floats']} floats/round "
+          f"({pr['bytes']} bytes, {pr['psums']} psum) -- "
+          f"{dense_floats / max(pr['floats'], 1):.1f}x cut vs uncompressed "
+          f"{dense_floats}")
 
 
 if __name__ == "__main__":

@@ -208,15 +208,15 @@ def run_paper_cell(mesh_name: str, outdir: pathlib.Path) -> dict:
     f32, i32 = jnp.float32, jnp.int32
     sds = jax.ShapeDtypeStruct
     state = (sds((d,), f32), sds((K, nk), f32), sds((2,), jnp.uint32),
-             sds((), i32), sds((K, nk), f32))
+             sds((), i32), sds((K, nk), f32), sds((K, d), f32))
     X = sds((K, nk, d), f32)
     y = sds((K, nk), f32)
     mask = sds((K, nk), f32)
 
     round_fn = make_round_sharded(cfg, mesh)
 
-    def step(w, alpha, rng, rounds, abar, X, y, mask):
-        st = CoCoAState(w, alpha, rng, rounds, abar)
+    def step(w, alpha, rng, rounds, abar, ef, X, y, mask):
+        st = CoCoAState(w, alpha, rng, rounds, abar, ef)
         st2 = round_fn(st, X, y, mask, n=float(W.n))
         return st2.w, st2.alpha, st2.rounds
 

@@ -1,69 +1,12 @@
-"""Update compression for the aggregation step (optional; exact mode is the
-paper). Both schemes carry error feedback so compression error accumulates
-into the next round instead of being lost.
+"""Re-export shim: update compression moved to `repro.comm.compress`.
 
-  top-k: keep the largest-|v| fraction, zero the rest.
-  int8 : per-tensor symmetric quantization.
-
-Used by CoCoA+ (compress Delta w_k before the reduce) and CoCoA-DP
-(compress parameter deltas). Wire-byte savings: top-k frac f -> ~f*(4+4)/4 of
-dense f32 (values+indices); int8 -> 1/4.
+The pytree error-feedback API (`EFState`/`ef_init`/`compress`/
+`compressed_bytes`) used by CoCoA-DP (`optim.localdp`) lives there now,
+alongside the per-worker vector compressors (top-k / rand-k / stochastic
+quantization) the CoCoA comm pipeline uses. Import from `repro.comm`
+going forward.
 """
-from __future__ import annotations
+from repro.comm.compress import (EFState, compress, compressed_bytes,
+                                 ef_init)
 
-from typing import NamedTuple, Optional
-
-import jax
-import jax.numpy as jnp
-
-
-class EFState(NamedTuple):
-    residual: object      # pytree matching the compressed tree
-
-
-def ef_init(tree) -> EFState:
-    return EFState(jax.tree.map(lambda x: jnp.zeros_like(x), tree))
-
-
-def _topk_one(x, frac: float):
-    flat = x.reshape(-1)
-    k = max(1, int(frac * flat.size))
-    thresh = jnp.sort(jnp.abs(flat))[-k]
-    kept = jnp.where(jnp.abs(flat) >= thresh, flat, 0.0)
-    return kept.reshape(x.shape)
-
-
-def _int8_one(x):
-    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
-    q = jnp.clip(jnp.round(x / scale), -127, 127)
-    return q * scale
-
-
-def compress(tree, ef: Optional[EFState], method: str):
-    """Returns (compressed_tree, new_ef). method: "none"|"int8"|"topk:<f>"."""
-    if method in (None, "none"):
-        return tree, ef
-    if ef is None:
-        ef = ef_init(tree)
-    corrected = jax.tree.map(lambda g, r: g + r, tree, ef.residual)
-    if method == "int8":
-        comp = jax.tree.map(_int8_one, corrected)
-    elif method.startswith("topk:"):
-        frac = float(method.split(":")[1])
-        comp = jax.tree.map(lambda x: _topk_one(x, frac), corrected)
-    else:
-        raise ValueError(method)
-    new_res = jax.tree.map(lambda c, x: x - c, comp, corrected)
-    return comp, EFState(new_res)
-
-
-def compressed_bytes(tree, method: str) -> int:
-    n = sum(l.size for l in jax.tree.leaves(tree))
-    if method in (None, "none"):
-        return 4 * n
-    if method == "int8":
-        return n
-    if method.startswith("topk:"):
-        frac = float(method.split(":")[1])
-        return int(frac * n * 8)      # value + index
-    raise ValueError(method)
+__all__ = ["EFState", "compress", "compressed_bytes", "ef_init"]

@@ -19,10 +19,15 @@ from repro.core.cocoa import CoCoAState
 
 
 def drop_worker(state: CoCoAState, k: int) -> CoCoAState:
-    """Zero worker k's duals (its machine died and lost local state)."""
+    """Zero worker k's duals (its machine died and lost local state).
+
+    The error-feedback residual dies with the machine too: it is
+    uncommunicated local compression debt, and zeroing it is always safe
+    (EF residuals only affect future messages, never dual feasibility)."""
     alpha = state.alpha.at[k].set(0.0)
     bar = state.alpha_bar.at[k].set(0.0)
-    return state._replace(alpha=alpha, alpha_bar=bar)
+    ef = state.ef.at[k].set(0.0)
+    return state._replace(alpha=alpha, alpha_bar=bar, ef=ef)
 
 
 def recover_consistent_w(state: CoCoAState, X, mask, lam: float) -> CoCoAState:

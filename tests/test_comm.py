@@ -1,0 +1,338 @@
+"""Communication subsystem: aggregator (gamma, sigma') strategies vs the
+paper's safe bounds, wire compressors with error feedback, the comm tracer's
+floats-on-the-wire accounting, and the gap certificate under compressed w."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import comm
+from repro.comm import aggregate, compress, topology, tracer
+from repro.core import CoCoAConfig, duality, sigma, solve
+from repro.core.losses import get_loss
+from repro.data import make_classification, partition
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                     # vendored deterministic fallback
+    from _hypothesis_stub import given, settings, st
+
+
+@pytest.fixture(scope="module")
+def problem():
+    X, y = make_classification(768, 64, seed=0)
+    return partition(X, y, 4, seed=1)
+
+
+# ----------------------------------------------------------------------------
+# aggregator strategies: the paper's (gamma, sigma') pairs
+# ----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("K", [2, 4, 8, 16])
+def test_add_and_average_reproduce_paper_pairs(K):
+    """add: gamma=1, sigma'=K (Lemma 4); average: gamma=1/K, sigma'=1
+    (Remark 12). These are the exact pairs core.sigma's Lemma-3 bound
+    generates at the two endpoints."""
+    assert aggregate.Add().params(K) == (1.0, float(K))
+    assert aggregate.Add().params(K).sigma_prime == \
+        sigma.lemma3_safe_sigma(1.0, K)
+    g, sp = aggregate.Average().params(K)
+    assert g == 1.0 / K and sp == 1.0
+
+
+@pytest.mark.parametrize("K", [2, 4, 8])
+def test_gamma_interpolation_exact_at_endpoints(K):
+    """gamma:1 IS add, gamma:1/K IS average -- exactly, not approximately
+    (power-of-two K keeps 1/K * K == 1.0 exact in f32/f64)."""
+    assert aggregate.resolve("gamma:1.0").params(K) == \
+        aggregate.Add().params(K)
+    lo = aggregate.GammaInterp(1.0 / K).params(K)
+    assert lo.gamma == 1.0 / K
+    assert lo.sigma_prime == 1.0 == aggregate.Average().params(K).sigma_prime
+
+
+def test_aggregator_resolve_and_validation():
+    assert isinstance(aggregate.resolve("add"), aggregate.Add)
+    assert isinstance(aggregate.resolve("avg"), aggregate.Average)
+    assert isinstance(aggregate.resolve("average"), aggregate.Average)
+    assert aggregate.resolve("gamma:0.5").params(4) == (0.5, 2.0)
+    with pytest.raises(ValueError):
+        aggregate.resolve("median")
+    with pytest.raises(ValueError):
+        aggregate.GammaInterp(0.0)
+    with pytest.raises(ValueError):
+        aggregate.GammaInterp(1.5)
+
+
+def test_config_agg_params_matches_classmethods():
+    K = 8
+    assert CoCoAConfig.adding(K).agg_params(K) == \
+        CoCoAConfig(aggregator="add").agg_params(K)
+    assert CoCoAConfig.averaging(K).agg_params(K) == \
+        CoCoAConfig(aggregator="average").agg_params(K)
+    # explicit pair with sigma_p=None resolves to the safe bound
+    assert CoCoAConfig(gamma=0.5).agg_params(K) == (0.5, 4.0)
+
+
+def test_named_aggregator_solve_matches_classmethod(problem):
+    """solve() with aggregator="add" is the same algorithm as
+    CoCoAConfig.adding -- identical gap history (same rng stream)."""
+    Xp, yp, mk = problem
+    kw = dict(loss="hinge", lam=1e-3, H=64)
+    r1 = solve(CoCoAConfig.adding(4, **kw), Xp, yp, mk, rounds=3,
+               gap_every=1, seed=7)
+    r2 = solve(CoCoAConfig(aggregator="add", **kw), Xp, yp, mk, rounds=3,
+               gap_every=1, seed=7)
+    assert r1.history["gap"] == r2.history["gap"]
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(2, 6), st.floats(0.2, 1.0))
+def test_lemma3_safe_bound_dominates_sigma_prime_min(K, gamma):
+    """Property (Lemma 3/4): the strategies' sigma' = gamma*K is always a
+    valid subproblem bound, i.e. >= the data-optimal sigma'_min (eq. 11),
+    for any partition and any gamma in (0, 1]."""
+    X, y = make_classification(96, 16, seed=K * 7)
+    Xp, _, mk = partition(X, y, K, seed=K)
+    smin, safe, holds = sigma.check_lemma4(Xp, mk, gamma, iters=100)
+    assert float(safe) == pytest.approx(
+        aggregate.GammaInterp(gamma).params(K).sigma_prime, rel=1e-6)
+    assert holds, (float(smin), float(safe))
+
+
+def test_apply_update_is_algorithm1_line9():
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.standard_normal(16).astype(np.float32))
+    alpha = jnp.asarray(rng.standard_normal((4, 8)).astype(np.float32))
+    dw = jnp.asarray(rng.standard_normal(16).astype(np.float32))
+    da = jnp.asarray(rng.standard_normal((4, 8)).astype(np.float32))
+    p = aggregate.AggParams(0.25, 4.0)
+    w2, a2 = aggregate.apply_update(w, alpha, dw, da, p)
+    np.testing.assert_allclose(np.asarray(w2), np.asarray(w + 0.25 * dw))
+    np.testing.assert_allclose(np.asarray(a2), np.asarray(alpha + 0.25 * da))
+
+
+def test_exchange_uncompressed_is_damped_sum():
+    """exchange == sum_k du_k / sigma' on the simulated topology (the
+    paper's exact reduce) when no compressor is attached."""
+    rng = np.random.default_rng(1)
+    K, d = 4, 32
+    du = jnp.asarray(rng.standard_normal((K, d)).astype(np.float32))
+    ef = comm.init_residual(K, d)
+    rngs = jax.random.split(jax.random.PRNGKey(0), K)
+    topo = topology.Topology.simulated(K)
+    p = aggregate.AggParams(1.0, float(K))
+    dw_sum, ef2 = aggregate.exchange(topo, du, ef, rngs, p)
+    np.testing.assert_allclose(np.asarray(dw_sum),
+                               np.asarray(jnp.sum(du / K, axis=0)),
+                               rtol=1e-6, atol=1e-7)
+    np.testing.assert_array_equal(np.asarray(ef2), np.asarray(ef))
+
+
+# ----------------------------------------------------------------------------
+# compressors: selection math, EF identity, wire model
+# ----------------------------------------------------------------------------
+
+def _vec(d=256, seed=0):
+    return jnp.asarray(
+        np.random.default_rng(seed).standard_normal(d).astype(np.float32))
+
+
+def test_topk_keeps_k_largest_and_ef_identity():
+    x = _vec()
+    res0 = jnp.zeros_like(x)
+    c = compress.TopK(16)
+    xhat, res = c(x, res0, jax.random.PRNGKey(0))
+    nz = np.flatnonzero(np.asarray(xhat))
+    assert len(nz) == 16
+    kept = set(nz.tolist())
+    top = set(np.argsort(-np.abs(np.asarray(x)))[:16].tolist())
+    assert kept == top
+    # error feedback invariant: xhat + residual == x + res0 (nothing lost)
+    np.testing.assert_allclose(np.asarray(xhat + res), np.asarray(x),
+                               rtol=1e-6, atol=1e-7)
+    # the residual feeds the next round: a large carried residual wins
+    res = res.at[3].set(1e3)
+    xhat2, _ = c(x, res, jax.random.PRNGKey(0))
+    assert abs(float(xhat2[3])) > 1e2
+
+
+def test_randk_seed_derived_indices_and_ef_identity():
+    x = _vec(seed=3)
+    c = compress.RandK(16)
+    r0 = jnp.zeros_like(x)
+    xhat_a, res_a = c(x, r0, jax.random.PRNGKey(5))
+    xhat_b, _ = c(x, r0, jax.random.PRNGKey(5))
+    # same round key -> same index set (that's why only values travel)
+    np.testing.assert_array_equal(np.asarray(xhat_a), np.asarray(xhat_b))
+    assert np.count_nonzero(np.asarray(xhat_a)) <= 16
+    xhat_c, _ = c(x, r0, jax.random.PRNGKey(6))
+    assert not np.array_equal(np.asarray(xhat_a), np.asarray(xhat_c))
+    np.testing.assert_allclose(np.asarray(xhat_a + res_a), np.asarray(x),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_stochastic_quant_unbiased_and_bounded():
+    x = _vec(d=64, seed=4) * 0.1
+    c = compress.StochasticQuant(8)
+    r0 = jnp.zeros_like(x)
+    outs = jnp.stack([c(x, r0, jax.random.PRNGKey(i))[0]
+                      for i in range(300)])
+    # unbiased given the norm: the empirical mean approaches x
+    np.testing.assert_allclose(np.asarray(jnp.mean(outs, 0)), np.asarray(x),
+                               atol=2e-3)
+    # quantization error bounded by one level
+    lvl = float(jnp.max(jnp.abs(x))) / 127.0
+    assert float(jnp.max(jnp.abs(outs - x))) <= lvl + 1e-6
+
+
+def test_int8_deterministic_and_ef_identity():
+    x = _vec(seed=5)
+    c = compress.Int8()
+    xhat, res = c(x, jnp.zeros_like(x), jax.random.PRNGKey(0))
+    np.testing.assert_allclose(np.asarray(xhat + res), np.asarray(x),
+                               rtol=1e-6, atol=1e-7)
+    scale = float(jnp.max(jnp.abs(x))) / 127.0
+    assert float(jnp.max(jnp.abs(xhat - x))) <= scale
+
+
+def test_wire_model_floats_per_message():
+    assert compress.NoCompression().floats_per_message(1000) == 1000
+    assert compress.TopK(64).floats_per_message(1000) == 128   # (val, idx)
+    assert compress.TopK(64).floats_per_message(32) == 64      # clamped to d
+    assert compress.RandK(64).floats_per_message(1000) == 64   # values only
+    assert compress.StochasticQuant(8).floats_per_message(1000) == 251
+    assert compress.Int8().floats_per_message(1000) == 251
+    with pytest.raises(ValueError):
+        compress.TopK(0)
+    with pytest.raises(ValueError):
+        compress.resolve("gzip")
+
+
+def test_optim_compress_shim_still_serves_pytree_api():
+    """repro.optim.compress moved to repro.comm.compress; the shim must
+    re-export the same objects (CoCoA-DP depends on them)."""
+    from repro.optim import compress as legacy
+    assert legacy.compress is compress.compress
+    assert legacy.ef_init is compress.ef_init
+    assert legacy.EFState is compress.EFState
+    assert legacy.compressed_bytes is compress.compressed_bytes
+
+
+# ----------------------------------------------------------------------------
+# tracer + history accounting (the comm_floats fix)
+# ----------------------------------------------------------------------------
+
+def test_tracer_totals_and_per_round():
+    tr = tracer.CommTracer.for_run(K=8, d_local=512,
+                                   compressor=compress.TopK(16))
+    tr.tick(3)
+    assert tr.vectors == 24
+    assert tr.floats == 3 * 8 * 32            # 2k per message
+    assert tr.bytes == 4 * tr.floats
+    assert tr.psums == 3
+    assert tr.per_round() == {"floats": 8 * 32, "bytes": 4 * 8 * 32,
+                              "psums": 1}
+    t2 = tracer.CommTracer.for_run(K=8, d_local=512)
+    t2.tick()
+    assert t2.floats == 8 * 512               # dense: the PR-1 formula
+
+
+def test_comm_floats_dense_regression_pr1_formula(problem):
+    """Uncompressed accounting is pinned to the original formula:
+    floats(t) = t * K * d (one dense w-vector per worker-round)."""
+    Xp, yp, mk = problem
+    K, _, d = Xp.shape
+    r = solve(CoCoAConfig.adding(K, loss="hinge", lam=1e-3, H=32),
+              Xp, yp, mk, rounds=3, gap_every=1)
+    assert r.history["comm_floats"] == [K * d, 2 * K * d, 3 * K * d]
+    assert r.history["comm_vectors"] == [K, 2 * K, 3 * K]
+    assert r.history["comm_psums"] == [1, 2, 3]
+    assert r.history["comm_bytes"] == [4 * K * d, 8 * K * d, 12 * K * d]
+
+
+def test_comm_floats_reflect_compression(problem):
+    """Under top-k the wire carries k (value, index) pairs per worker, not
+    the dense d -- the accounting must say 2k*K per round."""
+    Xp, yp, mk = problem
+    K = Xp.shape[0]
+    k = 16
+    r = solve(CoCoAConfig.adding(K, loss="hinge", lam=1e-3, H=32,
+                                 compress="topk", compress_k=k),
+              Xp, yp, mk, rounds=3, gap_every=1)
+    per = 2 * k * K
+    assert r.history["comm_floats"] == [per, 2 * per, 3 * per]
+    r2 = solve(CoCoAConfig.adding(K, loss="hinge", lam=1e-3, H=32,
+                                  compress="randk", compress_k=k),
+               Xp, yp, mk, rounds=2, gap_every=1)
+    assert r2.history["comm_floats"] == [k * K, 2 * k * K]
+
+
+# ----------------------------------------------------------------------------
+# end-to-end: compressed rounds still optimize, certificate stays valid
+# ----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method,k", [("topk", 8), ("randk", 16),
+                                      ("qsgd", 0), ("int8", 0)])
+def test_compressed_rounds_converge_with_error_feedback(problem, method, k):
+    Xp, yp, mk = problem
+    K = Xp.shape[0]
+    r = solve(CoCoAConfig.adding(K, loss="hinge", lam=1e-3, H=256,
+                                 compress=method, compress_k=k),
+              Xp, yp, mk, rounds=20, gap_every=5)
+    gaps = r.history["gap"]
+    assert gaps[-1] < gaps[0]          # trending down
+    assert gaps[-1] < 0.35             # actually useful
+    assert all(g >= -1e-6 for g in gaps)   # weak duality holds at the
+                                           # algorithm's (drifted) w
+
+
+def test_gap_at_w_certificate(problem):
+    """gap_at_w == gap_decomposed at w(alpha); valid (>= 0 up to fp) at a
+    perturbed w -- the compressed-run certificate."""
+    Xp, yp, mk = problem
+    loss = get_loss("hinge")
+    r = solve(CoCoAConfig.adding(4, loss="hinge", lam=1e-3, H=128),
+              Xp, yp, mk, rounds=3, gap_every=3)
+    alpha = r.state.alpha
+    n = duality.effective_n(mk)
+    w = duality.w_of_alpha(Xp, alpha, 1e-3, n)
+    p0, d0, g0 = duality.gap_decomposed(alpha, Xp, yp, mk, loss, 1e-3)
+    p1, d1, g1 = duality.gap_at_w(w, alpha, Xp, yp, mk, loss, 1e-3)
+    assert float(g0) == pytest.approx(float(g1), rel=1e-6)
+    wp = w + 0.01 * jnp.ones_like(w)
+    _, _, g2 = duality.gap_at_w(wp, alpha, Xp, yp, mk, loss, 1e-3)
+    assert float(g2) >= -1e-6     # weak duality: valid certificate at ANY w
+
+
+def test_flush_ef_delivers_outstanding_debt():
+    """flush_ef sends all residual mass at once: w + gamma * sum_k ef_k --
+    what the EF mechanism would eventually deliver, made eager (used before
+    elastic re-partitioning so rebuilding the residual state loses nothing)."""
+    rng = np.random.default_rng(2)
+    K, d = 4, 16
+    w = jnp.asarray(rng.standard_normal(d).astype(np.float32))
+    ef = jnp.asarray(rng.standard_normal((K, d)).astype(np.float32))
+    p = aggregate.AggParams(0.5, 2.0)
+    w2 = aggregate.flush_ef(w, ef, p)
+    np.testing.assert_allclose(np.asarray(w2),
+                               np.asarray(w + 0.5 * jnp.sum(ef, axis=0)),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_ef_state_threads_through_solve(problem):
+    """The EF residual lives in CoCoAState: nonzero after compressed rounds,
+    zeros after exact rounds, and a dropped worker loses its residual."""
+    from repro.runtime import failures
+    Xp, yp, mk = problem
+    K = Xp.shape[0]
+    r_exact = solve(CoCoAConfig.adding(K, loss="hinge", lam=1e-3, H=32),
+                    Xp, yp, mk, rounds=2, gap_every=2)
+    assert float(jnp.max(jnp.abs(r_exact.state.ef))) == 0.0
+    r_comp = solve(CoCoAConfig.adding(K, loss="hinge", lam=1e-3, H=32,
+                                      compress="topk", compress_k=4),
+                   Xp, yp, mk, rounds=2, gap_every=2)
+    assert float(jnp.max(jnp.abs(r_comp.state.ef))) > 0.0
+    st = failures.drop_worker(r_comp.state, 1)
+    assert float(jnp.max(jnp.abs(st.ef[1]))) == 0.0
+    assert float(jnp.max(jnp.abs(st.ef[0]))) > 0.0

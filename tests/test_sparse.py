@@ -60,6 +60,47 @@ def test_libsvm_parser_sorts_columns():
     np.testing.assert_allclose(csr.data, [2.0, 5.0, 9.0])
 
 
+def _libsvm_file(tmp_path, n=10, d=12, seed=0):
+    rng = np.random.default_rng(seed)
+    lines = []
+    for i in range(n):
+        nnz = rng.integers(1, 5)
+        cols = np.sort(rng.choice(d, nnz, replace=False)) + 1
+        toks = " ".join(f"{c}:{rng.standard_normal():.4f}" for c in cols)
+        lines.append(f"{1 if i % 2 else -1} {toks}")
+    p = tmp_path / "chunked.svm"
+    p.write_text("\n".join(lines) + "\n")
+    return p
+
+
+def test_libsvm_chunked_matches_unchunked(tmp_path):
+    """chunk_rows streams CSR blocks; the stitched result is exactly the
+    one-pass parse (multi-chunk file: 10 rows / chunk_rows=3 -> 4 blocks,
+    the last partial)."""
+    p = _libsvm_file(tmp_path, n=10, d=12)
+    csr_full, y_full = sp.load_libsvm(p)
+    csr_chunked, y_chunked = sp.load_libsvm(p, chunk_rows=3)
+    np.testing.assert_array_equal(y_chunked, y_full)
+    np.testing.assert_array_equal(csr_chunked.indices, csr_full.indices)
+    np.testing.assert_allclose(csr_chunked.data, csr_full.data)
+    np.testing.assert_array_equal(csr_chunked.indptr, csr_full.indptr)
+    assert csr_chunked.shape == csr_full.shape
+    np.testing.assert_allclose(csr_chunked.toarray(), csr_full.toarray())
+
+
+def test_libsvm_chunk_iterator_blocks(tmp_path):
+    p = _libsvm_file(tmp_path, n=10, d=12, seed=3)
+    blocks = list(sp.iter_libsvm_chunks(p, chunk_rows=3, n_features=12))
+    assert [b.shape[0] for b, _ in blocks] == [3, 3, 3, 1]
+    assert all(b.shape[1] == 12 for b, _ in blocks)
+    stitched = sp.csr_vstack([b for b, _ in blocks])
+    csr_full, _ = sp.load_libsvm(p, n_features=12)
+    np.testing.assert_allclose(stitched.toarray(), csr_full.toarray())
+    # per-chunk n_features validation still rejects out-of-range indices
+    with pytest.raises(ValueError, match="out of range"):
+        list(sp.iter_libsvm_chunks(p, chunk_rows=3, n_features=2))
+
+
 # ----------------------------------------------------------------------------
 # CSR <-> ELL round-trip
 # ----------------------------------------------------------------------------
