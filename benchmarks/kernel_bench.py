@@ -10,7 +10,9 @@ padded-ELL, i.e. a 0.5/density traffic cut).
 
 `--comm` runs the comm-volume vs gap-per-round sweep instead: the
 repro.comm wire compressors at equal round count (floats actually
-transmitted per round next to the duality gap reached)."""
+transmitted per round next to the duality gap reached); `--topology
+hier:<g>|a2a` routes it through that reduce plan and adds the
+cross-topology parity + per-hop volume sweep."""
 from __future__ import annotations
 
 import argparse
@@ -121,15 +123,17 @@ def sparse_roofline(densities=(0.003, 0.01, 0.05, 0.1), d=4096, nk=1024,
                 dense_us_per_step=us_de, vmem=svm)
 
 
-def comm_sweep(quick=True, K=4, n=512, d=2048, density=0.01):
+def comm_sweep(quick=True, K=4, n=512, d=2048, density=0.01,
+               topology="flat"):
     """Comm-volume vs gap-per-round: the repro.comm compressors at equal
-    round count on one sparse problem.
+    round count on one sparse problem, under the requested reduce topology.
 
-    For each wire scheme (dense baseline, top-k, rand-k, 8-bit stochastic
-    quantization, int8) run the same CoCoA+ rounds and report the tracer's
-    actual floats/round next to the duality gap reached -- the trade the
-    paper's Fig-2 communication model prices. The gap under compression is
-    certified at the w the algorithm carries (duality.gap_at_w)."""
+    For each wire scheme (dense baseline, top-k, top-k with compressed
+    sparse gather, rand-k, 8-bit stochastic quantization, int8) run the
+    same CoCoA+ rounds and report the tracer's actual floats/round next to
+    the duality gap reached -- the trade the paper's Fig-2 communication
+    model prices. The gap under compression is certified at the w the
+    algorithm carries (duality.gap_at_w)."""
     from repro.core import CoCoAConfig, solve
     from repro.data import sparse as sp
 
@@ -141,24 +145,77 @@ def comm_sweep(quick=True, K=4, n=512, d=2048, density=0.01):
 
     rows = []
     dense_floats = None
-    for method in ("none", "topk", "randk", "qsgd", "int8"):
+    schemes = (("none", False), ("topk", False), ("topk", True),
+               ("randk", False), ("qsgd", False), ("int8", False))
+    for method, gather in schemes:
         cfg = CoCoAConfig.adding(K, loss="hinge", lam=1e-3, H=H,
-                                 compress=method, compress_k=k)
+                                 compress=method, compress_k=k,
+                                 topology=topology, gather=gather)
         r = solve(cfg, sh, yp, mk, rounds=rounds, gap_every=1, seed=2)
         fl = r.history["comm_floats"][-1] // r.history["round"][-1]
         if method == "none":
             dense_floats = fl
         cut = dense_floats / max(fl, 1)
-        rows.append(dict(method=method, k=k, floats_per_round=fl, cut=cut,
+        label = method + ("+gather" if gather else "")
+        rows.append(dict(method=label, k=k, topology=topology,
+                         floats_per_round=fl, cut=cut,
                          gap=r.history["gap"][-1],
                          gap_first=r.history["gap"][0],
                          monotone=all(b <= a * 1.05 for a, b in
                                       zip(r.history["gap"],
                                           r.history["gap"][1:]))))
-        print(f"comm,sweep,method={method},k={k},floats_per_round={fl},"
-              f"cut={cut:.1f}x,gap={r.history['gap'][-1]:.3e}")
+        print(f"comm,sweep,topology={topology},method={label},k={k},"
+              f"floats_per_round={fl},cut={cut:.1f}x,"
+              f"gap={r.history['gap'][-1]:.3e}")
     save("comm_sweep", dict(K=K, n=n, d=d, density=density, rounds=rounds,
-                            rows=rows))
+                            topology=topology, rows=rows))
+    return rows
+
+
+def topology_sweep(quick=True, K=4, n=512, d=2048, density=0.01):
+    """Reduce-topology sweep: flat vs hier:2 vs a2a, dense and compressed-
+    gather wire, at equal round count -- per-hop volumes from the tracer
+    plus the w-parity error vs the flat reduce (the collectives must
+    compute the same sum; only the wire plan changes)."""
+    import jax.numpy as jnp
+
+    from repro import comm
+    from repro.core import CoCoAConfig, solve
+    from repro.data import sparse as sp
+
+    rounds = 4 if quick else 12
+    H = 256 if quick else 1024
+    k = 64
+    csr, y = sp.make_sparse_classification(n, d, density=density, seed=0)
+    sh, yp, mk = sp.partition_sparse(csr, y, K, seed=1)
+
+    rows = []
+    w_ref = {}
+    for gather in (False, True):
+        comp = dict(compress="topk", compress_k=k) if gather else {}
+        for topo in ("flat", "hier:2", "a2a"):
+            cfg = CoCoAConfig.adding(K, loss="hinge", lam=1e-3, H=H,
+                                     topology=topo, gather=gather, **comp)
+            r = solve(cfg, sh, yp, mk, rounds=rounds, gap_every=rounds,
+                      seed=2)
+            if topo == "flat":
+                w_ref[gather] = r.state.w
+            err = float(jnp.max(jnp.abs(r.state.w - w_ref[gather])))
+            tr = comm.CommTracer.for_run(
+                K=K, d_local=d, compressor=cfg.compressor(),
+                topo=comm.Topology.simulated(K, topology=topo),
+                gather=gather)
+            hops = ";".join(f"{h['hop']}={h['floats']}"
+                            for h in tr.per_hop())
+            label = topo + ("+gather" if gather else "")
+            rows.append(dict(topology=label, floats_per_round=tr.per_round()
+                             ["floats"], hops=tr.per_hop(), w_err_vs_flat=err,
+                             gap=r.history["gap"][-1]))
+            print(f"comm,topology,{label},floats_per_round="
+                  f"{tr.per_round()['floats']},hops={hops},"
+                  f"w_err_vs_flat={err:.2e},gap={r.history['gap'][-1]:.3e}")
+            assert err < 1e-5, (label, err)
+    save("topology_sweep", dict(K=K, n=n, d=d, rounds=rounds, rows=rows))
     return rows
 
 
@@ -216,9 +273,15 @@ def main():
                       help="full step counts for stable timings")
     ap.add_argument("--comm", action="store_true",
                     help="run only the comm-volume vs gap sweep")
+    ap.add_argument("--topology", default="flat",
+                    help="reduce plan for --comm: flat | hier:<g> | a2a "
+                         "(also triggers the cross-topology parity sweep "
+                         "when not flat)")
     args = ap.parse_args()
     if args.comm:
-        comm_sweep(quick=not args.full)
+        comm_sweep(quick=not args.full, topology=args.topology)
+        if args.topology != "flat":
+            topology_sweep(quick=not args.full)
     else:
         run(quick=not args.full)
 

@@ -3,13 +3,16 @@
 The paper's premise is that communication dominates, so how partial
 updates travel and combine is a first-class, swappable layer:
 
-    topology   -- worker/mesh descriptors + the all-reduce, shared by the
+    topology   -- worker/mesh descriptors + the reduce plan (flat psum,
+                  hier:<g> two-level, a2a reduce-scatter) shared by the
                   vmap (simulated) and shard_map (SPMD) backends
     aggregate  -- the (gamma, sigma') strategies (add / average /
-                  gamma-interpolated) and the exchange/apply round step
+                  gamma-interpolated) and the exchange/apply round step,
+                  incl. compressed sparse gather
     compress   -- top-k / rand-k / stochastic-quantization wire compression
-                  with per-worker error-feedback residuals
-    tracer     -- structured floats/bytes/psum accounting per round
+                  with per-worker error-feedback residuals; sparsifiers
+                  also emit the SparseMessage gather wire form
+    tracer     -- structured per-hop floats/bytes/psum accounting per round
 
 `core.cocoa` routes every cross-worker reduction through here; new
 compression schemes or topologies are config changes, not solver rewrites.
@@ -18,8 +21,8 @@ from .aggregate import (AggParams, Aggregator, Add, Average, GammaInterp,
                         apply_update, comm_rng, exchange, flush_ef,
                         from_config)
 from .aggregate import resolve as resolve_aggregator
-from .compress import (Compressor, Int8, NoCompression, RandK, StochasticQuant,
-                       TopK, init_residual)
+from .compress import (Compressor, Int8, NoCompression, RandK, SparseMessage,
+                       StochasticQuant, TopK, decode_sum, init_residual)
 from .compress import resolve as resolve_compressor
-from .topology import Topology
+from .topology import Hop, Topology, parse_reduce
 from .tracer import CommTracer

@@ -27,7 +27,7 @@ import jax
 import jax.numpy as jnp
 from typing import NamedTuple, Optional
 
-from .compress import Compressor, NoCompression
+from .compress import Compressor, NoCompression, decode_sum
 from .topology import Topology
 
 # rng domain separation: the compression stream (rand-k index draws,
@@ -118,13 +118,22 @@ def from_config(gamma: float, sigma_p: Optional[float], K: int,
 # ----------------------------------------------------------------------------
 
 def exchange(topo: Topology, du, ef, rng, params: AggParams,
-             compressor: Optional[Compressor] = None):
+             compressor: Optional[Compressor] = None, gather: bool = False):
     """Communicate-and-reduce one round's local updates.
 
     Each worker's wire message is Delta w_k = du_k / sigma' (eq. 14's
     single d-vector), optionally compressed with error feedback; the
-    topology supplies the all-reduce (driver-side sum for the simulated
-    backend, one psum inside shard_map).
+    topology supplies the reduce plan (driver-side sums for the simulated
+    backend; psum / grouped-gather / reduce-scatter collectives inside
+    shard_map, per the topology's reduce kind).
+
+    With `gather=True` (requires a `supports_gather` sparsifier) the wire
+    carries each worker's SparseMessage -- k (index, value) pairs -- the
+    topology all-gathers the K sets, and the summed dense Delta w is
+    rebuilt server-side by scatter-add: the reduce itself moves ~2kK
+    floats instead of dK. The transmitted xhat and the EF residual are
+    identical to the dense form of the same sparsifier, so gather is a
+    wire-routing choice, not an algorithm change.
 
     Simulated topology: `du`/`ef` carry a leading K axis and `rng` is a
     (K, ...) batch of per-worker keys. Mesh topology: per-worker values as
@@ -132,6 +141,19 @@ def exchange(topo: Topology, du, ef, rng, params: AggParams,
     sum_k C(Delta w_k) already damped by 1/sigma'.
     """
     comp = compressor if compressor is not None else NoCompression()
+    if gather:
+        if not comp.supports_gather:
+            raise ValueError(
+                f"compressed gather needs a sparse-set compressor "
+                f"(topk/randk); {comp.name!r} only has a dense wire form")
+        d = du.shape[-1]
+        if topo.is_mesh:
+            msg, ef = comp.encode(du / params.sigma_prime, ef, rng)
+            idx, val = topo.gather_msgs(msg.idx, msg.val)
+        else:
+            msg, ef = jax.vmap(comp.encode)(du / params.sigma_prime, ef, rng)
+            idx, val = msg.idx, msg.val
+        return decode_sum(idx, val, d), ef
     if topo.is_mesh:
         msg, ef = comp(du / params.sigma_prime, ef, rng)
     else:

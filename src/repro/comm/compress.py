@@ -21,6 +21,16 @@ Vector compressors (the CoCoA comm pipeline; one (d,)-message per worker):
 `history["comm_floats"]` accounting use: equivalent f32 floats actually
 transmitted, not the dense d.
 
+Sparsifiers (top-k / rand-k) additionally support *compressed gather*
+(`supports_gather`): `encode` emits a `SparseMessage` of (indices, values)
+that travels the wire as-is, the topology all-gathers the K sets, and
+`decode_sum` scatter-adds them server-side into the summed dense message --
+so the reduce itself moves ~2kK floats instead of dK (see
+`comm.aggregate.exchange(gather=True)` and `comm.topology.Topology.hops`).
+`gather_floats(d)` is the per-set wire model: 2k (value, index) pairs for
+both sparsifiers -- the gathered sets travel indices-and-all, unlike the
+dense rand-k reduce where the seed-derived index set never hits the wire.
+
 The pytree API at the bottom (`EFState`/`ef_init`/`compress`/
 `compressed_bytes`) is the original `repro.optim.compress` interface,
 absorbed here; `repro.optim.compress` remains as a re-export shim for its
@@ -34,21 +44,50 @@ import jax
 import jax.numpy as jnp
 
 
+class SparseMessage(NamedTuple):
+    """A sparsifier's wire form for compressed gather: k (index, value)
+    pairs instead of a d-length masked vector."""
+    idx: jnp.ndarray      # (k,) int32 coordinate ids
+    val: jnp.ndarray      # (k,) values at those coordinates
+
+
+def decode_sum(idx, val, d: int):
+    """Server-side decompression: scatter-add gathered per-worker
+    (idx, val) sets -- shapes (K, k) -- into the summed dense (d,) message.
+    Also accepts a single (k,) set."""
+    return jnp.zeros((d,), val.dtype).at[idx.reshape(-1)].add(val.reshape(-1))
+
+
 class Compressor:
     """Per-worker message compressor with error feedback.
 
     Callable as `compressor(x, residual, rng) -> (x_hat, new_residual)` on a
     single (d,) message; deterministic schemes ignore `rng`. Works under
-    jit / vmap / shard_map (k and bit widths are static).
+    jit / vmap / shard_map (k and bit widths are static). Sparsifiers
+    additionally expose `encode` (the `SparseMessage` wire form for
+    compressed gather) and set `supports_gather`.
     """
     name: str = "none"
+    supports_gather: bool = False
 
     def __call__(self, x, residual, rng):
         raise NotImplementedError
 
+    def encode(self, x, residual, rng):
+        """(SparseMessage, new_residual) -- only for `supports_gather`."""
+        raise NotImplementedError(
+            f"{self.name!r} has no sparse wire form; compressed gather "
+            f"needs topk or randk")
+
     def floats_per_message(self, d: int) -> int:
         """Equivalent f32 floats one worker puts on the wire per round."""
         raise NotImplementedError
+
+    def gather_floats(self, d: int) -> int:
+        """Floats in one SparseMessage set -- only for `supports_gather`."""
+        raise NotImplementedError(
+            f"{self.name!r} has no sparse wire form; compressed gather "
+            f"needs topk or randk")
 
 
 class NoCompression(Compressor):
@@ -61,53 +100,70 @@ class NoCompression(Compressor):
         return d
 
 
-class TopK(Compressor):
-    """Keep the k largest-magnitude entries of (x + residual)."""
-    name = "topk"
+class _Sparsifier(Compressor):
+    """Shared shape of the k-sparse schemes: `encode` picks the index set,
+    the dense `__call__` form is its scatter (so dense reduce and compressed
+    gather transmit the exact same xhat and carry the same EF residual)."""
+    supports_gather = True
 
     def __init__(self, k: int):
         if k <= 0:
-            raise ValueError(f"topk needs k >= 1, got {k}")
+            raise ValueError(f"{self.name} needs k >= 1, got {k}")
         self.k = int(k)
 
-    def __call__(self, x, residual, rng):
+    def _select(self, xc, rng):
+        raise NotImplementedError
+
+    def encode(self, x, residual, rng):
         xc = x + residual
-        k = min(self.k, xc.shape[-1])
-        _, idx = jax.lax.top_k(jnp.abs(xc), k)
-        xhat = jnp.zeros_like(xc).at[idx].set(xc[idx])
-        return xhat, xc - xhat
+        idx = self._select(xc, rng).astype(jnp.int32)
+        val = xc[idx]
+        xhat = jnp.zeros_like(xc).at[idx].set(val)
+        return SparseMessage(idx, val), xc - xhat
+
+    def __call__(self, x, residual, rng):
+        msg, res = self.encode(x, residual, rng)
+        xhat = jnp.zeros_like(x).at[msg.idx].set(msg.val)
+        return xhat, res
+
+    def __repr__(self):
+        return f"{type(self).__name__}(k={self.k})"
+
+
+class TopK(_Sparsifier):
+    """Keep the k largest-magnitude entries of (x + residual)."""
+    name = "topk"
+
+    def _select(self, xc, rng):
+        _, idx = jax.lax.top_k(jnp.abs(xc), min(self.k, xc.shape[-1]))
+        return idx
 
     def floats_per_message(self, d: int) -> int:
         return 2 * min(self.k, d)      # (value, index) pairs
 
-    def __repr__(self):
-        return f"TopK(k={self.k})"
+    def gather_floats(self, d: int) -> int:
+        return 2 * min(self.k, d)      # the pairs travel as-is
 
 
-class RandK(Compressor):
+class RandK(_Sparsifier):
     """Keep k uniformly random entries of (x + residual). The index set is
     drawn from the shared per-round worker key, so the receiver re-derives
     it and only the k values travel (EF absorbs the 1-k/d shrinkage bias)."""
     name = "randk"
 
-    def __init__(self, k: int):
-        if k <= 0:
-            raise ValueError(f"randk needs k >= 1, got {k}")
-        self.k = int(k)
-
-    def __call__(self, x, residual, rng):
-        xc = x + residual
+    def _select(self, xc, rng):
         d = xc.shape[-1]
-        k = min(self.k, d)
-        idx = jax.random.choice(rng, d, (k,), replace=False)
-        xhat = jnp.zeros_like(xc).at[idx].set(xc[idx])
-        return xhat, xc - xhat
+        return jax.random.choice(rng, d, (min(self.k, d),), replace=False)
 
     def floats_per_message(self, d: int) -> int:
         return min(self.k, d)          # values only; indices are seed-derived
 
-    def __repr__(self):
-        return f"RandK(k={self.k})"
+    def gather_floats(self, d: int) -> int:
+        # unlike the dense reduce (where the masked vector is rebuilt
+        # sender-side, so the seed-derived indices never travel), the
+        # gather collective transmits the (idx, val) sets as-is -- charge
+        # both words honestly
+        return 2 * min(self.k, d)
 
 
 class StochasticQuant(Compressor):

@@ -1,60 +1,85 @@
 """Structured per-round communication accounting.
 
-One place that knows what a round actually moves: K workers each reduce
-one message of `floats_per_message` equivalent f32 floats (the compressor's
-wire model applied to the d_local floats a worker owns under feature
-sharding), through `psums_per_round` collective(s). This replaces the
-hand-rolled `comm_floats` bookkeeping that used to live inline in
-`core.cocoa.solve`, and is what `launch.cocoa_train` and the
+One place that knows what a round actually moves. The unit of accounting
+is the topology's reduce plan: a tuple of `topology.Hop` descriptors, each
+saying how many messages that hop carries per round and how many
+equivalent f32 floats each message holds (the compressor's wire model
+applied to the d_local floats a worker owns under feature sharding). This
+replaces the hand-rolled `comm_floats` bookkeeping that used to live
+inline in `core.cocoa.solve`, and is what `launch.cocoa_train` and the
 `benchmarks.kernel_bench` comm sweep report from.
 
-The uncompressed model is unchanged from before the comm subsystem:
-`floats(t) = t * K * d_local` (one w-shard per worker-round). Under top-k
-it is `t * K * 2k` -- the actual (value, index) pairs transmitted, not the
-dense vector length.
+The uncompressed flat model is unchanged from before the comm subsystem:
+`floats(t) = t * K * d_local` (one hop of K w-shard messages per round).
+Under top-k it is `t * K * 2k`; under compressed gather the 2kK is what
+the reduce itself moves (one gather hop). Hierarchical plans carry two
+hops (intra + inter) whose floats sum to the end-to-end volume -- each
+wire message is counted in exactly one hop, never twice.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Tuple
 
 from .compress import Compressor, NoCompression
+from .topology import Hop, Topology
 
 
 @dataclasses.dataclass
 class CommTracer:
-    """Counts rounds and converts them to wire volume.
+    """Counts rounds and converts them to wire volume via the hop plan.
 
-    `floats_per_message` is per worker per round; bytes are 4 * floats
-    (values and int32 indices are both 4-byte words in the wire model).
+    Bytes are 4 * floats (values and int32 indices are both 4-byte words
+    in the wire model); `psums` counts collectives, one per hop.
     """
     K: int
-    floats_per_message: int
-    psums_per_round: int = 1
+    hops: Tuple[Hop, ...]
     rounds: int = 0
 
     @staticmethod
     def for_run(K: int, d_local: int,
                 compressor: Optional[Compressor] = None,
-                psums_per_round: int = 1) -> "CommTracer":
+                topo: Optional[Topology] = None,
+                gather: bool = False) -> "CommTracer":
+        """Tracer for a run. Without `topo` this is the PR-2 flat model
+        (one reduce hop of K messages); with it, the topology's reduce
+        plan -- including the compressed-gather wire form when `gather`."""
         comp = compressor if compressor is not None else NoCompression()
-        return CommTracer(K=K,
-                          floats_per_message=comp.floats_per_message(d_local),
-                          psums_per_round=psums_per_round)
+        f_msg = comp.floats_per_message(d_local)
+        if topo is None:
+            hops = (Hop("reduce", K, f_msg),)
+        else:
+            f_set = comp.gather_floats(d_local) if gather else None
+            hops = topo.hops(f_msg, d_local, f_set)
+        return CommTracer(K=K, hops=hops)
 
     def tick(self, rounds: int = 1) -> None:
         self.rounds += rounds
+
+    # -- per-round plan ------------------------------------------------------
+
+    @property
+    def floats_per_round(self) -> int:
+        return sum(h.floats for h in self.hops)
+
+    @property
+    def vectors_per_round(self) -> int:
+        """Wire messages per round, over all hops."""
+        return sum(h.messages for h in self.hops)
+
+    @property
+    def psums_per_round(self) -> int:
+        return len(self.hops)
 
     # -- cumulative totals (as of the last tick) -----------------------------
 
     @property
     def vectors(self) -> int:
-        """Messages sent so far: one per worker-round."""
-        return self.rounds * self.K
+        return self.rounds * self.vectors_per_round
 
     @property
     def floats(self) -> int:
-        return self.rounds * self.K * self.floats_per_message
+        return self.rounds * self.floats_per_round
 
     @property
     def bytes(self) -> int:
@@ -70,6 +95,14 @@ class CommTracer:
                 "comm_bytes": self.bytes, "comm_psums": self.psums}
 
     def per_round(self) -> dict:
-        return {"floats": self.K * self.floats_per_message,
-                "bytes": 4 * self.K * self.floats_per_message,
+        return {"floats": self.floats_per_round,
+                "bytes": 4 * self.floats_per_round,
                 "psums": self.psums_per_round}
+
+    def per_hop(self) -> list:
+        """Per-hop per-round breakdown; floats sum to per_round()['floats']
+        (each message is counted in exactly one hop)."""
+        return [{"hop": h.name, "messages": h.messages,
+                 "floats_per_message": h.floats_per_message,
+                 "floats": h.floats, "bytes": 4 * h.floats}
+                for h in self.hops]

@@ -61,6 +61,9 @@ class CoCoAConfig:
                                        # overrides (gamma, sigma_p) when set
     compress: str = "none"             # comm.compress scheme for Delta w_k
     compress_k: int = 0                # sparsifier budget for topk/randk
+    topology: str = "flat"             # reduce plan: "flat"|"hier:<g>"|"a2a"
+    gather: bool = False               # compressed sparse gather: the reduce
+                                       # moves (idx, val) sets, ~2kK floats
 
     def resolved_sigma(self, K: int) -> float:
         return self.agg_params(K).sigma_prime
@@ -71,7 +74,12 @@ class CoCoAConfig:
                                 aggregator=self.aggregator)
 
     def compressor(self) -> comm.Compressor:
-        return comm.resolve_compressor(self.compress, self.compress_k)
+        comp = comm.resolve_compressor(self.compress, self.compress_k)
+        if self.gather and not comp.supports_gather:
+            raise ValueError(
+                f"gather=True needs a sparse-set compressor (topk/randk); "
+                f"compress={self.compress!r} only has a dense wire form")
+        return comp
 
     @staticmethod
     def averaging(K: int, **kw) -> "CoCoAConfig":
@@ -165,7 +173,7 @@ def make_round_vmap(cfg: CoCoAConfig, K: int,
     cfg.solver is transparently mapped to its ELL counterpart for sparse
     inputs (sdca -> sdca_sparse, sdca_kernel -> sdca_sparse_kernel)."""
     loss = get_loss(cfg.loss)
-    topo = Topology.simulated(K)
+    topo = Topology.simulated(K, topology=cfg.topology)
     p = cfg.agg_params(K)
     compressor = cfg.compressor()
 
@@ -190,7 +198,7 @@ def make_round_vmap(cfg: CoCoAConfig, K: int,
         # --- the communication step: damp, compress, reduce, apply ---
         crngs = jax.vmap(comm.comm_rng)(rngs)
         dw_sum, ef = comm.exchange(topo, res.du, state.ef, crngs, p,
-                                   compressor)
+                                   compressor, gather=cfg.gather)
         w, alpha = comm.apply_update(state.w, state.alpha, dw_sum,
                                      res.dalpha, p)
         return CoCoAState(w, alpha, rng, state.rounds + 1,
@@ -229,7 +237,8 @@ def make_round_sharded(cfg: CoCoAConfig, mesh) -> Callable[..., CoCoAState]:
     from jax.experimental.shard_map import shard_map
 
     loss = get_loss(cfg.loss)
-    topo = Topology.from_mesh(mesh, cfg.data_axis, cfg.model_axis)
+    topo = Topology.from_mesh(mesh, cfg.data_axis, cfg.model_axis,
+                              topology=cfg.topology)
     K = topo.K
     p = cfg.agg_params(K)
     compressor = cfg.compressor()
@@ -244,7 +253,7 @@ def make_round_sharded(cfg: CoCoAConfig, mesh) -> Callable[..., CoCoAState]:
                            sqnorms=sqn_k)
         # --- the one communicated vector per round per worker ---
         dw_sum, ef_new = comm.exchange(topo, res.du, efk, comm.comm_rng(rngk),
-                                       p, compressor)
+                                       p, compressor, gather=cfg.gather)
         return res, dw_sum, ef_new
 
     def _build_dense():
@@ -370,10 +379,11 @@ def solve(cfg: CoCoAConfig, X, y, mask, *, rounds: int, eps_gap: float = 0.0,
 
     if cfg.backend == "shard_map":
         assert mesh is not None, "shard_map backend needs a mesh"
-        topo = Topology.from_mesh(mesh, cfg.data_axis, cfg.model_axis)
+        topo = Topology.from_mesh(mesh, cfg.data_axis, cfg.model_axis,
+                                  topology=cfg.topology)
         round_fn = jax.jit(make_round_sharded(cfg, mesh))
     else:
-        topo = Topology.simulated(K)
+        topo = Topology.simulated(K, topology=cfg.topology)
         round_fn = jax.jit(make_round_vmap(cfg, K))
 
     compressed = cfg.compress not in (None, "none", "")
@@ -386,12 +396,14 @@ def solve(cfg: CoCoAConfig, X, y, mask, *, rounds: int, eps_gap: float = 0.0,
         gap_fn = jax.jit(functools.partial(
             duality.gap_decomposed, loss=loss, lam=cfg.lam))
 
-    # per-round communication accounting: each worker reduces one (possibly
-    # compressed) w-shard per round; feature sharding divides the dense
-    # message length (comm.tracer holds the wire model -- Fig-2 claims stay
-    # honest under tensor sharding AND compression)
+    # per-round communication accounting: the topology's reduce plan priced
+    # by the compressor's wire model (per hop under hier/a2a, the sparse
+    # (idx, val) sets under compressed gather); feature sharding divides
+    # the dense message length -- Fig-2 claims stay honest under tensor
+    # sharding, compression, and multi-hop topologies
     tracer = comm.CommTracer.for_run(K=K, d_local=topo.d_local(d),
-                                     compressor=cfg.compressor())
+                                     compressor=cfg.compressor(),
+                                     topo=topo, gather=cfg.gather)
 
     hist = {"round": [], "gap": [], "primal": [], "dual": [],
             "comm_vectors": [], "comm_floats": [], "comm_bytes": [],

@@ -17,6 +17,13 @@ elastic re-partitioning).
         --dataset rcv1_sparse --workers 16 --rounds 40 \
         --compress topk --compress-k 64
 
+    # hierarchical (multi-pod) reduce + compressed sparse gather: groups of
+    # 4 workers psum intra-pod, pod aggregates cross; the reduce itself
+    # moves 2kK floats of (idx, val) sets, not dense d-vectors
+    PYTHONPATH=src python -m repro.launch.cocoa_train \
+        --dataset rcv1_sparse --workers 16 --rounds 40 \
+        --topology hier:4 --compress topk --compress-k 64 --gather
+
 On a real TPU mesh pass --backend shard_map (workers = data-axis shards);
 the default vmap backend simulates any K on one device with identical
 math. Both layouts run on both backends (sparse = per-device padded-ELL
@@ -61,6 +68,14 @@ def main():
                     help="wire compression for Delta w_k (error feedback)")
     ap.add_argument("--compress-k", type=int, default=64,
                     help="kept coordinates for --compress topk/randk")
+    ap.add_argument("--topology", default="flat",
+                    help="reduce plan: flat | hier:<g> (two-level, groups "
+                         "of g workers) | a2a (reduce-scatter + all-gather)")
+    ap.add_argument("--gather", action="store_true",
+                    help="compressed sparse gather: the reduce moves each "
+                         "worker's top-k (idx, val) set (~2kK floats/round) "
+                         "instead of dense vectors; needs --compress "
+                         "topk/randk")
     ap.add_argument("--solver", default="sdca",
                     choices=["sdca", "sdca_kernel", "sdca_sparse",
                              "sdca_sparse_kernel", "gd", "sdca_deadline"])
@@ -78,6 +93,22 @@ def main():
     ap.add_argument("--elastic-to", default="",
                     help="'K@round': re-partition to K workers at round")
     args = ap.parse_args()
+
+    # validate the comm flags before the (possibly minutes-long) dataset
+    # load/partition: bad specs, gather without a sparsifier, and hier
+    # groups that don't divide --workers all fail in milliseconds
+    if args.gather and args.compress not in ("topk", "randk"):
+        raise SystemExit("--gather needs --compress topk or randk "
+                         "(the sparse (idx, val) wire form)")
+    try:
+        comm.Topology.simulated(args.workers, topology=args.topology)
+        if args.elastic_to:
+            # the re-partition target must fit the topology too, or the
+            # crash just moves to round el_round
+            comm.Topology.simulated(int(args.elastic_to.split("@")[0]),
+                                    topology=args.topology)
+    except ValueError as e:
+        raise SystemExit(f"--topology: {e}")
 
     spec = DATASETS[args.dataset]
     fmt = spec.format if args.format == "auto" else args.format
@@ -99,7 +130,8 @@ def main():
 
     mk_cfg = dict(loss=args.loss, lam=args.lam, H=args.H, solver=args.solver,
                   backend=args.backend, compress=args.compress,
-                  compress_k=args.compress_k)
+                  compress_k=args.compress_k, topology=args.topology,
+                  gather=args.gather)
 
     def make_cfg(K):
         if args.aggregator:
@@ -213,13 +245,20 @@ def main():
                                          args.lam)
     print(f"final: P={float(p):.6f} D={float(d):.6f} gap={float(g):.3e} "
           f"(certificate: primal suboptimality <= gap)")
-    pr = comm.CommTracer.for_run(K=K, d_local=d_dim,
-                                 compressor=cfg.compressor()).per_round()
+    topo = comm.Topology.simulated(K, topology=args.topology)
+    tr = comm.CommTracer.for_run(K=K, d_local=d_dim,
+                                 compressor=cfg.compressor(),
+                                 topo=topo, gather=args.gather)
+    pr = tr.per_round()
     dense_floats = K * d_dim
-    print(f"comm: {pr['floats']} floats/round "
-          f"({pr['bytes']} bytes, {pr['psums']} psum) -- "
-          f"{dense_floats / max(pr['floats'], 1):.1f}x cut vs uncompressed "
-          f"{dense_floats}")
+    print(f"comm[{args.topology}{'+gather' if args.gather else ''}]: "
+          f"{pr['floats']} floats/round "
+          f"({pr['bytes']} bytes, {pr['psums']} hop) -- "
+          f"{dense_floats / max(pr['floats'], 1):.1f}x cut vs flat "
+          f"uncompressed {dense_floats}")
+    for h in tr.per_hop():
+        print(f"  hop {h['hop']}: {h['messages']} msgs x "
+              f"{h['floats_per_message']} floats = {h['floats']}/round")
 
 
 if __name__ == "__main__":

@@ -8,6 +8,21 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 import numpy as np
 import pytest
 
+try:
+    # CI profile for the property tests: jit/compile time on first examples
+    # blows any wall-clock deadline, and the drawn JAX programs are
+    # deterministic-per-example anyway -- disable the deadline and the
+    # too-slow health check instead of flaking. No-op when hypothesis is
+    # absent (the vendored tests/_hypothesis_stub.py has no deadlines).
+    from hypothesis import HealthCheck, settings
+
+    settings.register_profile(
+        "repro-ci", deadline=None,
+        suppress_health_check=[HealthCheck.too_slow])
+    settings.load_profile("repro-ci")
+except ImportError:
+    pass
+
 
 @pytest.fixture(scope="session")
 def rng():

@@ -320,6 +320,180 @@ def test_flush_ef_delivers_outstanding_debt():
                                rtol=1e-6, atol=1e-7)
 
 
+# ----------------------------------------------------------------------------
+# reduce topologies: spec parsing, exchange parity, wire plans
+# ----------------------------------------------------------------------------
+
+def test_parse_reduce_specs():
+    assert topology.parse_reduce(None) == ("flat", 0)
+    assert topology.parse_reduce("") == ("flat", 0)
+    assert topology.parse_reduce("flat") == ("flat", 0)
+    assert topology.parse_reduce("a2a") == ("a2a", 0)
+    assert topology.parse_reduce("hier:4") == ("hier", 4)
+    with pytest.raises(ValueError):
+        topology.parse_reduce("hier:1")
+    with pytest.raises(ValueError):
+        topology.parse_reduce("ring")
+
+
+def test_topology_validates_hier_group():
+    topology.Topology.simulated(8, topology="hier:2")
+    topology.Topology.simulated(8, topology="hier:8")
+    with pytest.raises(ValueError):
+        topology.Topology.simulated(8, topology="hier:3")   # 3 doesn't divide
+    with pytest.raises(ValueError):
+        topology.Topology.simulated(4, topology="hier:8")   # g > K
+
+
+def _exchange_inputs(K=8, d=37, seed=1):
+    rng = np.random.default_rng(seed)
+    du = jnp.asarray(rng.standard_normal((K, d)).astype(np.float32))
+    ef = comm.init_residual(K, d)
+    rngs = jax.random.split(jax.random.PRNGKey(0), K)
+    return du, ef, rngs
+
+
+@pytest.mark.parametrize("topo_spec", ["hier:2", "hier:4", "a2a"])
+def test_exchange_topology_parity_uncompressed(topo_spec):
+    """Every reduce plan computes the flat reduce's sum within 1e-6 (only
+    the fp association may differ)."""
+    K = 8
+    du, ef, rngs = _exchange_inputs(K)
+    p = aggregate.AggParams(1.0, float(K))
+    flat, _ = aggregate.exchange(topology.Topology.simulated(K),
+                                 du, ef, rngs, p)
+    got, _ = aggregate.exchange(
+        topology.Topology.simulated(K, topology=topo_spec), du, ef, rngs, p)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(flat),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("topo_spec", ["flat", "hier:2", "a2a"])
+def test_exchange_gather_matches_dense_topk(topo_spec):
+    """Compressed gather (sparse (idx, val) sets, server-side scatter-add)
+    returns the dense top-k reduce's sum and the identical EF residuals,
+    on every topology."""
+    K = 8
+    du, ef, rngs = _exchange_inputs(K)
+    p = aggregate.AggParams(1.0, float(K))
+    c = compress.TopK(4)
+    dense, ef_d = aggregate.exchange(topology.Topology.simulated(K),
+                                     du, ef, rngs, p, c)
+    got, ef_g = aggregate.exchange(
+        topology.Topology.simulated(K, topology=topo_spec),
+        du, ef, rngs, p, c, gather=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(dense),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(ef_g), np.asarray(ef_d))
+
+
+def test_exchange_gather_requires_sparsifier():
+    K = 4
+    du, ef, rngs = _exchange_inputs(K, d=16)
+    p = aggregate.AggParams(1.0, float(K))
+    with pytest.raises(ValueError):
+        aggregate.exchange(topology.Topology.simulated(K), du, ef, rngs, p,
+                           compress.StochasticQuant(8), gather=True)
+    with pytest.raises(ValueError):
+        CoCoAConfig(compress="qsgd", gather=True).compressor()
+    # sparsifiers pass the same check
+    CoCoAConfig(compress="topk", compress_k=4, gather=True).compressor()
+
+
+def test_hops_wire_plans():
+    """The analytic per-hop wire model: flat gather moves 2k per worker
+    (~2kK per round, NOT dK); hier splits intra/inter; a2a pays the
+    2(K-1)/K schedule."""
+    K, d, k = 8, 1000, 16
+    c = compress.TopK(k)
+    f, fs = c.floats_per_message(d), c.gather_floats(d)
+    flat = topology.Topology.simulated(K)
+    hier = topology.Topology.simulated(K, topology="hier:4")
+    a2a = topology.Topology.simulated(K, topology="a2a")
+    assert flat.hops(d, d) == (topology.Hop("reduce", K, d),)
+    assert flat.hops(f, d, fs) == (topology.Hop("gather", K, 2 * k),)
+    assert hier.hops(d, d) == (topology.Hop("intra", K, d),
+                               topology.Hop("inter", K // 4, d))
+    assert hier.hops(f, d, fs) == (
+        topology.Hop("intra_gather", K, 2 * k),
+        topology.Hop("inter_gather", K // 4, 4 * 2 * k))
+    rs, ag = a2a.hops(d, d)
+    chunk = -(-d // K)                     # ceil(d / K): the scattered shard
+    assert rs == topology.Hop("reduce_scatter", K, (K - 1) * chunk)
+    assert ag == topology.Hop("all_gather", K, (K - 1) * chunk)
+    # gather mode executes the identical one-shot all_gather under flat and
+    # a2a, so both are charged the same K * 2k -- no phantom broadcast cost
+    assert a2a.hops(f, d, fs) == flat.hops(f, d, fs)
+
+
+def test_tracer_gather_reports_2kK_not_dK():
+    """Under compressed gather the tracer's per-round reduce volume is the
+    analytic 2kK floats (value+index words), not the dense dK."""
+    K, d, k = 8, 4096, 32
+    tr = tracer.CommTracer.for_run(
+        K=K, d_local=d, compressor=compress.TopK(k),
+        topo=topology.Topology.simulated(K), gather=True)
+    tr.tick(5)
+    assert tr.per_round()["floats"] == 2 * k * K
+    assert tr.floats == 5 * 2 * k * K
+    assert tr.floats < K * d                 # nowhere near the dense reduce
+    assert tr.per_round()["psums"] == 1
+    assert tr.bytes == 4 * tr.floats         # f32 values + int32 indices
+    # randk's gathered sets also carry their indices on the wire (unlike
+    # its dense reduce, where the seed-derived set is rebuilt sender-side)
+    trr = tracer.CommTracer.for_run(
+        K=K, d_local=d, compressor=compress.RandK(k),
+        topo=topology.Topology.simulated(K), gather=True)
+    assert trr.per_round()["floats"] == 2 * k * K
+    assert compress.RandK(k).floats_per_message(d) == k
+
+
+def test_tracer_hier_hops_sum_no_double_counting():
+    """Hierarchical accounting: per-hop floats sum exactly to the per-round
+    total (each message counted in exactly one hop), for the dense and the
+    compressed-gather wire."""
+    K, d, g, k = 8, 512, 2, 16
+    topo = topology.Topology.simulated(K, topology=f"hier:{g}")
+    tr = tracer.CommTracer.for_run(K=K, d_local=d, topo=topo)
+    hops = tr.per_hop()
+    assert [h["hop"] for h in hops] == ["intra", "inter"]
+    assert hops[0]["floats"] == K * d
+    assert hops[1]["floats"] == (K // g) * d
+    assert sum(h["floats"] for h in hops) == tr.per_round()["floats"]
+    trg = tracer.CommTracer.for_run(K=K, d_local=d,
+                                    compressor=compress.TopK(k),
+                                    topo=topo, gather=True)
+    gh = trg.per_hop()
+    assert [h["hop"] for h in gh] == ["intra_gather", "inter_gather"]
+    assert gh[0]["floats"] == K * 2 * k            # sets up to pod leaders
+    assert gh[1]["floats"] == (K // g) * g * 2 * k  # concatenated group sets
+    assert sum(h["floats"] for h in gh) == trg.per_round()["floats"]
+    trg.tick(3)
+    assert trg.floats == 3 * sum(h["floats"] for h in gh)
+    assert trg.psums == 3 * 2                      # one collective per hop
+
+
+def test_solve_history_reports_gather_volume(problem):
+    """End to end: a compressed-gather run's comm_floats history is the
+    analytic 2kK per round, and a hierarchical run's is the per-hop sum."""
+    Xp, yp, mk = problem
+    K = Xp.shape[0]
+    k = 8
+    r = solve(CoCoAConfig.adding(K, loss="hinge", lam=1e-3, H=32,
+                                 compress="topk", compress_k=k, gather=True),
+              Xp, yp, mk, rounds=3, gap_every=1)
+    per = 2 * k * K
+    assert r.history["comm_floats"] == [per, 2 * per, 3 * per]
+    assert r.history["comm_psums"] == [1, 2, 3]
+    d = Xp.shape[2]
+    rh = solve(CoCoAConfig.adding(K, loss="hinge", lam=1e-3, H=32,
+                                  topology="hier:2"),
+               Xp, yp, mk, rounds=2, gap_every=1)
+    per_h = K * d + (K // 2) * d
+    assert rh.history["comm_floats"] == [per_h, 2 * per_h]
+    assert rh.history["comm_psums"] == [2, 4]      # intra + inter per round
+
+
 def test_ef_state_threads_through_solve(problem):
     """The EF residual lives in CoCoAState: nonzero after compressed rounds,
     zeros after exact rounds, and a dropped worker loses its residual."""

@@ -1,0 +1,148 @@
+"""Property-based invariants of the comm.compress wire schemes.
+
+Three contracts every compressed run leans on, checked over drawn shapes /
+budgets / seeds (hypothesis when installed, the vendored deterministic
+stub otherwise):
+
+  * error-feedback telescoping -- across any run, the applied updates plus
+    the final residual equal the raw updates exactly (nothing is ever
+    lost, only deferred); this is why lossy wires still converge to the
+    exact optimum,
+  * top-k idempotence -- the compressor is a projection: re-compressing
+    its own output transmits it unchanged with zero residual,
+  * stochastic-quantization unbiasedness -- E[Q(x)] = x given the norm,
+    estimated over independent seeds,
+
+plus the gather/dense equivalence that makes compressed gather a wire
+routing choice rather than an algorithm change: a sparsifier's
+SparseMessage scattered back to dense is bit-for-bit its dense xhat, with
+the same EF residual.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import compress
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                     # vendored deterministic fallback
+    from _hypothesis_stub import given, settings, st
+
+
+def _updates(T, d, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((T, d)).astype(np.float32))
+
+
+def _scheme(name, k):
+    return {"topk": lambda: compress.TopK(k),
+            "randk": lambda: compress.RandK(k),
+            "qsgd": lambda: compress.StochasticQuant(8),
+            "int8": lambda: compress.Int8()}[name]()
+
+
+# ----------------------------------------------------------------------------
+# error-feedback telescoping
+# ----------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(st.sampled_from(["topk", "randk", "qsgd", "int8"]),
+       st.integers(8, 96), st.integers(1, 12), st.integers(0, 10**6))
+def test_ef_telescopes_to_raw_update_sum(scheme, d, k, seed):
+    """sum_t xhat_t + residual_T == sum_t x_t: the residual is exactly the
+    not-yet-transmitted mass, for every scheme, any horizon."""
+    T = 6
+    xs = _updates(T, d, seed)
+    comp = _scheme(scheme, min(k, d))
+    res = jnp.zeros((d,), jnp.float32)
+    sent = jnp.zeros((d,), jnp.float32)
+    for t in range(T):
+        xhat, res = comp(xs[t], res, jax.random.fold_in(
+            jax.random.PRNGKey(seed % 2**31), t))
+        sent = sent + xhat
+    np.testing.assert_allclose(np.asarray(sent + res),
+                               np.asarray(jnp.sum(xs, axis=0)),
+                               rtol=1e-4, atol=1e-5)
+
+
+# ----------------------------------------------------------------------------
+# top-k idempotence
+# ----------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(8, 80), st.integers(1, 10), st.integers(0, 10**6))
+def test_topk_is_idempotent(d, k, seed):
+    """Top-k is a projection: its output re-compresses to itself, with a
+    zero residual (so an already-k-sparse message travels exactly)."""
+    k = min(k, d)
+    rng = np.random.default_rng(seed)
+    # strictly nonzero magnitudes, well separated from 0 -> no ties with
+    # the zeroed-out coordinates on requantization
+    x = jnp.asarray((rng.uniform(0.5, 2.0, d)
+                     * rng.choice([-1.0, 1.0], d)).astype(np.float32))
+    comp = compress.TopK(k)
+    key = jax.random.PRNGKey(0)
+    xhat, _ = comp(x, jnp.zeros_like(x), key)
+    xhat2, res2 = comp(xhat, jnp.zeros_like(x), key)
+    np.testing.assert_array_equal(np.asarray(xhat2), np.asarray(xhat))
+    np.testing.assert_allclose(np.asarray(res2), 0.0, atol=1e-7)
+
+
+# ----------------------------------------------------------------------------
+# stochastic-quantization unbiasedness
+# ----------------------------------------------------------------------------
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(8, 48), st.integers(0, 10**6))
+def test_qsgd_unbiased_over_seeds(d, seed):
+    """The stochastic rounding direction makes the quantizer unbiased given
+    the norm: the mean over independent seeds converges to x."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(d).astype(np.float32)) * 0.1
+    comp = compress.StochasticQuant(8)
+    zero = jnp.zeros_like(x)
+    keys = jax.random.split(jax.random.PRNGKey(seed % 2**31), 256)
+    outs = jax.vmap(lambda r: comp(x, zero, r)[0])(keys)
+    lvl = float(jnp.max(jnp.abs(x))) / 127.0
+    # standard error of a mean of 256 draws bounded by one level's spread
+    np.testing.assert_allclose(np.asarray(jnp.mean(outs, 0)), np.asarray(x),
+                               atol=4 * lvl / np.sqrt(256) + 1e-6)
+
+
+# ----------------------------------------------------------------------------
+# gather wire form == dense wire form (per worker)
+# ----------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(st.sampled_from(["topk", "randk"]), st.integers(8, 96),
+       st.integers(1, 12), st.integers(0, 10**6))
+def test_sparse_message_scatters_to_dense_xhat(scheme, d, k, seed):
+    """encode -> decode_sum reproduces the dense compressor output exactly,
+    and both forms carry the same EF residual -- compressed gather changes
+    the wire, not the algorithm."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(d).astype(np.float32))
+    res0 = jnp.asarray(rng.standard_normal(d).astype(np.float32)) * 0.1
+    comp = _scheme(scheme, min(k, d))
+    key = jax.random.PRNGKey(seed % 2**31)
+    xhat, res_dense = comp(x, res0, key)
+    msg, res_sparse = comp.encode(x, res0, key)
+    assert msg.idx.dtype == jnp.int32
+    assert msg.idx.shape == msg.val.shape == (min(k, d),)
+    np.testing.assert_array_equal(
+        np.asarray(compress.decode_sum(msg.idx, msg.val, d)),
+        np.asarray(xhat))
+    np.testing.assert_array_equal(np.asarray(res_sparse),
+                                  np.asarray(res_dense))
+
+
+def test_dense_only_schemes_refuse_gather():
+    for comp in (compress.NoCompression(), compress.StochasticQuant(8),
+                 compress.Int8()):
+        assert not comp.supports_gather
+        with pytest.raises(NotImplementedError):
+            comp.encode(jnp.zeros(4), jnp.zeros(4), jax.random.PRNGKey(0))
+        with pytest.raises(NotImplementedError):
+            comp.gather_floats(4)
