@@ -12,7 +12,13 @@ padded-ELL, i.e. a 0.5/density traffic cut).
 repro.comm wire compressors at equal round count (floats actually
 transmitted per round next to the duality gap reached); `--topology
 hier:<g>|a2a` routes it through that reduce plan and adds the
-cross-topology parity + per-hop volume sweep."""
+cross-topology parity + per-hop volume sweep.
+
+`--mesh KxM` runs the 2-D (data x model) feature-sharded mesh sweep --
+vmap reference vs 1-D shard_map vs the KxM mesh across reduce plans, with
+per-axis wire accounting -- and writes the machine-readable
+benchmarks/results/BENCH_cocoa.json that tracks the gap/floats/wall-time
+trajectory across PRs."""
 from __future__ import annotations
 
 import argparse
@@ -219,6 +225,112 @@ def topology_sweep(quick=True, K=4, n=512, d=2048, density=0.01):
     return rows
 
 
+def mesh_sweep(mesh_spec="2x2", quick=True, n=512, d=2048, density=0.01):
+    """2-D (data x model) mesh sweep -> machine-readable BENCH_cocoa.json.
+
+    Runs the same sparse CoCoA+ problem as (1) the vmap reference, (2)
+    shard_map on a 1-D (K,) data mesh (replicated w), and (3) shard_map on
+    the requested (K, M) mesh with w feature-sharded, across
+    flat / hier / a2a reduce plans. Each row records gap-vs-round, the
+    tracer's floats/round with the per-axis and per-hop split, wall time,
+    and the w-parity error vs the vmap reference -- the perf/correctness
+    trajectory file CI keeps across PRs. Asserts parity (1e-5) and that
+    the data-axis reduce volume is the analytic K * ceil(d/M)."""
+    from repro import comm
+    from repro.core import CoCoAConfig, solve
+    from repro.data import sparse as sp
+
+    K, M = (int(v) for v in mesh_spec.lower().split("x"))
+    need = K * M
+    if jax.device_count() < need:
+        print(f"cocoa,mesh_sweep,SKIPPED: needs {need} devices, have "
+              f"{jax.device_count()} (set XLA_FLAGS="
+              f"--xla_force_host_platform_device_count={need})")
+        return []
+    rounds = 4 if quick else 16
+    H = 256 if quick else 1024
+    csr, y = sp.make_sparse_classification(n, d, density=density, seed=0)
+    sh, yp, mk = sp.partition_sparse(csr, y, K, seed=1)
+    fs = sp.shard_features(sh, M)
+    kw = dict(loss="hinge", lam=1e-3, H=H)
+
+    rows = []
+
+    def record(label, backend, mesh_shape, topo, r, dt, w_ref=None):
+        cfg_ = r[0]
+        hist = r[1].history
+        st = r[1].state
+        w_err = (float(jnp.max(jnp.abs(st.w[:d] - w_ref[:d])))
+                 if w_ref is not None else 0.0)
+        wspec = comm.WSpec(d=d, M=mesh_shape[1] if len(mesh_shape) > 1
+                           else 1, model_axis="model"
+                           if len(mesh_shape) > 1 and mesh_shape[1] > 1
+                           else None)
+        tr = comm.CommTracer.for_run(
+            K=K, d_local=wspec.d_local, compressor=cfg_.compressor(),
+            topo=comm.Topology.simulated(K, topology=topo), gather=False,
+            extra_hops=comm.model_hops(wspec, K, H))
+        reduce_floats = sum(h["floats"] for h in tr.per_hop()
+                            if h["axis"] == "data")
+        rows.append(dict(
+            label=label, backend=backend, mesh="x".join(map(str, mesh_shape)),
+            topology=topo, M=wspec.M, d_local=wspec.d_local,
+            rounds=hist["round"], gap_vs_round=hist["gap"],
+            floats_per_round=hist["comm_floats"][-1] // hist["round"][-1],
+            reduce_floats_per_round=reduce_floats,
+            per_axis=tr.per_axis(), per_hop=tr.per_hop(),
+            wall_time_s=round(dt, 3), w_err_vs_vmap=w_err))
+        print(f"cocoa,mesh_sweep,{label},gap={hist['gap'][-1]:.3e},"
+              f"floats_per_round={rows[-1]['floats_per_round']},"
+              f"reduce_floats={reduce_floats},wall_s={dt:.2f},"
+              f"w_err={w_err:.2e}")
+        return w_err
+
+    def timed_solve(cfg, X, mesh=None):
+        t0 = time.time()
+        r = solve(cfg, X, yp, mk, rounds=rounds, gap_every=1, seed=2,
+                  mesh=mesh)
+        jax.block_until_ready(r.state.w)
+        return (cfg, r), time.time() - t0
+
+    # 1) vmap reference
+    cfgv = CoCoAConfig.adding(K, **kw)
+    rv, dt = timed_solve(cfgv, sh)
+    record("vmap_flat", "vmap", (K,), "flat", rv, dt)
+    w_ref = rv[1].state.w
+
+    # 2) shard_map 1-D data mesh (replicated w)
+    mesh1 = jax.make_mesh((K,), ("data",))
+    cfg1 = CoCoAConfig.adding(K, backend="shard_map", **kw)
+    r1, dt = timed_solve(cfg1, sh, mesh1)
+    err = record("shard_map_1d_flat", "shard_map", (K,), "flat", r1, dt,
+                 w_ref)
+    assert err < 1e-5, err
+
+    # 3) shard_map 2-D feature-sharded mesh, across reduce plans
+    mesh2 = jax.make_mesh((K, M), ("data", "model"))
+    topos = ["flat"] + (["hier:2"] if K % 2 == 0 and K >= 2 else []) \
+        + ["a2a"]
+    for topo in topos:
+        cfg2 = CoCoAConfig.adding(K, backend="shard_map",
+                                  model_axis="model", topology=topo, **kw)
+        r2, dt = timed_solve(cfg2, fs, mesh2)
+        err = record(f"shard_map_{mesh_spec}_{topo}", "shard_map", (K, M),
+                     topo, r2, dt, w_ref)
+        assert err < 1e-5, (topo, err)
+        # the data-axis reduce prices at d/M per message -- analytically
+        d_loc = -(-d // M)
+        flat_reduce = K * d_loc
+        if topo == "flat":
+            assert rows[-1]["reduce_floats_per_round"] == flat_reduce, \
+                (rows[-1]["reduce_floats_per_round"], flat_reduce)
+    payload = dict(mesh=mesh_spec, K=K, M=M, n=n, d=d, density=density,
+                   rounds=rounds, H=H, rows=rows)
+    save("BENCH_cocoa", payload)
+    print(f"cocoa,mesh_sweep,saved=BENCH_cocoa.json,rows={len(rows)}")
+    return rows
+
+
 def run(quick: bool = True):
     us = bench_jnp(H=1024 if quick else 8192)
     print(f"kernel,jnp_sdca_us_per_step,{us:.2f}")
@@ -277,8 +389,15 @@ def main():
                     help="reduce plan for --comm: flat | hier:<g> | a2a "
                          "(also triggers the cross-topology parity sweep "
                          "when not flat)")
+    ap.add_argument("--mesh", default="",
+                    help="run the 2-D (data x model) mesh sweep for this "
+                         "'KxM' shape and write BENCH_cocoa.json (needs "
+                         "K*M devices; on CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count)")
     args = ap.parse_args()
-    if args.comm:
+    if args.mesh:
+        mesh_sweep(mesh_spec=args.mesh, quick=not args.full)
+    elif args.comm:
         comm_sweep(quick=not args.full, topology=args.topology)
         if args.topology != "flat":
             topology_sweep(quick=not args.full)

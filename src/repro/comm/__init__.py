@@ -3,6 +3,9 @@
 The paper's premise is that communication dominates, so how partial
 updates travel and combine is a first-class, swappable layer:
 
+    placement  -- WSpec: where the shared primal w lives (replicated, or
+                  feature-sharded over a 2-D (data, model) mesh with
+                  global<->local column maps and offset rebasing)
     topology   -- worker/mesh descriptors + the reduce plan (flat psum,
                   hier:<g> two-level, a2a reduce-scatter) shared by the
                   vmap (simulated) and shard_map (SPMD) backends
@@ -22,7 +25,9 @@ from .aggregate import (AggParams, Aggregator, Add, Average, GammaInterp,
                         from_config)
 from .aggregate import resolve as resolve_aggregator
 from .compress import (Compressor, Int8, NoCompression, RandK, SparseMessage,
-                       StochasticQuant, TopK, decode_sum, init_residual)
+                       StochasticQuant, TopK, decode_sum, init_residual,
+                       merge_sets)
 from .compress import resolve as resolve_compressor
+from .placement import WSpec
 from .topology import Hop, Topology, parse_reduce
-from .tracer import CommTracer
+from .tracer import CommTracer, model_hops

@@ -118,7 +118,8 @@ def from_config(gamma: float, sigma_p: Optional[float], K: int,
 # ----------------------------------------------------------------------------
 
 def exchange(topo: Topology, du, ef, rng, params: AggParams,
-             compressor: Optional[Compressor] = None, gather: bool = False):
+             compressor: Optional[Compressor] = None, gather: bool = False,
+             stats: Optional[dict] = None):
     """Communicate-and-reduce one round's local updates.
 
     Each worker's wire message is Delta w_k = du_k / sigma' (eq. 14's
@@ -137,8 +138,16 @@ def exchange(topo: Topology, du, ef, rng, params: AggParams,
 
     Simulated topology: `du`/`ef` carry a leading K axis and `rng` is a
     (K, ...) batch of per-worker keys. Mesh topology: per-worker values as
-    seen inside shard_map. Returns (dw_sum, new_ef) with dw_sum =
+    seen inside shard_map. Under feature sharding `du`/`ef` are the local
+    w shard (d_local floats) and the whole step runs per model shard: the
+    reduce crosses the data axes only, and gathered SparseMessage indices
+    are shard-local coordinates (rebase with `WSpec.to_global` if a set
+    must leave its shard's frame). Returns (dw_sum, new_ef) with dw_sum =
     sum_k C(Delta w_k) already damped by 1/sigma'.
+
+    `stats`, when a dict is passed, receives measured wire diagnostics
+    (currently `inter_gather`: the post-dedup hier gather volume from
+    `Topology.gather_sets`) as traced scalars for `CommTracer.observe`.
     """
     comp = compressor if compressor is not None else NoCompression()
     if gather:
@@ -149,10 +158,10 @@ def exchange(topo: Topology, du, ef, rng, params: AggParams,
         d = du.shape[-1]
         if topo.is_mesh:
             msg, ef = comp.encode(du / params.sigma_prime, ef, rng)
-            idx, val = topo.gather_msgs(msg.idx, msg.val)
+            idx, val = topo.gather_sets(msg.idx, msg.val, d, stats)
         else:
             msg, ef = jax.vmap(comp.encode)(du / params.sigma_prime, ef, rng)
-            idx, val = msg.idx, msg.val
+            idx, val = topo.gather_sets(msg.idx, msg.val, d, stats)
         return decode_sum(idx, val, d), ef
     if topo.is_mesh:
         msg, ef = comp(du / params.sigma_prime, ef, rng)

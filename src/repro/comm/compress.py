@@ -46,16 +46,57 @@ import jax.numpy as jnp
 
 class SparseMessage(NamedTuple):
     """A sparsifier's wire form for compressed gather: k (index, value)
-    pairs instead of a d-length masked vector."""
+    pairs instead of a d-length masked vector. Under feature sharding the
+    indices are *shard-local* coordinates (the reduce runs per model
+    shard); `rebase` lifts a set into the global frame when it leaves its
+    shard's context."""
     idx: jnp.ndarray      # (k,) int32 coordinate ids
     val: jnp.ndarray      # (k,) values at those coordinates
+
+    def rebase(self, offset) -> "SparseMessage":
+        """Offset-rebase the coordinate frame (local -> global for
+        +wspec.shard_offset(m), global -> local for the negative)."""
+        return SparseMessage(self.idx + offset, self.val)
 
 
 def decode_sum(idx, val, d: int):
     """Server-side decompression: scatter-add gathered per-worker
     (idx, val) sets -- shapes (K, k) -- into the summed dense (d,) message.
-    Also accepts a single (k,) set."""
-    return jnp.zeros((d,), val.dtype).at[idx.reshape(-1)].add(val.reshape(-1))
+    Also accepts a single (k,) set. Indices >= d (the `merge_sets`
+    duplicate sentinel) are dropped."""
+    return jnp.zeros((d,), val.dtype).at[idx.reshape(-1)].add(
+        val.reshape(-1), mode="drop")
+
+
+def merge_sets(idx, val, d: int):
+    """Deduplicate coincident coordinates across gathered (idx, val) sets.
+
+    Input: any (..., k) stack of sets sharing one coordinate frame (e.g.
+    the g per-worker sets a hier pod gathered intra-pod). Output: one
+    flat merged set of the same total size G*k where each distinct
+    coordinate appears once with its values summed; the G*k - unique
+    duplicate slots are parked at the sentinel index `d` with value 0, so
+    `decode_sum` drops them and the scatter-add total is unchanged (only
+    the fp association differs -- values of a shared coordinate are summed
+    at the merge instead of at the server).
+
+    Returns (midx (G*k,), mval (G*k,), unique count) -- `unique` is the
+    *measured* number of live pairs, i.e. what the inter hop actually has
+    to move after dedup (<= G*k, strictly less whenever workers' top-k
+    sets overlap); `comm.tracer.CommTracer.observe` turns it into the
+    post-dedup wire volume.
+    """
+    flat_i = idx.reshape(-1)
+    flat_v = val.reshape(-1)
+    order = jnp.argsort(flat_i)
+    si = flat_i[order]
+    sv = flat_v[order]
+    first = jnp.concatenate([jnp.ones((1,), bool), si[1:] != si[:-1]])
+    run = jnp.cumsum(first) - 1            # run id of each sorted element
+    mval = jnp.zeros_like(sv).at[run].add(sv)
+    midx = jnp.full(si.shape, d, si.dtype).at[run].set(si)
+    unique = jnp.sum(first.astype(jnp.int32))
+    return midx, mval, unique
 
 
 class Compressor:

@@ -1,0 +1,128 @@
+"""w-placement abstraction: where the shared primal vector lives on a mesh.
+
+The paper's communication model assumes each worker holds the full
+d-vector w.  That caps the feature dimension at one device's memory --
+exactly what the url (d~3.2M) / webspam regime breaks.  `WSpec` makes the
+placement a first-class value instead of an implicit replication
+assumption baked into the solvers:
+
+    WSpec(d, M=1)                 -- replicated (the 1-D data-mesh layout;
+                                     every device holds all d floats)
+    WSpec(d, M, model_axis="model") -- feature-sharded over a 2-D
+                                     (data=K, model=M) mesh: device column
+                                     m holds the contiguous slice
+                                     [m*d_local, (m+1)*d_local) of the
+                                     padded vector, d_local = ceil(d/M)
+
+Everything that touches w consumes the spec instead of assuming shape
+(d,): the data layer slices ELL shards per feature block and remaps
+column ids to shard-local coordinates (`data.sparse.shard_features`), the
+solvers run their gather-dot against the local shard and psum the scalar
+partial over the model axis, comm reduces Delta-w shards over the data
+axis only (d/M floats per message), and compressed-gather SparseMessages
+carry shard-local indices that `rebase` lifts back to global coordinates
+when a set leaves its shard's frame.
+
+Memory: replicated w costs d floats on every device (d*K*M total on a
+2-D mesh); sharded it costs d/M per device (d*K total) -- the d~3.2M
+datasets fit as soon as M covers them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class WSpec:
+    """Placement of the shared primal d-vector.
+
+    `d` is the global (unpadded) feature count; `M` the number of model
+    shards; `model_axis` the mesh axis carrying them (None while
+    replicated or simulated). The stored vector is padded to
+    `d_padded = M * d_local` so every shard is the same width; padded
+    coordinates never carry data (no column maps to them), so they stay
+    exactly zero through every round.
+    """
+    d: int
+    M: int = 1
+    model_axis: Optional[str] = None
+
+    def __post_init__(self):
+        if self.d < 1:
+            raise ValueError(f"d must be >= 1, got {self.d}")
+        if self.M < 1:
+            raise ValueError(f"M must be >= 1, got {self.M}")
+        if self.M > 1 and self.model_axis is None:
+            raise ValueError(
+                f"M={self.M} feature shards need a model_axis mesh axis "
+                f"to live on")
+
+    # -- geometry ------------------------------------------------------------
+
+    @property
+    def sharded(self) -> bool:
+        return self.M > 1
+
+    @property
+    def d_local(self) -> int:
+        """Floats of w each device holds (and moves per data-axis reduce)."""
+        return -(-self.d // self.M)
+
+    @property
+    def d_padded(self) -> int:
+        return self.d_local * self.M
+
+    def shard_offset(self, m) -> int:
+        """Global coordinate of shard m's first column."""
+        return m * self.d_local
+
+    def shard_bounds(self, m: int) -> Tuple[int, int]:
+        """[lo, hi) of *real* (unpadded) global columns owned by shard m."""
+        lo = m * self.d_local
+        return lo, min(lo + self.d_local, self.d)
+
+    # -- the global <-> local column map -------------------------------------
+
+    def to_local(self, cols, m):
+        """Global column ids -> shard-m-local ids (contiguous block map)."""
+        return cols - self.shard_offset(m)
+
+    def to_global(self, cols, m):
+        """Shard-m-local column ids -> global ids (offset rebasing)."""
+        return cols + self.shard_offset(m)
+
+    def owner_of(self, cols):
+        """Which shard owns each global column."""
+        return cols // self.d_local
+
+    # -- w padding helpers ---------------------------------------------------
+
+    def pad_w(self, w):
+        """(d,) -> (d_padded,); identity when already padded/replicated."""
+        if w.shape[-1] == self.d_padded:
+            return w
+        if w.shape[-1] != self.d:
+            raise ValueError(f"cannot place a ({w.shape[-1]},) vector under "
+                             f"WSpec(d={self.d}, M={self.M})")
+        pad = self.d_padded - self.d
+        if isinstance(w, np.ndarray):
+            return np.pad(w, (0, pad))
+        return jnp.pad(w, (0, pad))
+
+    def unpad_w(self, w):
+        """(d_padded,) -> the global (d,) vector."""
+        if w.shape[-1] not in (self.d, self.d_padded):
+            raise ValueError(f"({w.shape[-1]},) vector is neither d={self.d} "
+                             f"nor d_padded={self.d_padded}")
+        return w[..., :self.d]
+
+    # -- shard_map specs -----------------------------------------------------
+
+    def spec(self) -> P:
+        """PartitionSpec of the stored w vector."""
+        return P(self.model_axis) if self.sharded else P()

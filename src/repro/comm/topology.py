@@ -40,7 +40,7 @@ plan as `Hop` descriptors -- per hop: how many messages travel and how many
 equivalent f32 floats each carries -- which `comm.tracer.CommTracer` turns
 into per-round volume. Compressed *gather* (per-worker top-k (index, value)
 sets decompressed server-side, see `comm.aggregate.exchange`) swaps the
-dense reduce for `gather_msgs`, so the reduce itself moves ~2kK floats
+dense reduce for `gather_sets`, so the reduce itself moves ~2kK floats
 instead of dK.
 
 Both backends in `core.cocoa` build their reduction through
@@ -56,6 +56,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from .compress import merge_sets
+from .placement import WSpec
+
 REDUCE_KINDS = ("flat", "hier", "a2a")
 
 
@@ -66,11 +69,15 @@ class Hop:
     `messages` is how many wire messages this hop carries per round (summed
     over all senders); `floats_per_message` is the equivalent f32 floats in
     each. Up-link counting only, matching the PR-2 model (the flat reduce
-    is one hop of K messages of `floats_per_message(d_local)`).
+    is one hop of K messages of `floats_per_message(d_local)`). `axis`
+    names which mesh direction the hop crosses ("data" for the Delta-w
+    reduce plan; "model" for the feature-sharded solver's partial-dot
+    exchange) so per-axis accounting can split the wire bill.
     """
     name: str
     messages: int
     floats_per_message: int
+    axis: str = "data"
 
     @property
     def floats(self) -> int:
@@ -119,6 +126,17 @@ class Topology:
     @property
     def is_mesh(self) -> bool:
         return bool(self.data_axes)
+
+    @property
+    def M(self) -> int:
+        """Model-axis size: how many shards the w vector splits into."""
+        if self.model_axis is not None and self.mesh is not None:
+            return self.mesh.shape[self.model_axis]
+        return 1
+
+    def wspec(self, d: int) -> WSpec:
+        """The w placement this topology implies for a d-feature problem."""
+        return WSpec(d=d, M=self.M, model_axis=self.model_axis)
 
     # -- construction --------------------------------------------------------
 
@@ -229,17 +247,6 @@ class Topology:
 
     # -- compressed gather (sparse (idx, val) sets; see comm.compress) -------
 
-    def gather_msgs(self, *msgs):
-        """Gather per-worker message arrays into worker-major (K, ...)
-        stacks -- the collective behind compressed gather. Simulated flavor:
-        inputs already carry the K axis (identity). Mesh flavor: all_gather
-        over the data axes, routed per the reduce kind (hier gathers
-        group-first so only K/g concatenated group sets cross pods)."""
-        if not self.is_mesh:
-            return msgs if len(msgs) > 1 else msgs[0]
-        out = tuple(self._gather_one(m) for m in msgs)
-        return out if len(out) > 1 else out[0]
-
     def _gather_one(self, m):
         K, g = self.K, self.group
         if self.reduce == "hier":
@@ -257,6 +264,57 @@ class Topology:
             return b.reshape((K,) + m.shape)
         # flat and a2a gather the same stack; only the wire plan differs
         return jax.lax.all_gather(m, self.data_axes, axis=0)
+
+    def gather_sets(self, idx, val, d: int, stats: Optional[dict] = None):
+        """Gather per-worker SparseMessage (idx, val) sets for server-side
+        `decode_sum`, deduplicating coincident coordinates at the pod
+        boundary under hier: after the intra gather each pod merges its g
+        sets (`compress.merge_sets`), so the inter hop forwards at most
+        g*k live pairs and strictly fewer whenever workers' index sets
+        overlap. `stats["inter_gather"]`, when a dict is passed, receives
+        the *measured* post-dedup inter volume in floats per round (2
+        words per live pair, summed over pods) -- feed it to
+        `CommTracer.observe` so the accounting reflects the wire, not the
+        static upper bound. Flat/a2a run the one-shot gather unchanged
+        (one hop; dedup could only move the scatter-add work, not wire
+        volume).
+
+        Returns (idx_stack, val_stack) ready for `decode_sum(..., d)`;
+        merged duplicate slots sit at the sentinel index `d` with value 0.
+        """
+        if self.reduce != "hier":
+            if not self.is_mesh:
+                return idx, val
+            return self._gather_one(idx), self._gather_one(val)
+        K, g = self.K, self.group
+        if not self.is_mesh:
+            gi = idx.reshape((K // g, g) + idx.shape[1:])
+            gv = val.reshape((K // g, g) + val.shape[1:])
+            mi, mv, uniq = jax.vmap(lambda i, v: merge_sets(i, v, d))(gi, gv)
+            if stats is not None:
+                stats["inter_gather"] = 2 * jnp.sum(uniq)
+            return mi, mv
+        if len(self.data_axes) > 1:
+            pre, suf = self._hier_axis_split()
+            ii = jax.lax.all_gather(idx, suf, axis=0)          # (g, k)
+            vv = jax.lax.all_gather(val, suf, axis=0)
+            mi, mv, uniq = merge_sets(ii, vv, d)
+            oi = jax.lax.all_gather(mi, pre, axis=0) if pre else mi[None]
+            ov = jax.lax.all_gather(mv, pre, axis=0) if pre else mv[None]
+        else:
+            intra, inter = self._index_groups()
+            ax = self.data_axes[0]
+            ii = jax.lax.all_gather(idx, ax, axis=0, axis_index_groups=intra)
+            vv = jax.lax.all_gather(val, ax, axis=0, axis_index_groups=intra)
+            mi, mv, uniq = merge_sets(ii, vv, d)
+            oi = jax.lax.all_gather(mi, ax, axis=0, axis_index_groups=inter)
+            ov = jax.lax.all_gather(mv, ax, axis=0, axis_index_groups=inter)
+        if stats is not None:
+            # every device in a pod holds the same unique count, so the
+            # data-axes psum counts each pod g times -- normalize it away
+            stats["inter_gather"] = (
+                jax.lax.psum(2 * uniq, self.data_axes) // g)
+        return oi, ov
 
     # -- the wire plan -------------------------------------------------------
 
@@ -297,11 +355,8 @@ class Topology:
 
     def d_local(self, d: int) -> int:
         """Floats of the shared d-vector each worker moves per reduce
-        (feature sharding over the model axis divides it)."""
-        if (self.model_axis is not None and self.mesh is not None
-                and self.model_axis in dict(getattr(self.mesh, "shape", {}))):
-            return -(-d // self.mesh.shape[self.model_axis])
-        return d
+        (feature sharding over the model axis divides it: d/M)."""
+        return self.wspec(d).d_local
 
     # -- shard_map PartitionSpecs -------------------------------------------
 

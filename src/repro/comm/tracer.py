@@ -22,7 +22,19 @@ import dataclasses
 from typing import Optional, Tuple
 
 from .compress import Compressor, NoCompression
+from .placement import WSpec
 from .topology import Hop, Topology
+
+
+def model_hops(wspec: WSpec, K: int, H: int) -> Tuple[Hop, ...]:
+    """The feature-sharded solver's model-axis wire plan: one scalar psum
+    per coordinate step completes each partial gather-dot, i.e. every one
+    of the K*M devices sends H floats per round across the model axis.
+    Empty while w is replicated -- the one place this pricing lives
+    (solve's history, the trainer summary, and the bench all call it)."""
+    if not wspec.sharded:
+        return ()
+    return (Hop("model_z", K * wspec.M, H, axis="model"),)
 
 
 @dataclasses.dataclass
@@ -30,20 +42,31 @@ class CommTracer:
     """Counts rounds and converts them to wire volume via the hop plan.
 
     Bytes are 4 * floats (values and int32 indices are both 4-byte words
-    in the wire model); `psums` counts collectives, one per hop.
+    in the wire model); `psums` counts collectives, one per hop. Hops
+    whose analytic floats are only an upper bound (the hier inter_gather
+    hop after dedup) can be fed *measured* per-round volumes through
+    `observe`; totals then use the measurement for those hops and the
+    analytic plan for the rest. Under feature sharding the plan is priced
+    per model shard (d_local = d/M per message); `extra_hops` carries the
+    model-axis hops the feature-sharded solver adds (the per-step partial
+    dot exchange), and `per_axis` splits the bill by mesh direction.
     """
     K: int
     hops: Tuple[Hop, ...]
     rounds: int = 0
+    measured: dict = dataclasses.field(default_factory=dict)
 
     @staticmethod
     def for_run(K: int, d_local: int,
                 compressor: Optional[Compressor] = None,
                 topo: Optional[Topology] = None,
-                gather: bool = False) -> "CommTracer":
+                gather: bool = False,
+                extra_hops: Tuple[Hop, ...] = ()) -> "CommTracer":
         """Tracer for a run. Without `topo` this is the PR-2 flat model
         (one reduce hop of K messages); with it, the topology's reduce
-        plan -- including the compressed-gather wire form when `gather`."""
+        plan -- including the compressed-gather wire form when `gather`.
+        `extra_hops` appends hops outside the reduce plan proper (the
+        feature-sharded solver's model-axis scalar exchange)."""
         comp = compressor if compressor is not None else NoCompression()
         f_msg = comp.floats_per_message(d_local)
         if topo is None:
@@ -51,10 +74,22 @@ class CommTracer:
         else:
             f_set = comp.gather_floats(d_local) if gather else None
             hops = topo.hops(f_msg, d_local, f_set)
-        return CommTracer(K=K, hops=hops)
+        return CommTracer(K=K, hops=hops + tuple(extra_hops))
 
     def tick(self, rounds: int = 1) -> None:
         self.rounds += rounds
+
+    def observe(self, hop: str, floats) -> None:
+        """Record one round's *measured* floats for `hop` (e.g. the
+        post-dedup inter_gather volume). Accumulates across rounds; the
+        hop's analytic plan becomes an upper bound and every total below
+        uses the measurement instead."""
+        self.measured[hop] = self.measured.get(hop, 0) + int(floats)
+
+    def _hop_floats(self, h: Hop) -> int:
+        if h.name in self.measured:
+            return self.measured[h.name]
+        return self.rounds * h.floats
 
     # -- per-round plan ------------------------------------------------------
 
@@ -79,7 +114,7 @@ class CommTracer:
 
     @property
     def floats(self) -> int:
-        return self.rounds * self.floats_per_round
+        return sum(self._hop_floats(h) for h in self.hops)
 
     @property
     def bytes(self) -> int:
@@ -100,9 +135,26 @@ class CommTracer:
                 "psums": self.psums_per_round}
 
     def per_hop(self) -> list:
-        """Per-hop per-round breakdown; floats sum to per_round()['floats']
-        (each message is counted in exactly one hop)."""
-        return [{"hop": h.name, "messages": h.messages,
-                 "floats_per_message": h.floats_per_message,
-                 "floats": h.floats, "bytes": 4 * h.floats}
-                for h in self.hops]
+        """Per-hop per-round breakdown; analytic floats sum to
+        per_round()['floats'] (each message is counted in exactly one
+        hop). Hops with a measurement additionally report
+        'measured_floats': the cumulative observed volume that replaces
+        the analytic plan in `totals()`."""
+        out = []
+        for h in self.hops:
+            row = {"hop": h.name, "axis": h.axis, "messages": h.messages,
+                   "floats_per_message": h.floats_per_message,
+                   "floats": h.floats, "bytes": 4 * h.floats}
+            if h.name in self.measured:
+                row["measured_floats"] = self.measured[h.name]
+            out.append(row)
+        return out
+
+    def per_axis(self) -> dict:
+        """Per-round floats split by mesh direction -- the 2-D mesh wire
+        table: the data-axis reduce scales as d/M per message while the
+        model-axis solver exchange scales with H, independent of d."""
+        out: dict = {}
+        for h in self.hops:
+            out[h.axis] = out.get(h.axis, 0) + h.floats
+        return out

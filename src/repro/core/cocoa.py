@@ -19,12 +19,19 @@ cross-worker reduction through repro.comm (exchange -> apply_update):
   * "shard_map": production SPMD over a mesh axis; the aggregate is a psum
                  and each device keeps only its own (A_[k], alpha_[k]) shard
                  -- dense (K, nk, d) blocks or padded-ELL SparseShards
-                 feeding the sparse LocalSDCA solvers. With a 2-D
-                 (data, model) mesh the feature dimension d is additionally
-                 sharded over "model" (dense only; ELL column ids are
-                 global), so the per-round psum moves d/|model| floats per
-                 device -- the paper's one-vector-per-round communication
-                 model, tensor-sharded.
+                 feeding the sparse LocalSDCA solvers.
+
+w placement is a first-class `comm.WSpec`: on a 2-D (data=K, model=M)
+mesh w lives feature-sharded over the model axis (d/M floats per device,
+never a d-sized replicated buffer). Dense data shards its feature axis
+through the in_specs; sparse data arrives as `data.sparse.FeatureShards`
+whose ELL column ids are already remapped to each device's local w slice.
+The solvers complete their per-step gather-dot with one scalar psum over
+the model axis, so every model shard takes identical coordinate
+decisions; the per-round Delta-w reduce then crosses the *data* axes
+only, one w-shard (d/M floats) per device per round -- the paper's
+one-vector-per-round communication model, tensor-sharded. M=1 reproduces
+the 1-D replicated layout bit-for-bit.
 """
 from __future__ import annotations
 
@@ -37,8 +44,10 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro import comm
+from repro.comm.placement import WSpec
 from repro.comm.topology import Topology
-from repro.data.sparse import SparseShards
+from repro.data import sparse as sparse_data
+from repro.data.sparse import FeatureShards, SparseShards
 
 from . import duality
 from .losses import Loss, get_loss
@@ -93,13 +102,19 @@ class CoCoAConfig:
 
 
 class CoCoAState(NamedTuple):
-    w: jnp.ndarray        # (d,) shared primal vector
+    w: jnp.ndarray        # (d,) shared primal vector -- d is the *placed*
+                          # width (WSpec.d_padded under feature sharding)
     alpha: jnp.ndarray    # (K, nk) partitioned duals
     rng: jax.Array
     rounds: jnp.ndarray   # scalar int32
     alpha_bar: jnp.ndarray  # running sum for averaged iterate (or zeros)
     ef: jnp.ndarray       # (K, d) per-worker error-feedback residuals
                           # (zeros while compression is off)
+    wire: Optional[jnp.ndarray] = None
+                          # measured post-dedup inter_gather floats of the
+                          # last round (hier compressed gather only; None
+                          # elsewhere -- not a pytree leaf then, so legacy
+                          # checkpoints and jit signatures are unchanged)
 
 
 def init_state(d: int, K: int, nk: int, seed: int = 0,
@@ -112,6 +127,26 @@ def init_state(d: int, K: int, nk: int, seed: int = 0,
         alpha_bar=jnp.zeros((K, nk), dtype),
         ef=comm.init_residual(K, d, dtype),
     )
+
+
+def reshard_w_state(state: CoCoAState, old: WSpec, new: WSpec,
+                    params: comm.AggParams) -> CoCoAState:
+    """Carry (w, ef) across a w-placement change -- a legacy replicated-w
+    checkpoint restored onto a 2-D mesh, or an elastic re-partition that
+    changes M. The EF residuals are un-transmitted message mass in the
+    *old* placement's frame, so they are flushed into w first (the
+    existing comm.flush_ef path -- nothing is silently dropped), then w is
+    lifted to the global frame and re-padded for the new placement, and
+    fresh zero residuals are laid out at the new width."""
+    if old.d != new.d:
+        raise ValueError(f"placements disagree on the feature count: "
+                         f"{old.d} vs {new.d}")
+    w = comm.flush_ef(state.w, state.ef, params)
+    w = new.pad_w(old.unpad_w(w))
+    K = state.ef.shape[0]
+    return state._replace(w=w,
+                          ef=comm.init_residual(K, new.d_padded,
+                                                state.ef.dtype))
 
 
 def _solver_fn(name: str):
@@ -134,29 +169,46 @@ _SPARSE_SOLVERS = {
 }
 
 
-def _resolve_solver(name: str, sparse: bool) -> str:
+def _resolve_solver(name: str, sparse: bool,
+                    feature_sharded: bool = False) -> str:
     if not sparse:
         if name in ("sdca_sparse", "sdca_sparse_kernel"):
             raise ValueError(
                 f"solver {name!r} needs SparseShards inputs; dense arrays "
                 f"take 'sdca' / 'sdca_kernel' (mapped automatically when the "
                 f"data is sparse)")
-        return name
-    if name not in _SPARSE_SOLVERS:
+        resolved = name
+    elif name not in _SPARSE_SOLVERS:
         raise ValueError(
             f"solver {name!r} has no sparse path; pick one of "
             f"{sorted(set(_SPARSE_SOLVERS))} for SparseShards inputs")
-    return _SPARSE_SOLVERS[name]
+    else:
+        resolved = _SPARSE_SOLVERS[name]
+    if feature_sharded and resolved not in ("sdca", "sdca_sparse"):
+        # the per-step partial-dot psum over the model axis lives inside
+        # the solver's coordinate loop; a Pallas kernel (or gd/deadline)
+        # cannot host that collective, so M>1 routes through the jnp
+        # solvers (the kernels stay valid at M=1, where the local shard
+        # IS the full w)
+        raise ValueError(
+            f"solver {resolved!r} cannot run feature-sharded (M>1): the "
+            f"model-axis partial-dot exchange needs the jnp coordinate "
+            f"loop; use 'sdca' (dense) or 'sdca_sparse' (ELL shards)")
+    return resolved
 
 
 def _worker_body(X_k, y_k, alpha_k, mask_k, w, rng, *, loss: Loss, lam: float,
                  n, sigma_p: float, H: int, solver: str,
-                 budget=None, sqnorms=None) -> SDCAResult:
+                 budget=None, sqnorms=None, model_axis=None) -> SDCAResult:
     fn = _solver_fn(solver)
     if solver == "sdca_deadline":
         return fn(X_k, y_k, alpha_k, mask_k, w, rng, loss, lam, n, sigma_p, H,
                   budget if budget is not None else jnp.asarray(H))
-    if solver in ("sdca", "sdca_importance", "sdca_sparse"):
+    if solver in ("sdca", "sdca_sparse"):
+        return fn(X_k, y_k, alpha_k, mask_k, w, rng, loss, lam, n, sigma_p, H,
+                  sqnorms=sqnorms, model_axis=model_axis)
+    assert model_axis is None, (solver, "has no feature-sharded path")
+    if solver == "sdca_importance":
         return fn(X_k, y_k, alpha_k, mask_k, w, rng, loss, lam, n, sigma_p, H,
                   sqnorms=sqnorms)
     return fn(X_k, y_k, alpha_k, mask_k, w, rng, loss, lam, n, sigma_p, H)
@@ -197,12 +249,14 @@ def make_round_vmap(cfg: CoCoAConfig, K: int,
             )(X, y, alpha_split(state.alpha, K), mask, rngs, budget)
         # --- the communication step: damp, compress, reduce, apply ---
         crngs = jax.vmap(comm.comm_rng)(rngs)
+        stats = {}
         dw_sum, ef = comm.exchange(topo, res.du, state.ef, crngs, p,
-                                   compressor, gather=cfg.gather)
+                                   compressor, gather=cfg.gather, stats=stats)
         w, alpha = comm.apply_update(state.w, state.alpha, dw_sum,
                                      res.dalpha, p)
         return CoCoAState(w, alpha, rng, state.rounds + 1,
-                          state.alpha_bar + alpha, ef)
+                          state.alpha_bar + alpha, ef,
+                          stats.get("inter_gather"))
 
     return round_fn
 
@@ -218,21 +272,30 @@ def alpha_split(alpha, K):
 # ----------------------------------------------------------------------------
 
 def make_round_sharded(cfg: CoCoAConfig, mesh) -> Callable[..., CoCoAState]:
-    """Rounds over a mesh: K = mesh.shape[data_axis] workers.
+    """Rounds over a mesh: K = prod(mesh.shape[data_axes]) workers, with w
+    placed per the topology's `WSpec` (replicated, or feature-sharded over
+    cfg.model_axis into M shards of d_loc = ceil(d/M) floats).
 
     Layouts (global -> per-shard under shard_map), dense:
-      X     (K, nk, d)  P(data, None, model?)   -> (1, nk, d_loc)
-      y,mask,alpha (K, nk)  P(data, None)       -> (1, nk)
-      w     (d,)        P(model?)               -> (d_loc,)
-      ef    (K, d)      P(data, model?)         -> (1, d_loc)
-    and sparse (padded-ELL SparseShards; model_axis is unsupported here
-    because ELL column ids index the global feature space):
+      X     (K, nk, d_pad)  P(data, None, model?) -> (1, nk, d_loc)
+      y,mask,alpha (K, nk)  P(data, None)         -> (1, nk)
+      w     (d_pad,)    WSpec.spec()              -> (d_loc,)
+      ef    (K, d_pad)  P(data, model?)           -> (1, d_loc)
+    sparse replicated (padded-ELL SparseShards, global column ids):
       cols/vals (K, nk, r_max)  P(data, None, None) -> (1, nk, r_max)
       nnz       (K, nk)         P(data, None)       -> (1, nk)
       w         (d,)            P()                 -> (d,) replicated
-    The per-round communication is exactly one psum of w-sized shards over
-    the data axis (the paper's single-vector reduce, eq. 14), routed
-    through comm.exchange exactly like the vmap backend.
+    and sparse feature-sharded (FeatureShards, shard-LOCAL column ids):
+      cols/vals (K, M, nk, r_loc) P(data, model, None, None)
+                                                  -> (1, 1, nk, r_loc)
+      nnz       (K, M, nk)      P(data, model, None) -> (1, 1, nk)
+      w         (M*d_loc,)      P(model)          -> (d_loc,)
+      sqnorms   (K, nk) global  P(data, None)     -> (1, nk) replicated
+    The per-round communication is one psum of w-shards over the *data*
+    axes per feature shard (the paper's single-vector reduce, eq. 14,
+    d_loc floats per device) -- plus, under feature sharding, the scalar
+    partial-dot psum over the model axis inside each solver step. Both
+    route through comm exactly like the vmap backend.
     """
     from jax.experimental.shard_map import shard_map
 
@@ -240,35 +303,54 @@ def make_round_sharded(cfg: CoCoAConfig, mesh) -> Callable[..., CoCoAState]:
     topo = Topology.from_mesh(mesh, cfg.data_axis, cfg.model_axis,
                               topology=cfg.topology)
     K = topo.K
+    M = topo.M
+    sharded_w = M > 1
     p = cfg.agg_params(K)
     compressor = cfg.compressor()
     mspec = cfg.model_axis  # None -> replicated features
+    # measured post-dedup inter volume only exists for hier gather
+    want_wire = cfg.gather and topo.reduce == "hier"
 
-    def _per_worker(w, Xk, yk, ak, mk, efk, rng, n, sqn_k, solver):
+    def _per_worker(w, Xk, yk, ak, mk, efk, rng, n, sqn_k, solver,
+                    model_axis=None):
         # fold the worker index into the rng so workers de-correlate (and
-        # match the vmap backend's fold_in(sub, k) stream exactly)
+        # match the vmap backend's fold_in(sub, k) stream exactly); the
+        # index runs over the data axes only, so every model shard of a
+        # worker draws the identical coordinate sequence
         rngk = jax.random.fold_in(rng, topo.worker_index())
         res = _worker_body(Xk, yk, ak, mk, w, rngk, loss=loss, lam=cfg.lam,
                            n=n, sigma_p=p.sigma_prime, H=cfg.H, solver=solver,
-                           sqnorms=sqn_k)
-        # --- the one communicated vector per round per worker ---
+                           sqnorms=sqn_k, model_axis=model_axis)
+        # --- the one communicated w-shard per round per worker ---
+        stats = {}
         dw_sum, ef_new = comm.exchange(topo, res.du, efk, comm.comm_rng(rngk),
-                                       p, compressor, gather=cfg.gather)
-        return res, dw_sum, ef_new
+                                       p, compressor, gather=cfg.gather,
+                                       stats=stats)
+        wire = stats.get("inter_gather")
+        if wire is not None and sharded_w:
+            # each model shard ran its own per-shard gather; the tracer
+            # prices hops per model shard (d/M-scaled), so report the
+            # mean shard's measured volume to keep the units consistent
+            wire = jax.lax.psum(wire, mspec) // M
+        return res, dw_sum, ef_new, wire
 
     def _build_dense():
-        solver = _resolve_solver(cfg.solver, sparse=False)
+        solver = _resolve_solver(cfg.solver, sparse=False,
+                                 feature_sharded=sharded_w)
+        maxis = mspec if sharded_w else None
 
         def per_shard(w, X, y, alpha, mask, ef, rng, n, rounds, alpha_bar,
                       sqn):
-            # shapes: w (d_loc,), X (1, nk, d_loc), y/alpha/mask (1, nk)
-            res, dw_sum, ef_new = _per_worker(
+            # shapes: w (d_loc,), X (1, nk, d_loc), y/alpha/mask (1, nk);
+            # sqn carries the *global* row norms (replicated over model)
+            res, dw_sum, ef_new, wire = _per_worker(
                 w, X[0], y[0], alpha[0], mask[0], ef[0], rng, n, sqn[0],
-                solver)
+                solver, maxis)
             w_new, alpha_new = comm.apply_update(w, alpha, dw_sum,
                                                  res.dalpha[None], p)
-            return (w_new, alpha_new, rounds + 1, alpha_bar + alpha_new,
-                    ef_new[None])
+            out = (w_new, alpha_new, rounds + 1, alpha_bar + alpha_new,
+                   ef_new[None])
+            return out + ((wire,) if want_wire else ())
 
         in_specs = (topo.w_spec(),                 # w
                     topo.row_spec(None, mspec),    # X
@@ -280,16 +362,14 @@ def make_round_sharded(cfg: CoCoAConfig, mesh) -> Callable[..., CoCoAState]:
                     topo.row_spec(None),           # alpha_bar
                     topo.row_spec(None))           # sqnorms
         out_specs = (topo.w_spec(), topo.row_spec(None), P(),
-                     topo.row_spec(None), topo.row_spec(mspec))
+                     topo.row_spec(None), topo.row_spec(mspec)) \
+            + ((P(),) if want_wire else ())
         return shard_map(per_shard, mesh=mesh, in_specs=in_specs,
                          out_specs=out_specs, check_rep=False)
 
     def _build_sparse():
-        if cfg.model_axis is not None:
-            raise ValueError(
-                "model_axis feature sharding is not supported for "
-                "SparseShards inputs: padded-ELL column ids index the "
-                "global feature space, so w must stay replicated")
+        # replicated-w ELL path (global column ids); feature sharding
+        # arrives as FeatureShards through _build_sparse_fs instead
         solver = _resolve_solver(cfg.solver, sparse=True)
 
         def per_shard(w, cols, vals, nnz, y, alpha, mask, ef, rng, n, rounds,
@@ -297,13 +377,14 @@ def make_round_sharded(cfg: CoCoAConfig, mesh) -> Callable[..., CoCoAState]:
             # shapes: w (d,) replicated, cols/vals (1, nk, r_max),
             # nnz/y/alpha/mask (1, nk), ef (1, d)
             shard = SparseShards(cols[0], vals[0], nnz[0], d=w.shape[0])
-            res, dw_sum, ef_new = _per_worker(
+            res, dw_sum, ef_new, wire = _per_worker(
                 w, shard, y[0], alpha[0], mask[0], ef[0], rng, n, None,
                 solver)
             w_new, alpha_new = comm.apply_update(w, alpha, dw_sum,
                                                  res.dalpha[None], p)
-            return (w_new, alpha_new, rounds + 1, alpha_bar + alpha_new,
-                    ef_new[None])
+            out = (w_new, alpha_new, rounds + 1, alpha_bar + alpha_new,
+                   ef_new[None])
+            return out + ((wire,) if want_wire else ())
 
         in_specs = (P(),                           # w (replicated)
                     topo.row_spec(None, None),     # cols
@@ -316,31 +397,96 @@ def make_round_sharded(cfg: CoCoAConfig, mesh) -> Callable[..., CoCoAState]:
                     P(), P(), P(),                 # rng, n, rounds
                     topo.row_spec(None))           # alpha_bar
         out_specs = (P(), topo.row_spec(None), P(), topo.row_spec(None),
-                     topo.row_spec(None))
+                     topo.row_spec(None)) + ((P(),) if want_wire else ())
+        return shard_map(per_shard, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=False)
+
+    def _build_sparse_fs():
+        # feature-sharded ELL path: shard-local column ids against the
+        # local w slice; works for any M >= 1 (M=1 is the identity map)
+        solver = _resolve_solver(cfg.solver, sparse=True,
+                                 feature_sharded=sharded_w)
+        maxis = mspec if sharded_w else None
+
+        def per_shard(w, cols, vals, nnz, y, alpha, mask, ef, rng, n, rounds,
+                      alpha_bar, sqn):
+            # shapes: w (d_loc,), cols/vals (1, 1, nk, r_loc),
+            # nnz (1, 1, nk), y/alpha/mask/sqn (1, nk), ef (1, d_loc)
+            shard = SparseShards(cols[0, 0], vals[0, 0], nnz[0, 0],
+                                 d=w.shape[0])
+            res, dw_sum, ef_new, wire = _per_worker(
+                w, shard, y[0], alpha[0], mask[0], ef[0], rng, n,
+                sqn[0] if sharded_w else None, solver, maxis)
+            w_new, alpha_new = comm.apply_update(w, alpha, dw_sum,
+                                                 res.dalpha[None], p)
+            out = (w_new, alpha_new, rounds + 1, alpha_bar + alpha_new,
+                   ef_new[None])
+            return out + ((wire,) if want_wire else ())
+
+        in_specs = (topo.w_spec(),                  # w
+                    topo.row_spec(mspec, None, None),  # cols
+                    topo.row_spec(mspec, None, None),  # vals
+                    topo.row_spec(mspec, None),     # nnz
+                    topo.row_spec(None),            # y
+                    topo.row_spec(None),            # alpha
+                    topo.row_spec(None),            # mask
+                    topo.row_spec(mspec),           # ef
+                    P(), P(), P(),                  # rng, n, rounds
+                    topo.row_spec(None),            # alpha_bar
+                    topo.row_spec(None))            # sqnorms (global)
+        out_specs = (topo.w_spec(), topo.row_spec(None), P(),
+                     topo.row_spec(None), topo.row_spec(mspec)) \
+            + ((P(),) if want_wire else ())
         return shard_map(per_shard, mesh=mesh, in_specs=in_specs,
                          out_specs=out_specs, check_rep=False)
 
     built = {}
 
+    def _unpack(outs):
+        if want_wire:
+            return outs[:-1], outs[-1]
+        return outs, None
+
     def round_fn(state: CoCoAState, X, y, mask, n=None,
                  sqnorms=None) -> CoCoAState:
         n_ = duality.effective_n(mask) if n is None else n
         rng, sub = jax.random.split(state.rng)
-        if isinstance(X, SparseShards):
+        if isinstance(X, FeatureShards):
+            if X.M != M:
+                raise ValueError(
+                    f"FeatureShards sliced for M={X.M} but the mesh's "
+                    f"model axis carries M={M}")
+            if sqnorms is None:
+                sqnorms = sparse_data.row_sqnorms(X) * mask
+            if "sparse_fs" not in built:
+                built["sparse_fs"] = _build_sparse_fs()
+            outs = built["sparse_fs"](
+                state.w, X.cols, X.vals, X.nnz, y, state.alpha, mask,
+                state.ef, sub, n_, state.rounds, state.alpha_bar, sqnorms)
+            (w, alpha, rounds, abar, ef), wire = _unpack(outs)
+        elif isinstance(X, SparseShards):
+            if sharded_w:
+                raise ValueError(
+                    "feature sharding (M>1) needs FeatureShards with "
+                    "shard-local column ids; slice the shards with "
+                    "data.sparse.shard_features (or partition_sparse "
+                    "with M=...)")
             if "sparse" not in built:
                 built["sparse"] = _build_sparse()
-            w, alpha, rounds, abar, ef = built["sparse"](
+            outs = built["sparse"](
                 state.w, X.cols, X.vals, X.nnz, y, state.alpha, mask,
                 state.ef, sub, n_, state.rounds, state.alpha_bar)
+            (w, alpha, rounds, abar, ef), wire = _unpack(outs)
         else:
             if sqnorms is None:
                 sqnorms = jnp.sum(X * X, axis=-1) * mask
             if "dense" not in built:
                 built["dense"] = _build_dense()
-            w, alpha, rounds, abar, ef = built["dense"](
+            outs = built["dense"](
                 state.w, X, y, state.alpha, mask, state.ef, sub, n_,
                 state.rounds, state.alpha_bar, sqnorms)
-        return CoCoAState(w, alpha, rng, rounds, abar, ef)
+            (w, alpha, rounds, abar, ef), wire = _unpack(outs)
+        return CoCoAState(w, alpha, rng, rounds, abar, ef, wire)
 
     return round_fn
 
@@ -361,12 +507,22 @@ def solve(cfg: CoCoAConfig, X, y, mask, *, rounds: int, eps_gap: float = 0.0,
           state: Optional[CoCoAState] = None) -> SolveResult:
     """Run CoCoA+/CoCoA until `rounds` or duality gap <= eps_gap.
 
-    `X` is a dense (K, nk, d) array or a data.sparse.SparseShards (either
-    backend). `on_round(t, state, gap)` is the checkpoint/telemetry hook.
-    `budget_fn(t) -> (K,) int array` enables deadline-budgeted solving
-    (vmap backend).
+    `X` is a dense (K, nk, d) array, a data.sparse.SparseShards (either
+    backend), or a data.sparse.FeatureShards for the feature-sharded 2-D
+    mesh (shard_map backend with cfg.model_axis). `on_round(t, state,
+    gap)` is the checkpoint/telemetry hook. `budget_fn(t) -> (K,) int
+    array` enables deadline-budgeted solving (vmap backend).
+
+    The state's w width follows the placement: WSpec.d_padded (= M *
+    ceil(d/M)) under feature sharding, d otherwise; dense X is zero-padded
+    along its feature axis to match (padded coordinates carry no data and
+    stay exactly zero).
     """
-    if isinstance(X, SparseShards):
+    if isinstance(X, FeatureShards):
+        K, _, nk = X.cols.shape[:3]
+        d = X.d
+        dtype = X.vals.dtype
+    elif isinstance(X, SparseShards):
         K, nk = X.cols.shape[:2]
         d = X.d
         dtype = X.vals.dtype
@@ -374,17 +530,34 @@ def solve(cfg: CoCoAConfig, X, y, mask, *, rounds: int, eps_gap: float = 0.0,
         K, nk, d = X.shape
         dtype = X.dtype
     loss = get_loss(cfg.loss)
-    if state is None:
-        state = init_state(d, K, nk, seed, dtype)
 
     if cfg.backend == "shard_map":
         assert mesh is not None, "shard_map backend needs a mesh"
         topo = Topology.from_mesh(mesh, cfg.data_axis, cfg.model_axis,
                                   topology=cfg.topology)
+        wspec = topo.wspec(d)
+        if isinstance(X, FeatureShards) and X.M != wspec.M:
+            raise ValueError(f"FeatureShards sliced for M={X.M} but the "
+                             f"mesh's model axis carries M={wspec.M}")
+        if wspec.sharded and not isinstance(X, (FeatureShards,
+                                                SparseShards)):
+            X = jnp.pad(X, ((0, 0), (0, 0), (0, wspec.d_padded - d)))
         round_fn = jax.jit(make_round_sharded(cfg, mesh))
     else:
         topo = Topology.simulated(K, topology=cfg.topology)
+        wspec = topo.wspec(d)
+        if isinstance(X, FeatureShards):
+            raise ValueError("FeatureShards need the shard_map backend on "
+                             "a 2-D mesh; the vmap reference runs on "
+                             "SparseShards with the global column ids")
         round_fn = jax.jit(make_round_vmap(cfg, K))
+    if state is None:
+        state = init_state(wspec.d_padded, K, nk, seed, dtype)
+    if cfg.gather and topo.reduce == "hier" and state.wire is None:
+        # the round emits a measured-wire scalar under hier gather; give
+        # it a stable leaf up front so round 1 and round 2 share one jit
+        # signature (None -> array would retrace the whole round)
+        state = state._replace(wire=jnp.zeros((), jnp.int32))
 
     compressed = cfg.compress not in (None, "none", "")
     if compressed:
@@ -399,11 +572,15 @@ def solve(cfg: CoCoAConfig, X, y, mask, *, rounds: int, eps_gap: float = 0.0,
     # per-round communication accounting: the topology's reduce plan priced
     # by the compressor's wire model (per hop under hier/a2a, the sparse
     # (idx, val) sets under compressed gather); feature sharding divides
-    # the dense message length -- Fig-2 claims stay honest under tensor
-    # sharding, compression, and multi-hop topologies
+    # the dense message length to d/M per hop -- Fig-2 claims stay honest
+    # under tensor sharding, compression, and multi-hop topologies. The
+    # model-axis tax of the sharded solver (one scalar psum per coordinate
+    # step) is carried as its own hop so per-axis tables add up.
     tracer = comm.CommTracer.for_run(K=K, d_local=topo.d_local(d),
                                      compressor=cfg.compressor(),
-                                     topo=topo, gather=cfg.gather)
+                                     topo=topo, gather=cfg.gather,
+                                     extra_hops=comm.model_hops(wspec, K,
+                                                                cfg.H))
 
     hist = {"round": [], "gap": [], "primal": [], "dual": [],
             "comm_vectors": [], "comm_floats": [], "comm_bytes": [],
@@ -417,6 +594,10 @@ def solve(cfg: CoCoAConfig, X, y, mask, *, rounds: int, eps_gap: float = 0.0,
         else:
             state = round_fn(state, X, y, mask)
         tracer.tick()
+        if state.wire is not None:
+            # hier compressed gather: replace the inter hop's analytic
+            # upper bound with the measured post-dedup volume
+            tracer.observe("inter_gather", state.wire)
         if (t + 1) % gap_every == 0 or t == rounds - 1:
             alpha_eval = state.alpha
             if cfg.average_iterates:

@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.data import sparse as sparse_data
-from repro.data.sparse import SparseShards
+from repro.data.sparse import FeatureShards, SparseShards
 
 from .losses import Loss
 
@@ -29,15 +29,19 @@ def effective_n(mask: jnp.ndarray) -> jnp.ndarray:
 
 
 def _Atw(X, w: jnp.ndarray) -> jnp.ndarray:
-    """Per-row predictions z = A^T w, shape (K, nk)."""
-    if isinstance(X, SparseShards):
+    """Per-row predictions z = A^T w, shape (K, nk). `FeatureShards` + a
+    padded (M*d_local,) w evaluate as per-shard local gathers summed over
+    the model axis -- the one model-axis reduction a sharded certificate
+    needs (sparse_data.matvec dispatches)."""
+    if isinstance(X, (SparseShards, FeatureShards)):
         return sparse_data.matvec(X, w)
     return jnp.einsum("kid,d->ki", X, w)
 
 
 def w_of_alpha(X, alpha: jnp.ndarray, lam: float, n) -> jnp.ndarray:
-    """w(alpha) = A alpha / (lambda n)  (eq. 3). X: (K, nk, d) or shards."""
-    if isinstance(X, SparseShards):
+    """w(alpha) = A alpha / (lambda n)  (eq. 3). X: (K, nk, d) or shards
+    (FeatureShards yield the padded M*d_local global vector)."""
+    if isinstance(X, (SparseShards, FeatureShards)):
         return sparse_data.rmatvec(X, alpha) / (lam * n)
     return jnp.einsum("kid,ki->d", X, alpha) / (lam * n)
 
@@ -82,7 +86,12 @@ def gap_at_w(w, alpha, X, y, mask, loss, lam):
     algorithm's shared w drifts from w(alpha) -- only the exact duals are
     aggregated, the wire carries a lossy Delta w. Weak duality still gives
     P(w) >= P(w*) >= D(alpha) for ANY w, so certifying the w the algorithm
-    actually serves stays a valid (if slightly larger) gap certificate."""
+    actually serves stays a valid (if slightly larger) gap certificate.
+
+    Feature-sharded runs pass the padded (M*d_local,) w with
+    `FeatureShards` data: predictions assemble via one model-axis
+    reduction inside `_Atw`, and the padded coordinates (always zero, no
+    column maps to them) contribute nothing to ||w||^2."""
     p = primal(w, X, y, mask, loss, lam)
     d = dual(alpha, X, y, mask, loss, lam)
     return p, d, p - d

@@ -58,13 +58,24 @@ _install_barrier_batching_rule()
 def local_sdca(X_k: jnp.ndarray, y_k: jnp.ndarray, alpha_k: jnp.ndarray,
                mask_k: jnp.ndarray, w: jnp.ndarray, rng: jax.Array,
                loss: Loss, lam: float, n, sigma_p: float, H: int,
-               sqnorms=None) -> SDCAResult:
+               sqnorms=None, model_axis=None) -> SDCAResult:
     """H randomized coordinate-ascent steps on G_k^{sigma'}. X_k: (nk, d).
 
     `sqnorms`: optional precomputed ||x_i||^2 (they are round-invariant;
     recomputing them costs one full X stream per round -- hoisted per
-    EXPERIMENTS.md section Perf, iteration C2)."""
+    EXPERIMENTS.md section Perf, iteration C2).
+
+    `model_axis`: feature-sharded mode (inside shard_map on a 2-D mesh):
+    X_k and w are this device's feature slice (nk, d_local) / (d_local,),
+    the per-step dot is a *partial* z that one scalar psum over the model
+    axis completes, and the axpy touches only the local u shard. The
+    coordinate decisions (delta) are then identical on every model shard
+    by construction. Requires precomputed *global* `sqnorms` -- the local
+    slice can't see the other shards' mass."""
     nk = X_k.shape[0]
+    if model_axis is not None and sqnorms is None:
+        raise ValueError("feature-sharded local_sdca needs global sqnorms; "
+                         "the local slice can't reconstruct ||x_i||^2")
     if sqnorms is None:
         sqnorms = jnp.sum(X_k * X_k, axis=-1) * mask_k   # padded rows -> 0
     scale = sigma_p / (lam * n)
@@ -78,6 +89,8 @@ def local_sdca(X_k: jnp.ndarray, y_k: jnp.ndarray, alpha_k: jnp.ndarray,
         # in EXPERIMENTS.md section Perf, iteration C3)
         x = jax.lax.optimization_barrier(X_k[i])
         z = jnp.dot(x, u)
+        if model_axis is not None:
+            z = jax.lax.psum(z, model_axis)     # complete the sharded dot
         abar = alpha_k[i] + dalpha[i]
         q = scale * sqnorms[i]
         delta = loss.cd_update(abar, z, q, y_k[i]) * mask_k[i]
@@ -193,7 +206,7 @@ def local_sdca_importance(X_k, y_k, alpha_k, mask_k, w, rng, loss, lam, n,
 
 def local_sdca_sparse(shard, y_k, alpha_k, mask_k, w, rng, loss: Loss,
                       lam: float, n, sigma_p: float, H: int,
-                      sqnorms=None) -> SDCAResult:
+                      sqnorms=None, model_axis=None) -> SDCAResult:
     """LocalSDCA over a padded-ELL shard (repro.data.sparse.SparseShards,
     per-worker: cols/vals (nk, r_max)). Per step one r_max-gather dot and
     one r_max scatter-axpy (a segment-sum over the row's columns) instead
@@ -201,9 +214,20 @@ def local_sdca_sparse(shard, y_k, alpha_k, mask_k, w, rng, loss: Loss,
 
     This is the portable jnp fallback for the Pallas kernel in
     repro.kernels.sparse_sdca; padding slots (col 0, val 0) are exact
-    arithmetic no-ops, so no per-row nnz bookkeeping is needed here."""
+    arithmetic no-ops, so no per-row nnz bookkeeping is needed here.
+
+    `model_axis`: feature-sharded mode -- the shard's `cols` are
+    *shard-local* column ids into the local w slice (d_local floats, see
+    data.sparse.shard_features), the gather-dot yields a partial z
+    completed by one scalar psum over the model axis, and the scatter-axpy
+    touches only the local u shard. Requires precomputed *global*
+    `sqnorms` (the slice only sees its own entries' mass)."""
     cols, vals = shard.cols, shard.vals
     nk = cols.shape[0]
+    if model_axis is not None and sqnorms is None:
+        raise ValueError("feature-sharded local_sdca_sparse needs global "
+                         "sqnorms; the local ELL slice can't reconstruct "
+                         "||x_i||^2")
     if sqnorms is None:
         sqnorms = jnp.sum(vals * vals, axis=-1) * mask_k
     scale = sigma_p / (lam * n)
@@ -217,6 +241,8 @@ def local_sdca_sparse(shard, y_k, alpha_k, mask_k, w, rng, loss: Loss,
         # gather per consumer (2x ELL-row traffic)
         ci, vi = jax.lax.optimization_barrier((cols[i], vals[i]))
         z = jnp.dot(vi, u[ci])
+        if model_axis is not None:
+            z = jax.lax.psum(z, model_axis)     # complete the sharded dot
         abar = alpha_k[i] + dalpha[i]
         q = scale * sqnorms[i]
         delta = loss.cd_update(abar, z, q, y_k[i]) * mask_k[i]

@@ -1,5 +1,6 @@
 from .synthetic import (DATASETS, load, make_classification,
                         make_regression, partition)
-from .sparse import (CSRMatrix, SparseShards, csr_to_ell, csr_vstack,
-                     densify, ell_to_csr, iter_libsvm_chunks, load_libsvm,
-                     make_sparse_classification, partition_sparse)
+from .sparse import (CSRMatrix, FeatureShards, SparseShards, csr_to_ell,
+                     csr_vstack, densify, ell_to_csr, iter_libsvm_chunks,
+                     load_libsvm, make_sparse_classification,
+                     partition_sparse, shard_features)

@@ -251,24 +251,126 @@ class SparseShards:
         return float(jnp.sum(self.nnz)) / max(rows * self.d, 1)
 
 
-def matvec(sh: SparseShards, w: jnp.ndarray) -> jnp.ndarray:
-    """z = A^T w per row:  z_i = sum_r vals[i, r] * w[cols[i, r]]."""
+@functools.partial(jax.tree_util.register_dataclass,
+                   data_fields=("cols", "vals", "nnz"),
+                   meta_fields=("d", "M", "d_local"))
+@dataclasses.dataclass(frozen=True)
+class FeatureShards:
+    """Feature-sliced padded-ELL shards for a 2-D (data=K, model=M) mesh.
+
+    Worker k's rows are split by feature block: model shard m keeps only
+    the entries whose global column falls in [m*d_local, (m+1)*d_local)
+    and stores them with *shard-local* column ids (global - m*d_local), so
+    device (k, m) gathers/scatters against its local w slice without ever
+    materializing the global w. The global->local map is the contiguous
+    block map carried by `comm.WSpec(d, M)` (same d_local); padding slots
+    are (local col 0, val 0.0) -- exact no-ops against any shard.
+
+    Leaves: cols/vals (K, M, nk, r_loc), nnz (K, M, nk) per-slice true
+    entry counts. `d` is the global (unpadded) feature count; the padded
+    global width is M * d_local. M=1 degenerates to `SparseShards` with
+    an extra singleton axis (identical arrays, identical r_max)."""
+    cols: jnp.ndarray    # (K, M, nk, r_loc) int32 shard-LOCAL ids
+    vals: jnp.ndarray    # (K, M, nk, r_loc) float32
+    nnz: jnp.ndarray     # (K, M, nk) int32 true entries per row-slice
+    d: int
+    M: int
+    d_local: int
+
+    @property
+    def r_loc(self) -> int:
+        return self.cols.shape[-1]
+
+    @property
+    def d_padded(self) -> int:
+        return self.M * self.d_local
+
+
+def shard_features(sh: SparseShards, M: int) -> FeatureShards:
+    """Slice worker ELL shards along the feature axis into M model shards
+    with locally remapped column ids (host-side numpy; the device never
+    sees a global column id again). M=1 is the identity layout."""
+    cols = np.asarray(sh.cols)
+    vals = np.asarray(sh.vals)
+    if cols.ndim != 3:
+        raise ValueError(f"expected worker-major (K, nk, r_max) shards, "
+                         f"got {cols.shape}")
+    K, nk, r_max = cols.shape
+    d_local = -(-sh.d // M)
+    live = np.arange(r_max)[None, None, :] < np.asarray(sh.nnz)[:, :, None]
+    owner = np.where(live, cols // d_local, -1)        # padding owns nothing
+    slice_nnz = np.stack([(owner == m).sum(-1) for m in range(M)], axis=1)
+    r_loc = max(int(slice_nnz.max()) if slice_nnz.size else 0, 1)
+    out_c = np.zeros((K, M, nk, r_loc), np.int32)
+    out_v = np.zeros((K, M, nk, r_loc), np.float32)
+    for m in range(M):
+        sel = owner == m                               # (K, nk, r_max)
+        slot = np.cumsum(sel, axis=-1) - 1             # dest slot per entry
+        kk, ii, _ = np.nonzero(sel)
+        out_c[kk, m, ii, slot[sel]] = cols[sel] - m * d_local
+        out_v[kk, m, ii, slot[sel]] = vals[sel]
+    return FeatureShards(jnp.asarray(out_c), jnp.asarray(out_v),
+                         jnp.asarray(slice_nnz.astype(np.int32)),
+                         d=sh.d, M=M, d_local=d_local)
+
+
+def matvec(sh, w: jnp.ndarray) -> jnp.ndarray:
+    """z = A^T w per row:  z_i = sum_r vals[i, r] * w[cols[i, r]].
+
+    `FeatureShards` + padded (M*d_local,) w: per-shard local gathers
+    summed over the model axis -- the one model-axis reduction a sharded
+    prediction needs."""
+    if isinstance(sh, FeatureShards):
+        w2 = w.reshape(sh.M, sh.d_local)
+        per_m = jax.vmap(lambda wm, cm, vm: jnp.sum(vm * wm[cm], axis=-1),
+                         in_axes=(0, 1, 1), out_axes=0)(w2, sh.cols, sh.vals)
+        return jnp.sum(per_m, axis=0)
     return jnp.sum(sh.vals * w[sh.cols], axis=-1)
 
 
-def rmatvec(sh: SparseShards, coef: jnp.ndarray) -> jnp.ndarray:
-    """A coef = sum_i coef_i x_i as a (d,) scatter-add (segment sum)."""
+def rmatvec(sh, coef: jnp.ndarray) -> jnp.ndarray:
+    """A coef = sum_i coef_i x_i as a scatter-add (segment sum). Dense
+    output is (d,) for `SparseShards`, the padded (M*d_local,) global
+    vector for `FeatureShards` (per-shard local scatters, concatenated --
+    padded coordinates receive nothing)."""
+    if isinstance(sh, FeatureShards):
+        contrib = sh.vals * coef[:, None, :, None]        # (K, M, nk, r)
+        per_m = jax.vmap(
+            lambda cm, xm: jnp.zeros(sh.d_local, xm.dtype)
+            .at[cm.reshape(-1)].add(xm.reshape(-1)),
+            in_axes=(1, 1), out_axes=0)(sh.cols, contrib)
+        return per_m.reshape(sh.d_padded)
     contrib = sh.vals * coef[..., None]
     return jnp.zeros(sh.d, contrib.dtype).at[sh.cols.reshape(-1)].add(
         contrib.reshape(-1))
 
 
-def row_sqnorms(sh: SparseShards) -> jnp.ndarray:
+def row_sqnorms(sh) -> jnp.ndarray:
+    """||x_i||^2 per row, (K, nk). For `FeatureShards` the per-slice
+    masses sum over the model axis -- these are the *global* sqnorms the
+    feature-sharded solver needs precomputed."""
+    if isinstance(sh, FeatureShards):
+        return jnp.sum(sh.vals * sh.vals, axis=(-3, -1))
     return jnp.sum(sh.vals * sh.vals, axis=-1)
 
 
-def densify(sh: SparseShards) -> jnp.ndarray:
-    """Materialize (..., nk, d) dense rows (tests / densified baselines)."""
+def densify(sh) -> jnp.ndarray:
+    """Materialize (..., nk, d) dense rows (tests / densified baselines).
+    `FeatureShards` densify to the padded (K, nk, M*d_local) width with
+    local ids lifted back to global (offset rebasing)."""
+    if isinstance(sh, FeatureShards):
+        cols = np.asarray(sh.cols) + (np.arange(sh.M, dtype=np.int32)
+                                      [None, :, None, None] * sh.d_local)
+        vals = np.asarray(sh.vals)
+        K, M, nk, r = cols.shape
+        flat = np.zeros((K * nk, sh.d_padded), np.float32)
+        # row index per entry: worker-major row id, same for every m
+        ridx = (np.arange(K)[:, None, None, None] * nk
+                + np.arange(nk)[None, None, :, None])
+        ridx = np.broadcast_to(ridx, cols.shape)
+        np.add.at(flat, (ridx.reshape(-1), cols.reshape(-1)),
+                  vals.reshape(-1))
+        return jnp.asarray(flat.reshape(K, nk, sh.d_padded))
     cols = np.asarray(sh.cols)
     vals = np.asarray(sh.vals)
     lead = cols.shape[:-1]
@@ -317,13 +419,19 @@ def make_sparse_classification(n: int, d: int, *, density: float,
 
 def partition_sparse(csr: CSRMatrix, y: np.ndarray, K: int, *, seed: int = 0,
                      heterogeneity: float = 1.0,
-                     r_max: Optional[int] = None
-                     ) -> Tuple[SparseShards, jnp.ndarray, jnp.ndarray]:
-    """Shuffle + split CSR rows into (SparseShards, y (K, nk), mask (K, nk)).
+                     r_max: Optional[int] = None,
+                     M: int = 1):
+    """Shuffle + split CSR rows into (shards, y (K, nk), mask (K, nk)).
 
     Same contract as the dense `partition` (identical rng stream, padding
     rows are all-zero with mask 0); heterogeneity < 1 concentrates
-    correlated rows on the same worker via the shared `split_order`."""
+    correlated rows on the same worker via the shared `split_order`.
+
+    `M` > 1 additionally slices each worker's rows along the feature axis
+    for a 2-D (data=K, model=M) mesh: the returned shards are
+    `FeatureShards` with shard-local column ids (see `shard_features`).
+    The row partition (and therefore y/mask) is identical for every M --
+    the model axis re-slices features, never rows."""
     n, d = csr.shape
     cols_e, vals_e, nnz_e = csr_to_ell(csr, r_max)
     rng = np.random.default_rng(seed)
@@ -343,4 +451,6 @@ def partition_sparse(csr: CSRMatrix, y: np.ndarray, K: int, *, seed: int = 0,
     shards = SparseShards(jnp.asarray(colsp.reshape(K, nk, rm)),
                           jnp.asarray(valsp.reshape(K, nk, rm)),
                           jnp.asarray(nnzp.reshape(K, nk)), d=d)
+    if M > 1:
+        shards = shard_features(shards, M)
     return shards, jnp.asarray(yp.reshape(K, nk)), jnp.asarray(mk.reshape(K, nk))

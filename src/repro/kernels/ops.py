@@ -33,11 +33,31 @@ def _pad_to(x, m, axis):
     return jnp.pad(x, widths)
 
 
+def _check_placement(model_axis, name):
+    # the kernels run the gather-dot/scatter-axpy against whatever w
+    # shard they are handed -- under a 2-D mesh that IS the local w slice
+    # (shard-local column ids, d = d_local) -- but a pallas_call cannot
+    # host the per-step partial-dot psum that M>1 feature sharding needs,
+    # so the sharded coordinate loop lives in core.solvers instead
+    if model_axis is not None:
+        raise NotImplementedError(
+            f"{name} cannot complete the model-axis partial-dot exchange "
+            f"inside the kernel; feature-sharded (M>1) rounds use the jnp "
+            f"solvers ('sdca' / 'sdca_sparse'). At M=1 the kernel runs "
+            f"unchanged -- the local shard is the full w.")
+
+
 def local_sdca_block(X_k, y_k, alpha_k, mask_k, w, rng, loss: Loss,
                      lam: float, n, sigma_p: float, H: int,
                      *, block_rows: int = 128,
-                     interpret: bool | None = None) -> SDCAResult:
-    """Drop-in solver: block-shuffled SDCA via the Pallas kernel."""
+                     interpret: bool | None = None,
+                     model_axis=None) -> SDCAResult:
+    """Drop-in solver: block-shuffled SDCA via the Pallas kernel.
+
+    Placement: `X_k`/`w` may be a feature *slice* (nk, d_loc)/(d_loc,) --
+    the kernel is shard-shape-agnostic -- but only at M=1 (see
+    `_check_placement`)."""
+    _check_placement(model_axis, "local_sdca_block")
     nk, d = X_k.shape
     n_passes = max(1, int(round(H / max(nk, 1))))
 
@@ -67,14 +87,23 @@ def local_sdca_block(X_k, y_k, alpha_k, mask_k, w, rng, loss: Loss,
 def sparse_local_sdca_block(shard, y_k, alpha_k, mask_k, w, rng, loss: Loss,
                             lam: float, n, sigma_p: float, H: int,
                             *, block_rows: int = 128,
-                            interpret: bool | None = None) -> SDCAResult:
+                            interpret: bool | None = None,
+                            model_axis=None) -> SDCAResult:
     """Drop-in solver: block-shuffled SDCA over a padded-ELL shard.
 
     `shard` is a per-worker SparseShards (cols/vals (nk, r_max)). Same
     responsibilities as `local_sdca_block` -- fresh row permutation per call,
     padding to the kernel's alignment contract (r_max and d to multiples of
     128 on real TPUs; padding entries are exact no-ops), H -> whole passes.
+
+    Placement: the kernel gathers/scatters against whatever w vector it is
+    handed, so a shard whose `cols` are shard-local ids against a local
+    (d_loc,) w slice (data.sparse.FeatureShards per-device layout) works
+    shape-wise -- the lane-alignment contract then applies to d_loc, i.e.
+    pick M so ceil(d/M) stays a multiple of 128 on real TPUs. Only the
+    M=1 placement is runnable end-to-end (see `_check_placement`).
     """
+    _check_placement(model_axis, "sparse_local_sdca_block")
     cols, vals = shard.cols, shard.vals
     nk, r_max = cols.shape
     d = w.shape[0]

@@ -30,6 +30,15 @@ floats -- at rcv1_sparse production shapes (d 47k, r_max ~128) well under
 1 MiB, vs ~24 MiB for the dense tile at the same d. On real TPUs r_max and
 d should be multiples of 128 (ops.py pads); interpret=True is
 shape-agnostic.
+
+Placement: `w` here is whatever shard the caller hands in -- the kernel's
+gather-dot/scatter-axpy are coordinate-frame-agnostic, so under the 2-D
+(data, model) mesh a device's local w slice with shard-local ELL ids
+(data.sparse.FeatureShards) satisfies the same contract with d = d_local
+(keep ceil(d/M) lane-aligned). What the kernel cannot do is the per-step
+partial-dot psum across model shards, so M>1 rounds run the jnp
+core.solvers loop; at M=1 (local shard == full w) this kernel is the
+production path unchanged.
 """
 from __future__ import annotations
 

@@ -24,6 +24,12 @@ elastic re-partitioning).
         --dataset rcv1_sparse --workers 16 --rounds 40 \
         --topology hier:4 --compress topk --compress-k 64 --gather
 
+    # 2-D (data x model) mesh: 4 workers x 2 feature shards of w -- each
+    # device stores and reduces d/2 floats (ELL column ids remapped to the
+    # local slice); needs 8 devices (XLA_FLAGS=...device_count=8 on CPU)
+    PYTHONPATH=src python -m repro.launch.cocoa_train \
+        --dataset rcv1_sparse --mesh 4x2 --rounds 40
+
 On a real TPU mesh pass --backend shard_map (workers = data-axis shards);
 the default vmap backend simulates any K on one device with identical
 math. Both layouts run on both backends (sparse = per-device padded-ELL
@@ -43,10 +49,11 @@ import numpy as np
 from repro import comm
 from repro.checkpoint import CheckpointManager
 from repro.core import CoCoAConfig, duality, solve
-from repro.core.cocoa import CoCoAState, init_state
+from repro.core.cocoa import CoCoAState, init_state, reshard_w_state
 from repro.core.losses import get_loss
 from repro.data import DATASETS, load, partition
-from repro.data.sparse import SparseShards, partition_sparse
+from repro.data.sparse import (FeatureShards, SparseShards, partition_sparse,
+                               shard_features)
 from repro.runtime import elastic, failures, straggler
 
 
@@ -80,6 +87,11 @@ def main():
                     choices=["sdca", "sdca_kernel", "sdca_sparse",
                              "sdca_sparse_kernel", "gd", "sdca_deadline"])
     ap.add_argument("--backend", default="vmap", choices=["vmap", "shard_map"])
+    ap.add_argument("--mesh", default="",
+                    help="'KxM' 2-D (data x model) mesh: K workers, w "
+                         "feature-sharded into M slices of ceil(d/M) "
+                         "floats each (forces --backend shard_map and "
+                         "overrides --workers; needs K*M devices)")
     ap.add_argument("--format", default="auto",
                     choices=["auto", "dense", "sparse"],
                     help="data layout; auto follows the dataset spec "
@@ -97,6 +109,21 @@ def main():
     # validate the comm flags before the (possibly minutes-long) dataset
     # load/partition: bad specs, gather without a sparsifier, and hier
     # groups that don't divide --workers all fail in milliseconds
+    M = 1
+    if args.mesh:
+        try:
+            K_mesh, M = (int(v) for v in args.mesh.lower().split("x"))
+        except ValueError:
+            raise SystemExit(f"--mesh wants 'KxM', got {args.mesh!r}")
+        if K_mesh < 1 or M < 1:
+            raise SystemExit(f"--mesh axes must be >= 1, got {args.mesh}")
+        args.workers = K_mesh
+        args.backend = "shard_map"
+        if jax.device_count() < K_mesh * M:
+            raise SystemExit(
+                f"--mesh {args.mesh} needs {K_mesh * M} devices, have "
+                f"{jax.device_count()} (CPU: set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={K_mesh * M})")
     if args.gather and args.compress not in ("topk", "randk"):
         raise SystemExit("--gather needs --compress topk or randk "
                          "(the sparse (idx, val) wire form)")
@@ -118,9 +145,13 @@ def main():
             raise SystemExit(f"--format sparse needs a sparse dataset spec; "
                              f"{args.dataset!r} is {spec.format}")
         csr, y = load(args.dataset)
-        Xp, yp, mk = partition_sparse(csr, y, K, seed=0)
-        print(f"sparse shards: nnz/row r_max={Xp.r_max} "
-              f"density={csr.density:.4g} d={Xp.d}")
+        Xp, yp, mk = partition_sparse(csr, y, K, seed=0, M=M)
+        if isinstance(Xp, FeatureShards):
+            print(f"sparse feature shards: M={M} d_local={Xp.d_local} "
+                  f"r_loc={Xp.r_loc} density={csr.density:.4g} d={Xp.d}")
+        else:
+            print(f"sparse shards: nnz/row r_max={Xp.r_max} "
+                  f"density={csr.density:.4g} d={Xp.d}")
     else:
         X, y = load(args.dataset)
         if spec.format == "sparse":
@@ -131,7 +162,8 @@ def main():
     mk_cfg = dict(loss=args.loss, lam=args.lam, H=args.H, solver=args.solver,
                   backend=args.backend, compress=args.compress,
                   compress_k=args.compress_k, topology=args.topology,
-                  gather=args.gather)
+                  gather=args.gather,
+                  model_axis="model" if M > 1 else None)
 
     def make_cfg(K):
         if args.aggregator:
@@ -142,16 +174,20 @@ def main():
     cfg = make_cfg(K)
     mesh = None
     if args.backend == "shard_map":
-        mesh = jax.make_mesh((K,), ("data",))
+        mesh = (jax.make_mesh((K, M), ("data", "model")) if M > 1
+                else jax.make_mesh((K,), ("data",)))
 
     def dims(Xp):
+        if isinstance(Xp, FeatureShards):
+            return Xp.d, Xp.cols.shape[2]
         if isinstance(Xp, SparseShards):
             return Xp.d, Xp.cols.shape[1]
         return Xp.shape[2], Xp.shape[1]
 
     mgr = CheckpointManager(pathlib.Path(args.ckpt), keep=2) if args.ckpt else None
     d_dim, nk_dim = dims(Xp)
-    state = init_state(d_dim, K, nk_dim)
+    wspec = comm.WSpec(d=d_dim, M=M, model_axis="model" if M > 1 else None)
+    state = init_state(wspec.d_padded, K, nk_dim)
     start = 0
     if mgr and mgr.latest_step():
         tmpl = state._asdict()
@@ -162,8 +198,21 @@ def main():
             # restore the old layout, start with zero EF residuals
             tmpl.pop("ef")
             loaded, man = mgr.restore(tmpl)
-            loaded["ef"] = state.ef
+            loaded["ef"] = comm.init_residual(K, loaded["w"].shape[0])
         state = CoCoAState(**loaded)
+        if state.w.shape[0] != wspec.d_padded:
+            # legacy replicated-w checkpoint restored onto a 2-D mesh:
+            # flush the old EF debt into w (nothing dropped), then re-pad
+            # w and lay out fresh residuals for this run's placement
+            if state.w.shape[0] != d_dim:
+                raise SystemExit(
+                    f"checkpoint w has {state.w.shape[0]} floats; this "
+                    f"run places {wspec.d_padded} (d={d_dim}, M={M}) -- "
+                    f"only replicated (M=1) checkpoints reshard "
+                    f"automatically")
+            state = reshard_w_state(state, comm.WSpec(d=d_dim),
+                                    wspec, cfg.agg_params(K))
+            print(f"resharded legacy checkpoint w: 1 -> {M} feature shards")
         start = man["step"]
         print(f"resumed from round {start}")
 
@@ -205,6 +254,10 @@ def main():
         if done == args.simulate_failure and args.simulate_failure:
             print("simulating loss of worker 0 (dual-safe drop + recovery)")
             state = failures.fail_and_recover(state, Xp, mk, args.lam, k=0)
+            # w_of_alpha on dense (unpadded) data returns a (d,) vector;
+            # re-place it for the mesh (identity when already padded --
+            # FeatureShards rmatvec emits d_padded directly)
+            state = state._replace(w=wspec.pad_w(state.w))
             args.simulate_failure = 0
         if done == el_round and el_K:
             print(f"elastic re-partition {K} -> {el_K} workers")
@@ -214,7 +267,13 @@ def main():
                 # state is rebuilt at the new K, so no update mass is lost
                 state = state._replace(w=comm.flush_ef(
                     state.w, state.ef, cfg.agg_params(K)))
-            if isinstance(Xp, SparseShards):
+            if isinstance(Xp, FeatureShards):
+                # rows re-split across workers with their M feature slices
+                # attached; the w placement (M, d_local) is untouched
+                Xp, yp, new_alpha, mk = elastic.repartition_features(
+                    Xp, yp, state.alpha, mk, el_K)
+                new = {"alpha": new_alpha}
+            elif isinstance(Xp, SparseShards):
                 # every leaf shares the (K, nk) leading layout, so the ELL
                 # shards re-split exactly like dense rows (alpha travels too)
                 arrs = {"cols": Xp.cols, "vals": Xp.vals, "nnz": Xp.nnz,
@@ -229,16 +288,28 @@ def main():
             K = el_K
             cfg = make_cfg(K)
             d_dim, nk_dim = dims(Xp)
-            st = init_state(d_dim, K, nk_dim)
+            if mesh is not None:
+                mesh = (jax.make_mesh((K, M), ("data", "model")) if M > 1
+                        else jax.make_mesh((K,), ("data",)))
+            st = init_state(wspec.d_padded, K, nk_dim)
             state = st._replace(alpha=new["alpha"], w=state.w,
                                 rounds=state.rounds)
+            if mesh is not None:
+                # the carried leaves are committed to the old mesh's
+                # devices; pull them to host so the new mesh re-places them
+                state = jax.tree.map(lambda x: jnp.asarray(np.asarray(x)),
+                                     state)
             el_round = -1
 
     if mgr:
         mgr.wait()
     if args.compress != "none":
-        # lossy wire: certify the w the algorithm actually carries
-        p, d, g = duality.gap_at_w(state.w, state.alpha, Xp, yp, mk, loss,
+        # lossy wire: certify the w the algorithm actually carries.
+        # FeatureShards evaluate against the padded placed w; the dense
+        # and replicated-sparse data here are unpadded, so unplace first
+        w_eval = (state.w if isinstance(Xp, FeatureShards)
+                  else wspec.unpad_w(state.w))
+        p, d, g = duality.gap_at_w(w_eval, state.alpha, Xp, yp, mk, loss,
                                    args.lam)
     else:
         p, d, g = duality.gap_decomposed(state.alpha, Xp, yp, mk, loss,
@@ -246,19 +317,27 @@ def main():
     print(f"final: P={float(p):.6f} D={float(d):.6f} gap={float(g):.3e} "
           f"(certificate: primal suboptimality <= gap)")
     topo = comm.Topology.simulated(K, topology=args.topology)
-    tr = comm.CommTracer.for_run(K=K, d_local=d_dim,
+    tr = comm.CommTracer.for_run(K=K, d_local=wspec.d_local,
                                  compressor=cfg.compressor(),
-                                 topo=topo, gather=args.gather)
+                                 topo=topo, gather=args.gather,
+                                 extra_hops=comm.model_hops(wspec, K,
+                                                            args.H))
     pr = tr.per_round()
     dense_floats = K * d_dim
-    print(f"comm[{args.topology}{'+gather' if args.gather else ''}]: "
+    print(f"comm[{args.topology}{'+gather' if args.gather else ''}"
+          f"{f' mesh={K}x{M}' if M > 1 else ''}]: "
           f"{pr['floats']} floats/round "
           f"({pr['bytes']} bytes, {pr['psums']} hop) -- "
           f"{dense_floats / max(pr['floats'], 1):.1f}x cut vs flat "
           f"uncompressed {dense_floats}")
     for h in tr.per_hop():
-        print(f"  hop {h['hop']}: {h['messages']} msgs x "
+        print(f"  hop {h['hop']}[{h['axis']}]: {h['messages']} msgs x "
               f"{h['floats_per_message']} floats = {h['floats']}/round")
+    if M > 1:
+        ax = tr.per_axis()
+        print(f"  per-axis floats/round: data={ax.get('data', 0)} "
+              f"model={ax.get('model', 0)}; w memory/device: "
+              f"{wspec.d_local} floats (replicated would be {d_dim})")
 
 
 if __name__ == "__main__":

@@ -36,3 +36,32 @@ def repartition(arrays: Dict[str, jnp.ndarray], mask: jnp.ndarray,
         out[name] = jnp.asarray(flat.reshape(K_new, nk_new, *tail_shape))
     mnew = np.concatenate([np.ones(n, np.float32), np.zeros(pad, np.float32)])
     return out, jnp.asarray(mnew.reshape(K_new, nk_new))
+
+
+def repartition_features(fs, y, alpha, mask, K_new: int):
+    """Re-split feature-sharded ELL data (data.sparse.FeatureShards) onto
+    K_new workers, keeping the model axis intact: rows move between
+    workers exactly like the replicated layouts (datapoints keep their
+    alpha), while each row's M feature slices travel with it. The w
+    placement is untouched -- elastic scaling changes K, never M (a mesh
+    reshape that changes M goes through core.cocoa.reshard_w_state).
+
+    Returns (fs_new, y_new, alpha_new, mask_new).
+    """
+    from repro.data.sparse import FeatureShards
+
+    # leaves are (K, M, nk, ...): swap to (K, nk, M, ...) so rows are the
+    # second axis `repartition` expects, then swap back
+    arrs = {"cols": np.asarray(fs.cols).transpose(0, 2, 1, 3),
+            "vals": np.asarray(fs.vals).transpose(0, 2, 1, 3),
+            "nnz": np.asarray(fs.nnz).transpose(0, 2, 1),
+            "y": y, "alpha": alpha}
+    new, mask_new = repartition(arrs, mask, K_new)
+    fs_new = FeatureShards(jnp.asarray(np.asarray(new["cols"])
+                                       .transpose(0, 2, 1, 3)),
+                           jnp.asarray(np.asarray(new["vals"])
+                                       .transpose(0, 2, 1, 3)),
+                           jnp.asarray(np.asarray(new["nnz"])
+                                       .transpose(0, 2, 1)),
+                           d=fs.d, M=fs.M, d_local=fs.d_local)
+    return fs_new, new["y"], new["alpha"], mask_new

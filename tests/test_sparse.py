@@ -101,6 +101,78 @@ def test_libsvm_chunk_iterator_blocks(tmp_path):
         list(sp.iter_libsvm_chunks(p, chunk_rows=3, n_features=2))
 
 
+def test_libsvm_chunks_comments_blanks_dont_count_toward_chunk():
+    """Comment-only and blank lines are skipped entirely by the chunker:
+    they neither produce rows nor advance the chunk_rows counter, even
+    when they straddle a chunk boundary."""
+    lines = [
+        "# leading comment line",
+        "+1 1:1.0",
+        "",
+        "-1 2:2.0  # trailing comment",
+        "   ",                       # whitespace-only
+        "# comment between chunks",
+        "+1 3:3.0",
+        "-1 1:0.5 3:1.5",
+        "",
+        "+1 2:-1.0",
+    ]
+    blocks = list(sp.iter_libsvm_chunks(lines, chunk_rows=2, n_features=4))
+    assert [b.shape[0] for b, _ in blocks] == [2, 2, 1]   # 5 real rows
+    stitched = sp.csr_vstack([b for b, _ in blocks])
+    csr_full, y = sp.load_libsvm([l for l in lines], n_features=4)
+    np.testing.assert_allclose(stitched.toarray(), csr_full.toarray())
+    np.testing.assert_array_equal(
+        np.concatenate([yy for _, yy in blocks]), y)
+
+
+def test_libsvm_empty_feature_row_roundtrip():
+    """A label-only row (zero features) survives the whole pipeline:
+    iter_libsvm_chunks -> csr_vstack -> partition_sparse. Its ELL row is
+    all padding (exact no-ops), its sqnorm is 0, and the mask keeps it a
+    real (if vacuous) datapoint."""
+    lines = [
+        "+1 1:1.0 2:0.5",
+        "-1",                        # empty-feature row
+        "+1 3:2.0",
+        "-1",                        # another, at a chunk boundary
+        "+1 1:-1.0",
+    ]
+    blocks = list(sp.iter_libsvm_chunks(lines, chunk_rows=2, n_features=4))
+    assert [b.shape[0] for b, _ in blocks] == [2, 2, 1]
+    csr = sp.csr_vstack([b for b, _ in blocks], d=4)
+    y = np.concatenate([yy for _, yy in blocks])
+    assert csr.shape == (5, 4)
+    np.testing.assert_array_equal(csr.row_nnz(), [2, 0, 1, 0, 1])
+    shards, yp, mk = sp.partition_sparse(csr, y, 2, seed=0)
+    assert float(jnp.sum(mk)) == 5                 # all rows real
+    # the empty rows' ELL slots are pure padding -> zero sqnorm, and the
+    # densified partition reproduces the CSR exactly
+    dense = np.asarray(sp.densify(shards)).reshape(-1, 4)
+    order_restored = dense[np.asarray(mk).reshape(-1) > 0]
+    assert sorted(map(tuple, order_restored.tolist())) == \
+        sorted(map(tuple, csr.toarray().tolist()))
+    sq = np.asarray(sp.row_sqnorms(shards)).reshape(-1)
+    assert (sq[np.asarray(mk).reshape(-1) > 0] == 0).sum() == 2
+
+
+def test_libsvm_trailing_partial_chunk_and_exact_multiple(tmp_path):
+    """The trailing partial chunk flushes; an exact-multiple file does not
+    emit a phantom empty block; an empty input yields one empty block."""
+    p = _libsvm_file(tmp_path, n=6, d=8, seed=5)
+    exact = list(sp.iter_libsvm_chunks(p, chunk_rows=3, n_features=8))
+    assert [b.shape[0] for b, _ in exact] == [3, 3]
+    partial = list(sp.iter_libsvm_chunks(p, chunk_rows=4, n_features=8))
+    assert [b.shape[0] for b, _ in partial] == [4, 2]
+    np.testing.assert_allclose(
+        sp.csr_vstack([b for b, _ in exact]).toarray(),
+        sp.csr_vstack([b for b, _ in partial]).toarray())
+    empty = list(sp.iter_libsvm_chunks([], chunk_rows=4, n_features=8))
+    assert len(empty) == 1 and empty[0][0].shape == (0, 8)
+    with pytest.raises(ValueError, match="chunk_rows"):
+        list(sp.iter_libsvm_chunks([], chunk_rows=0))
+
+
 # ----------------------------------------------------------------------------
 # CSR <-> ELL round-trip
 # ----------------------------------------------------------------------------
