@@ -15,6 +15,17 @@ def save(name: str, payload) -> pathlib.Path:
     return p
 
 
+def save_updated(name: str, updates: dict) -> pathlib.Path:
+    """`save` that merges into an existing results file instead of
+    clobbering it: keys in `updates` are replaced, every other key the
+    file already holds is preserved -- so independent sweeps (mesh, reg,
+    ...) can share one trajectory file without stepping on each other."""
+    p = RESULTS / f"{name}.json"
+    data = json.loads(p.read_text()) if p.exists() else {}
+    data.update(updates)
+    return save(name, data)
+
+
 def maybe_plot(name: str, draw):
     """Render a figure if matplotlib is available; never fail the bench."""
     try:

@@ -1,0 +1,79 @@
+"""Lasso on a sparse dataset via generalized CoCoA+ -- the smoothed-L1
+regularizer end to end, certified by the generalized duality gap.
+
+    P(w) = (1/(2n)) ||A^T w - y||^2 + lam ||w||_1 + (eps/2) ||w||^2
+
+The (eps/2)||w||^2 term is the eps-Moreau smoothing of the Lasso dual's
+box indicator (core.regularizers.SmoothedL1): it makes g strongly convex
+(tau = eps) so the dual rounds carry v = A alpha/(eps n) and recover the
+primal through the soft-threshold conjugate map w = S_{lam/eps}(v) --
+which is what makes the served w genuinely sparse. The smoothed optimum is
+within (eps/2)||w*||^2 of the exact Lasso optimum, so eps dials certificate
+tightness vs conditioning.
+
+Everything else is the paper's machinery unchanged: sigma'-damped local
+SDCA subproblems (closed-form squared-loss coordinate steps), additive
+combining, one v-vector on the wire per worker per round, and the
+O(nnz) padded-ELL data path.
+
+    PYTHONPATH=src python examples/lasso_sparse.py                # rcv1-scale
+    PYTHONPATH=src python examples/lasso_sparse.py \
+        --dataset tiny_sparse --rounds 60 --eps-gap 1e-4          # seconds
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax.numpy as jnp
+
+from repro.core import CoCoAConfig, duality, get_regularizer, primal_w, solve
+from repro.core.losses import get_loss
+from repro.data import load
+from repro.data.sparse import partition_sparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="rcv1_sparse")
+    ap.add_argument("--workers", type=int, default=8)
+    ap.add_argument("--lam", type=float, default=1e-4,
+                    help="L1 weight (the Lasso knob; keep it under the "
+                         "data's lambda_max = ||A y||_inf / n or the "
+                         "selected support is empty)")
+    ap.add_argument("--eps-smooth", type=float, default=1e-4,
+                    help="Moreau smoothing / strong-convexity floor eps")
+    ap.add_argument("--H", type=int, default=2048)
+    ap.add_argument("--rounds", type=int, default=40)
+    ap.add_argument("--eps-gap", type=float, default=1e-4)
+    args = ap.parse_args()
+
+    csr, y = load(args.dataset)
+    sh, yp, mk = partition_sparse(csr, y, args.workers, seed=0)
+    reg_spec = f"l1s:{args.eps_smooth}"
+    reg = get_regularizer(reg_spec)
+    loss = get_loss("squared")
+    print(f"{args.dataset}: n={csr.shape[0]} d={csr.shape[1]} "
+          f"density={csr.density:.4g}; lasso lam={args.lam} "
+          f"eps={args.eps_smooth} (tau={reg.tau(args.lam):.3g})")
+
+    cfg = CoCoAConfig.adding(args.workers, loss="squared", lam=args.lam,
+                             H=args.H, reg=reg_spec)
+    r = solve(cfg, sh, yp, mk, rounds=args.rounds, eps_gap=args.eps_gap,
+              gap_every=2,
+              on_round=lambda t, st, gap: print(f"round {t}: gap={gap:.3e}"))
+
+    # the generalized certificate: P(w) - D(alpha) at the served primal
+    # point w = grad g*(tau v) (identical to the gap solve() tracked; shown
+    # explicitly here as the Lasso deliverable)
+    p, d, g = duality.gap_at_v(r.state.w, r.state.alpha, sh, yp, mk, loss,
+                               args.lam, reg)
+    w = primal_w(r.state, cfg)
+    nnz = int(jnp.sum(jnp.abs(w) > 0))
+    print(f"final: P={float(p):.6f} D={float(d):.6f} gap={float(g):.3e}")
+    print(f"lasso w: {nnz}/{w.shape[0]} nonzeros "
+          f"({100.0 * nnz / w.shape[0]:.1f}% dense); certificate: primal "
+          f"suboptimality <= {float(g):.3e} on the smoothed objective")
+
+
+if __name__ == "__main__":
+    main()

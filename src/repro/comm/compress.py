@@ -27,6 +27,9 @@ that travels the wire as-is, the topology all-gathers the K sets, and
 `decode_sum` scatter-adds them server-side into the summed dense message --
 so the reduce itself moves ~2kK floats instead of dK (see
 `comm.aggregate.exchange(gather=True)` and `comm.topology.Topology.hops`).
+On a feature-sharded 2-D mesh, `with_shards(M, axis)` splits the budget k
+across the M model shards (ceil(k/M) slots each, remainder to low shards)
+so that total stays ~2kK at any M -- see `_Sparsifier`.
 `gather_floats(d)` is the per-set wire model: 2k (value, index) pairs for
 both sparsifiers -- the gathered sets travel indices-and-all, unlike the
 dense rand-k reduce where the seed-derived index set never hits the wire.
@@ -84,7 +87,9 @@ def merge_sets(idx, val, d: int):
     *measured* number of live pairs, i.e. what the inter hop actually has
     to move after dedup (<= G*k, strictly less whenever workers' top-k
     sets overlap); `comm.tracer.CommTracer.observe` turns it into the
-    post-dedup wire volume.
+    post-dedup wire volume. Incoming sentinel entries (idx >= d: a
+    budget-split sparsifier's dead slots) are already dead weight and are
+    excluded from the count.
     """
     flat_i = idx.reshape(-1)
     flat_v = val.reshape(-1)
@@ -95,7 +100,7 @@ def merge_sets(idx, val, d: int):
     run = jnp.cumsum(first) - 1            # run id of each sorted element
     mval = jnp.zeros_like(sv).at[run].add(sv)
     midx = jnp.full(si.shape, d, si.dtype).at[run].set(si)
-    unique = jnp.sum(first.astype(jnp.int32))
+    unique = jnp.sum((first & (si < d)).astype(jnp.int32))
     return midx, mval, unique
 
 
@@ -144,13 +149,49 @@ class NoCompression(Compressor):
 class _Sparsifier(Compressor):
     """Shared shape of the k-sparse schemes: `encode` picks the index set,
     the dense `__call__` form is its scatter (so dense reduce and compressed
-    gather transmit the exact same xhat and carry the same EF residual)."""
+    gather transmit the exact same xhat and carry the same EF residual).
+
+    Budget splitting (2-D meshes): `with_shards(M, axis)` returns a copy
+    whose total budget k is dealt across the M model shards of a
+    feature-sharded w -- ceil(k/M) message *slots* per shard (static, so
+    every shard traces the same SPMD program) of which shard m keeps
+    k//M + (m < k%M) *live* entries (remainder to low shards, sum = k).
+    Dead slots are parked at the sentinel index d_local with value 0, so
+    `decode_sum` drops them and the EF residual keeps their mass. The
+    gathered wire volume is then 2*ceil(k/M) floats per set on each of
+    the K*M devices: ~2kK per round total, M-invariant, instead of the
+    2kKM a naive per-shard budget of k would cost. The shard index comes
+    from `lax.axis_index(axis)`, so a split sparsifier only runs inside
+    shard_map (feature sharding implies the shard_map backend)."""
     supports_gather = True
 
-    def __init__(self, k: int):
+    def __init__(self, k: int, shards: int = 1, shard_axis=None):
         if k <= 0:
             raise ValueError(f"{self.name} needs k >= 1, got {k}")
-        self.k = int(k)
+        if shards < 1:
+            raise ValueError(f"{self.name} needs shards >= 1, got {shards}")
+        if shards > 1 and shard_axis is None:
+            raise ValueError(f"a budget split over {shards} shards needs "
+                             f"the mesh axis carrying them")
+        self.k = int(k)                 # total budget across all shards
+        self.shards = int(shards)
+        self.shard_axis = shard_axis
+
+    @property
+    def slots(self) -> int:
+        """Static per-shard message slots: ceil(k / shards)."""
+        return -(-self.k // self.shards)
+
+    def live_budget(self, m):
+        """Live entries shard m transmits: k//M + (m < k%M), summing to k
+        with the remainder dealt to low shards."""
+        return self.k // self.shards + (m < self.k % self.shards)
+
+    def with_shards(self, M: int, axis) -> "_Sparsifier":
+        """The budget-split copy of this sparsifier for M model shards."""
+        if M == 1:
+            return self
+        return type(self)(self.k, shards=M, shard_axis=axis)
 
     def _select(self, xc, rng):
         raise NotImplementedError
@@ -159,52 +200,64 @@ class _Sparsifier(Compressor):
         xc = x + residual
         idx = self._select(xc, rng).astype(jnp.int32)
         val = xc[idx]
-        xhat = jnp.zeros_like(xc).at[idx].set(val)
+        if self.shards > 1:
+            m = jax.lax.axis_index(self.shard_axis)
+            live = jnp.arange(idx.shape[-1]) < self.live_budget(m)
+            # dead slots -> sentinel index d_local / value 0: dropped by
+            # decode_sum, excluded from xhat, their mass stays in the EF
+            # residual (top_k emits magnitude-sorted indices, so the live
+            # prefix is the shard's largest-|v| entries)
+            idx = jnp.where(live, idx, xc.shape[-1]).astype(jnp.int32)
+            val = jnp.where(live, val, 0.0)
+        xhat = jnp.zeros_like(xc).at[idx].set(val, mode="drop")
         return SparseMessage(idx, val), xc - xhat
 
     def __call__(self, x, residual, rng):
         msg, res = self.encode(x, residual, rng)
-        xhat = jnp.zeros_like(x).at[msg.idx].set(msg.val)
+        xhat = jnp.zeros_like(x).at[msg.idx].set(msg.val, mode="drop")
         return xhat, res
 
     def __repr__(self):
-        return f"{type(self).__name__}(k={self.k})"
+        extra = f", k/{self.shards} per shard" if self.shards > 1 else ""
+        return f"{type(self).__name__}(k={self.k}{extra})"
 
 
 class TopK(_Sparsifier):
-    """Keep the k largest-magnitude entries of (x + residual)."""
+    """Keep the k largest-magnitude entries of (x + residual) -- the
+    per-shard largest ceil(k/M) under a budget split."""
     name = "topk"
 
     def _select(self, xc, rng):
-        _, idx = jax.lax.top_k(jnp.abs(xc), min(self.k, xc.shape[-1]))
+        _, idx = jax.lax.top_k(jnp.abs(xc), min(self.slots, xc.shape[-1]))
         return idx
 
     def floats_per_message(self, d: int) -> int:
-        return 2 * min(self.k, d)      # (value, index) pairs
+        return 2 * min(self.slots, d)  # (value, index) pairs per shard
 
     def gather_floats(self, d: int) -> int:
-        return 2 * min(self.k, d)      # the pairs travel as-is
+        return 2 * min(self.slots, d)  # the pairs travel as-is
 
 
 class RandK(_Sparsifier):
-    """Keep k uniformly random entries of (x + residual). The index set is
-    drawn from the shared per-round worker key, so the receiver re-derives
-    it and only the k values travel (EF absorbs the 1-k/d shrinkage bias)."""
+    """Keep k uniformly random entries of (x + residual) -- ceil(k/M) per
+    shard under a budget split. The index set is drawn from the shared
+    per-round worker key, so the receiver re-derives it and only the k
+    values travel (EF absorbs the 1-k/d shrinkage bias)."""
     name = "randk"
 
     def _select(self, xc, rng):
         d = xc.shape[-1]
-        return jax.random.choice(rng, d, (min(self.k, d),), replace=False)
+        return jax.random.choice(rng, d, (min(self.slots, d),), replace=False)
 
     def floats_per_message(self, d: int) -> int:
-        return min(self.k, d)          # values only; indices are seed-derived
+        return min(self.slots, d)      # values only; indices are seed-derived
 
     def gather_floats(self, d: int) -> int:
         # unlike the dense reduce (where the masked vector is rebuilt
         # sender-side, so the seed-derived indices never travel), the
         # gather collective transmits the (idx, val) sets as-is -- charge
         # both words honestly
-        return 2 * min(self.k, d)
+        return 2 * min(self.slots, d)
 
 
 class StochasticQuant(Compressor):

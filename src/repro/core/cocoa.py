@@ -1,13 +1,24 @@
-"""CoCoA+ framework driver (paper Algorithm 1).
+"""CoCoA+ framework driver (paper Algorithm 1), generalized over the
+regularizer g(w) (CoCoA general, Smith et al. 1611.02189).
 
 One outer round:
-    1. each worker k solves the sigma'-damped local subproblem (eq. 9)
+    1. each worker k solves the sigma'-damped local subproblem (eq. 9,
+       with the regularizer's tau = reg.tau(lam) in place of lambda)
        Theta-approximately (any solver from core.solvers, incl. the Pallas
        TPU kernel paths, dense and sparse),
-    2. communicates a single d-vector Delta w_k = (1/lambda n) A Delta a_[k]
+    2. communicates a single d-vector Delta v_k = (1/tau n) A Delta a_[k]
        (optionally compressed with error feedback -- repro.comm.compress),
-    3. the comm layer aggregates  w <- w + gamma * sum_k C(Delta w_k),
+    3. the comm layer aggregates  v <- v + gamma * sum_k C(Delta v_k),
        alpha_[k] <- alpha_[k] + gamma * Delta a_[k].
+
+The shared state is the *scaled dual-side* vector v = A alpha / (tau n);
+the primal iterate is recovered through the conjugate map w = grad g*(tau
+v) (`Regularizer.conj_grad`, elementwise and therefore shard-local on a
+2-D mesh). Under the default L2 regularizer the map is the identity and
+v IS the paper's w(alpha) -- every formula below reduces to the hard-coded
+original bit-for-bit. The comm stack (compression, EF residuals, reduce
+topologies, gather sets, WSpec placement) operates on v-space deltas and
+is untouched by the choice of g.
 
 The (gamma, sigma') pair is a pluggable repro.comm.aggregate strategy:
 gamma = 1/K, sigma' = 1  -> original CoCoA (averaging)   [Remark 12]
@@ -51,6 +62,7 @@ from repro.data.sparse import FeatureShards, SparseShards
 
 from . import duality
 from .losses import Loss, get_loss
+from .regularizers import L2, Regularizer, get_regularizer
 from .solvers import SOLVERS, SDCAResult
 
 
@@ -73,6 +85,8 @@ class CoCoAConfig:
     topology: str = "flat"             # reduce plan: "flat"|"hier:<g>"|"a2a"
     gather: bool = False               # compressed sparse gather: the reduce
                                        # moves (idx, val) sets, ~2kK floats
+    reg: str = "l2"                    # regularizer g(w): "l2" |
+                                       # "elastic:<eta>" | "l1s:<eps>"
 
     def resolved_sigma(self, K: int) -> float:
         return self.agg_params(K).sigma_prime
@@ -82,12 +96,25 @@ class CoCoAConfig:
         return comm.from_config(self.gamma, self.sigma_p, K,
                                 aggregator=self.aggregator)
 
-    def compressor(self) -> comm.Compressor:
+    def regularizer(self) -> Regularizer:
+        """The Regularizer instance this config's rounds evaluate."""
+        return get_regularizer(self.reg)
+
+    def compressor(self, M: int = 1) -> comm.Compressor:
+        """The wire compressor; under compressed gather on a feature-
+        sharded mesh (`M` > 1) the sparsifier's budget k is split across
+        the model shards (ceil(k/M) slots, remainder to low shards) so the
+        gathered-set wire volume stays M-invariant at ~2kK floats/round
+        instead of growing to 2kKM. The dense reduce form is NOT split --
+        there each shard's masked d/M-vector message already shrinks with
+        M, and k stays the per-shard budget it always was."""
         comp = comm.resolve_compressor(self.compress, self.compress_k)
         if self.gather and not comp.supports_gather:
             raise ValueError(
                 f"gather=True needs a sparse-set compressor (topk/randk); "
                 f"compress={self.compress!r} only has a dense wire form")
+        if M > 1 and self.gather:
+            comp = comp.with_shards(M, self.model_axis)
         return comp
 
     @staticmethod
@@ -102,8 +129,14 @@ class CoCoAConfig:
 
 
 class CoCoAState(NamedTuple):
-    w: jnp.ndarray        # (d,) shared primal vector -- d is the *placed*
-                          # width (WSpec.d_padded under feature sharding)
+    w: jnp.ndarray        # (d,) shared vector -- the *scaled dual-side*
+                          # point v = A alpha/(tau n); the primal iterate
+                          # is reg.conj_grad(w, lam) (`primal_w`), which is
+                          # the identity under L2 (then this IS the paper's
+                          # w). Kept under its historical leaf name so
+                          # checkpoints / pytree signatures are unchanged.
+                          # d is the *placed* width (WSpec.d_padded under
+                          # feature sharding)
     alpha: jnp.ndarray    # (K, nk) partitioned duals
     rng: jax.Array
     rounds: jnp.ndarray   # scalar int32
@@ -127,6 +160,14 @@ def init_state(d: int, K: int, nk: int, seed: int = 0,
         alpha_bar=jnp.zeros((K, nk), dtype),
         ef=comm.init_residual(K, d, dtype),
     )
+
+
+def primal_w(state: CoCoAState, cfg: CoCoAConfig) -> jnp.ndarray:
+    """The primal iterate the run serves: w = grad g*(tau v) applied to the
+    state's shared v-vector (identity under L2). Elementwise, so it is
+    valid on padded feature-sharded widths (conj_grad(0) = 0 for every
+    instance -- padding stays zero)."""
+    return cfg.regularizer().conj_grad(state.w, cfg.lam)
 
 
 def reshard_w_state(state: CoCoAState, old: WSpec, new: WSpec,
@@ -197,21 +238,23 @@ def _resolve_solver(name: str, sparse: bool,
     return resolved
 
 
-def _worker_body(X_k, y_k, alpha_k, mask_k, w, rng, *, loss: Loss, lam: float,
+def _worker_body(X_k, y_k, alpha_k, mask_k, v, rng, *, loss: Loss, lam: float,
                  n, sigma_p: float, H: int, solver: str,
-                 budget=None, sqnorms=None, model_axis=None) -> SDCAResult:
+                 budget=None, sqnorms=None, model_axis=None,
+                 reg: Regularizer = L2) -> SDCAResult:
     fn = _solver_fn(solver)
     if solver == "sdca_deadline":
-        return fn(X_k, y_k, alpha_k, mask_k, w, rng, loss, lam, n, sigma_p, H,
-                  budget if budget is not None else jnp.asarray(H))
+        return fn(X_k, y_k, alpha_k, mask_k, v, rng, loss, lam, n, sigma_p, H,
+                  budget if budget is not None else jnp.asarray(H), reg=reg)
     if solver in ("sdca", "sdca_sparse"):
-        return fn(X_k, y_k, alpha_k, mask_k, w, rng, loss, lam, n, sigma_p, H,
-                  sqnorms=sqnorms, model_axis=model_axis)
+        return fn(X_k, y_k, alpha_k, mask_k, v, rng, loss, lam, n, sigma_p, H,
+                  sqnorms=sqnorms, model_axis=model_axis, reg=reg)
     assert model_axis is None, (solver, "has no feature-sharded path")
     if solver == "sdca_importance":
-        return fn(X_k, y_k, alpha_k, mask_k, w, rng, loss, lam, n, sigma_p, H,
-                  sqnorms=sqnorms)
-    return fn(X_k, y_k, alpha_k, mask_k, w, rng, loss, lam, n, sigma_p, H)
+        return fn(X_k, y_k, alpha_k, mask_k, v, rng, loss, lam, n, sigma_p, H,
+                  sqnorms=sqnorms, reg=reg)
+    return fn(X_k, y_k, alpha_k, mask_k, v, rng, loss, lam, n, sigma_p, H,
+              reg=reg)
 
 
 # ----------------------------------------------------------------------------
@@ -225,6 +268,7 @@ def make_round_vmap(cfg: CoCoAConfig, K: int,
     cfg.solver is transparently mapped to its ELL counterpart for sparse
     inputs (sdca -> sdca_sparse, sdca_kernel -> sdca_sparse_kernel)."""
     loss = get_loss(cfg.loss)
+    reg = cfg.regularizer()
     topo = Topology.simulated(K, topology=cfg.topology)
     p = cfg.agg_params(K)
     compressor = cfg.compressor()
@@ -239,7 +283,7 @@ def make_round_vmap(cfg: CoCoAConfig, K: int,
         solver = _resolve_solver(cfg.solver, isinstance(X, SparseShards))
         body = functools.partial(
             _worker_body, loss=loss, lam=cfg.lam, n=n, sigma_p=p.sigma_prime,
-            H=cfg.H, solver=solver)
+            H=cfg.H, solver=solver, reg=reg)
         if budget is None:
             res = jax.vmap(lambda Xk, yk, ak, mk, r: body(Xk, yk, ak, mk, state.w, r)
                            )(X, y, alpha_split(state.alpha, K), mask, rngs)
@@ -300,13 +344,16 @@ def make_round_sharded(cfg: CoCoAConfig, mesh) -> Callable[..., CoCoAState]:
     from jax.experimental.shard_map import shard_map
 
     loss = get_loss(cfg.loss)
+    reg = cfg.regularizer()
     topo = Topology.from_mesh(mesh, cfg.data_axis, cfg.model_axis,
                               topology=cfg.topology)
     K = topo.K
     M = topo.M
     sharded_w = M > 1
     p = cfg.agg_params(K)
-    compressor = cfg.compressor()
+    # compressed gather at M > 1 splits the sparsifier's budget across
+    # model shards (k/M each) so gathered-set wire volume stays M-invariant
+    compressor = cfg.compressor(M=M)
     mspec = cfg.model_axis  # None -> replicated features
     # measured post-dedup inter volume only exists for hier gather
     want_wire = cfg.gather and topo.reduce == "hier"
@@ -320,7 +367,7 @@ def make_round_sharded(cfg: CoCoAConfig, mesh) -> Callable[..., CoCoAState]:
         rngk = jax.random.fold_in(rng, topo.worker_index())
         res = _worker_body(Xk, yk, ak, mk, w, rngk, loss=loss, lam=cfg.lam,
                            n=n, sigma_p=p.sigma_prime, H=cfg.H, solver=solver,
-                           sqnorms=sqn_k, model_axis=model_axis)
+                           sqnorms=sqn_k, model_axis=model_axis, reg=reg)
         # --- the one communicated w-shard per round per worker ---
         stats = {}
         dw_sum, ef_new = comm.exchange(topo, res.du, efk, comm.comm_rng(rngk),
@@ -530,6 +577,7 @@ def solve(cfg: CoCoAConfig, X, y, mask, *, rounds: int, eps_gap: float = 0.0,
         K, nk, d = X.shape
         dtype = X.dtype
     loss = get_loss(cfg.loss)
+    reg = cfg.regularizer()
 
     if cfg.backend == "shard_map":
         assert mesh is not None, "shard_map backend needs a mesh"
@@ -561,13 +609,14 @@ def solve(cfg: CoCoAConfig, X, y, mask, *, rounds: int, eps_gap: float = 0.0,
 
     compressed = cfg.compress not in (None, "none", "")
     if compressed:
-        # with lossy messages w drifts from w(alpha); certify the w the
-        # algorithm actually carries (still >= D by weak duality)
+        # with lossy messages the state's v drifts from v(alpha); certify
+        # the primal point w = grad g*(tau v) the algorithm actually
+        # carries (still >= D by weak duality)
         gap_fn = jax.jit(functools.partial(
-            duality.gap_at_w, loss=loss, lam=cfg.lam))
+            duality.gap_at_v, loss=loss, lam=cfg.lam, reg=reg))
     else:
         gap_fn = jax.jit(functools.partial(
-            duality.gap_decomposed, loss=loss, lam=cfg.lam))
+            duality.gap_decomposed, loss=loss, lam=cfg.lam, reg=reg))
 
     # per-round communication accounting: the topology's reduce plan priced
     # by the compressor's wire model (per hop under hier/a2a, the sparse
@@ -577,7 +626,7 @@ def solve(cfg: CoCoAConfig, X, y, mask, *, rounds: int, eps_gap: float = 0.0,
     # model-axis tax of the sharded solver (one scalar psum per coordinate
     # step) is carried as its own hop so per-axis tables add up.
     tracer = comm.CommTracer.for_run(K=K, d_local=topo.d_local(d),
-                                     compressor=cfg.compressor(),
+                                     compressor=cfg.compressor(M=wspec.M),
                                      topo=topo, gather=cfg.gather,
                                      extra_hops=comm.model_hops(wspec, K,
                                                                 cfg.H))

@@ -1,0 +1,177 @@
+"""Regularizers, their convex conjugates, and the v -> w primal map.
+
+The paper (eq. 1/2) fixes the regularizer to g(w) = (lambda/2)||w||^2, which
+makes the primal-from-dual map linear: w(alpha) = A alpha / (lambda n).
+The CoCoA general framework (Smith et al., arXiv 1611.02189) shows the same
+additive/averaging round structure covers any tau-strongly-convex g via
+Fenchel conjugacy: the shared state is the dual-side vector v built from
+A alpha, the primal iterate is recovered through the conjugate gradient
+w = grad g*(.), and tau-strong convexity of g (<=> (1/tau)-smoothness of
+g*) supplies the quadratic damping term the sigma'-subproblem needs. The
+Theta-approximate local-solver guarantees carry over unchanged (Ma et al.,
+arXiv 1512.04039).
+
+Scaled frame
+------------
+Everything here works in the *tau-scaled* frame the solvers already use:
+
+    v := A alpha / (tau n)          (tau = strong-convexity constant of g)
+
+so that for L2 (tau = lambda) v is literally the old w(alpha) and the
+v -> w map is the identity -- the refactored code path is bit-for-bit the
+paper's hard-coded one. A `Regularizer` therefore provides
+
+    value(w, lam)       g(w)                      (primal penalty)
+    conj(v, lam)        g*(tau v)                 (dual penalty at scaled v)
+    conj_grad(v, lam)   grad g*(tau v)            (the v -> w map)
+    tau(lam)            strong-convexity constant of g
+
+with the scaled Fenchel-Young inequality
+
+    value(w) + conj(v) >= tau * <w, v>,   equality iff w = conj_grad(v)
+
+(tests/test_regularizers.py pins it for every instance). All maps are
+elementwise, so under a feature-sharded 2-D mesh each model shard applies
+conj_grad to its local v slice independently -- no cross-shard exchange.
+
+Instances
+---------
+    L2                  g = (lambda/2)||w||^2; tau = lambda;
+                        conj_grad = identity (the paper's setup)
+    ElasticNet(eta)     g = lambda (eta ||w||_1 + (1-eta)/2 ||w||^2);
+                        tau = lambda (1-eta); conj_grad = soft-threshold
+                        at eta/(1-eta) (sparse logistic / elastic-net)
+    SmoothedL1(eps)     g = lambda ||w||_1 + (eps/2)||w||^2 -- the
+                        eps-Moreau smoothing of the Lasso dual: g* is the
+                        eps-envelope of the ||.||_inf <= lambda box
+                        indicator, (1/2 eps) dist^2(., lambda B_inf);
+                        tau = eps; conj_grad = soft-threshold at
+                        lambda/eps (Lasso with a vanishing ridge)
+
+ElasticNet(0) is mathematically L2; SmoothedL1 is the eta -> 1 limit with
+an absolute (eps) rather than relative ridge, so eps alone dials how close
+to exact Lasso the certificate is (the smoothed optimum is within
+(eps/2)||w*||^2 of the Lasso optimum).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+
+
+def soft_threshold(v, kappa):
+    """sign(v) * max(|v| - kappa, 0), elementwise (kappa >= 0)."""
+    return jnp.sign(v) * jnp.maximum(jnp.abs(v) - kappa, 0.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class Regularizer:
+    """A tau(lam)-strongly-convex regularizer in the scaled dual frame.
+
+    `conj`/`conj_grad` take the scaled point v = A alpha / (tau n); `value`
+    takes the primal w. All callables are (array, lam) -> array/scalar and
+    elementwise up to the final reduction, so they are shard-local under
+    feature sharding and fuse into the solvers' coordinate loops.
+    """
+    name: str
+    # g(w): the primal penalty as it appears in P(w)
+    value: Callable[[jnp.ndarray, float], jnp.ndarray]
+    # g*(tau v): the dual penalty as it appears in D(alpha)
+    conj: Callable[[jnp.ndarray, float], jnp.ndarray]
+    # grad g*(tau v): the v -> w map (identity for L2)
+    conj_grad: Callable[[jnp.ndarray, float], jnp.ndarray]
+    # strong-convexity constant of g (the 1/tau smoothness of g*)
+    tau: Callable[[float], float]
+
+    def __hash__(self):  # allow use as a static jit arg, like Loss
+        return hash(self.name)
+
+    def __eq__(self, other):
+        return isinstance(other, Regularizer) and self.name == other.name
+
+
+# ----------------------------------------------------------------------------
+# L2: the paper's setup. conj_grad is the identity -- the generalized code
+# path emits exactly the pre-refactor arithmetic (no extra ops in the jaxpr).
+# ----------------------------------------------------------------------------
+
+L2 = Regularizer(
+    "l2",
+    value=lambda w, lam: 0.5 * lam * jnp.dot(w, w),
+    conj=lambda v, lam: 0.5 * lam * jnp.dot(v, v),
+    conj_grad=lambda v, lam: v,
+    tau=lambda lam: lam,
+)
+
+
+# ----------------------------------------------------------------------------
+# Elastic net: g = lambda (eta ||w||_1 + (1-eta)/2 ||w||^2), 0 <= eta < 1.
+# Unscaled: g*(u) = ||S_{lambda eta}(u)||^2 / (2 tau); at u = tau v the
+# threshold becomes eta/(1-eta) (lambda cancels) and g*(tau v) =
+# (tau/2) ||conj_grad(v)||^2.
+# ----------------------------------------------------------------------------
+
+def make_elastic_net(eta: float) -> Regularizer:
+    if not 0.0 <= eta < 1.0:
+        raise ValueError(f"elastic-net eta must be in [0, 1) -- eta=1 is "
+                         f"pure L1, which is not strongly convex; use "
+                         f"SmoothedL1(eps) for the Lasso regime (got {eta})")
+    kappa = eta / (1.0 - eta)
+
+    def value(w, lam):
+        return lam * (eta * jnp.sum(jnp.abs(w))
+                      + 0.5 * (1.0 - eta) * jnp.dot(w, w))
+
+    def conj(v, lam):
+        s = soft_threshold(v, kappa)
+        return 0.5 * lam * (1.0 - eta) * jnp.dot(s, s)
+
+    # repr-precision name: __eq__/__hash__ key on it (static-jit-arg use),
+    # so two distinct etas must never collide
+    return Regularizer(f"elastic{eta!r}", value, conj,
+                       conj_grad=lambda v, lam: soft_threshold(v, kappa),
+                       tau=lambda lam: lam * (1.0 - eta))
+
+
+# ----------------------------------------------------------------------------
+# Smoothed L1: g = lambda ||w||_1 + (eps/2)||w||^2. Its conjugate is the
+# eps-Moreau envelope of the Lasso dual's box indicator,
+# g*(u) = (1/(2 eps)) sum_j max(|u_j| - lambda, 0)^2, so tau = eps and the
+# scaled-frame threshold is lambda/eps (lam does NOT cancel here).
+# ----------------------------------------------------------------------------
+
+def make_smoothed_l1(eps: float) -> Regularizer:
+    if eps <= 0.0:
+        raise ValueError(f"smoothed-L1 needs eps > 0 (the strong-convexity "
+                         f"floor), got {eps}")
+
+    def value(w, lam):
+        return lam * jnp.sum(jnp.abs(w)) + 0.5 * eps * jnp.dot(w, w)
+
+    def conj(v, lam):
+        s = soft_threshold(v, lam / eps)
+        return 0.5 * eps * jnp.dot(s, s)
+
+    return Regularizer(f"l1s{eps!r}", value, conj,
+                       conj_grad=lambda v, lam: soft_threshold(v, lam / eps),
+                       tau=lambda lam: eps)
+
+
+REGULARIZERS = {"l2": L2}
+
+
+def get_regularizer(spec) -> Regularizer:
+    """Regularizer from a config string:
+    "l2" | "elastic:<eta>" | "l1s:<eps>" (instances pass through)."""
+    if isinstance(spec, Regularizer):
+        return spec
+    if spec in (None, "", "l2"):
+        return L2
+    if isinstance(spec, str) and spec.startswith("elastic:"):
+        return make_elastic_net(float(spec.split(":", 1)[1]))
+    if isinstance(spec, str) and spec.startswith("l1s:"):
+        return make_smoothed_l1(float(spec.split(":", 1)[1]))
+    raise KeyError(f"unknown regularizer {spec!r}; use 'l2', "
+                   f"'elastic:<eta>', or 'l1s:<eps>'")

@@ -2,14 +2,29 @@
 
 LOCALSDCA (Algorithm 2): H steps of single-coordinate exact maximization of
 G_k^{sigma'}, using the closed forms from losses.py. The solver carries the
-local primal estimate
+local *scaled dual-side* estimate
 
-    u = w + (sigma'/(lambda n)) * A Delta_alpha      (Appendix C, eq. 50)
+    v_loc = v + (sigma'/(tau n)) * A Delta_alpha     (Appendix C, eq. 50,
+                                                      generalized: tau is the
+                                                      regularizer's strong-
+                                                      convexity constant)
 
-so each coordinate step costs one d-dot and one d-axpy. This is the hot loop
-that the Pallas TPU kernel in repro.kernels.local_sdca implements; the pure
-JAX version here is the reference/portable path (and the oracle the kernel is
-validated against lives in repro.kernels.ref).
+and evaluates the primal point through the conjugate map per step,
+
+    z_i = x_i^T grad g*(tau v_loc)  =  x_i^T reg.conj_grad(v_loc)
+
+so each coordinate step costs one d-dot plus one elementwise map and one
+d-axpy. Under the default L2 regularizer conj_grad is the identity and
+tau = lambda, so v_loc IS the old u = w + (sigma'/(lambda n)) A Delta_alpha
+and the emitted jaxpr is bit-for-bit the paper's hard-coded path. For the
+L1 family the map is a soft-threshold, which keeps every z evaluated at the
+*actual* (sparse) primal iterate -- the prox-SDCA flavor of the generalized
+subproblem; the Pallas kernels instead hoist the map to round start (the
+exact linearized CoCoA-general subproblem), see repro.kernels.ops.
+
+This is the hot loop that the Pallas TPU kernel in repro.kernels.local_sdca
+implements; the pure JAX version here is the reference/portable path (and
+the oracle the kernel is validated against lives in repro.kernels.ref).
 
 LOCALGD: full-(local)-batch projected(-free) gradient ascent on G_k --
 demonstrates the "arbitrary local solver" claim with a structurally different
@@ -27,11 +42,13 @@ import jax
 import jax.numpy as jnp
 
 from .losses import Loss
+from .regularizers import L2, Regularizer
 
 
 class SDCAResult(NamedTuple):
     dalpha: jnp.ndarray     # (nk,) local dual update
-    du: jnp.ndarray         # (d,)  = (sigma'/(lambda n)) * A dalpha  (local primal delta * sigma')
+    du: jnp.ndarray         # (d,)  = (sigma'/(tau n)) * A dalpha  (local
+                            #        v-space delta, already sigma'-scaled)
     steps: jnp.ndarray      # number of inner steps actually executed
 
 
@@ -56,29 +73,33 @@ _install_barrier_batching_rule()
 
 
 def local_sdca(X_k: jnp.ndarray, y_k: jnp.ndarray, alpha_k: jnp.ndarray,
-               mask_k: jnp.ndarray, w: jnp.ndarray, rng: jax.Array,
+               mask_k: jnp.ndarray, v: jnp.ndarray, rng: jax.Array,
                loss: Loss, lam: float, n, sigma_p: float, H: int,
-               sqnorms=None, model_axis=None) -> SDCAResult:
+               sqnorms=None, model_axis=None,
+               reg: Regularizer = L2) -> SDCAResult:
     """H randomized coordinate-ascent steps on G_k^{sigma'}. X_k: (nk, d).
+
+    `v` is the shared scaled dual-side vector (== the primal w under L2).
 
     `sqnorms`: optional precomputed ||x_i||^2 (they are round-invariant;
     recomputing them costs one full X stream per round -- hoisted per
     EXPERIMENTS.md section Perf, iteration C2).
 
     `model_axis`: feature-sharded mode (inside shard_map on a 2-D mesh):
-    X_k and w are this device's feature slice (nk, d_local) / (d_local,),
+    X_k and v are this device's feature slice (nk, d_local) / (d_local,),
     the per-step dot is a *partial* z that one scalar psum over the model
-    axis completes, and the axpy touches only the local u shard. The
-    coordinate decisions (delta) are then identical on every model shard
-    by construction. Requires precomputed *global* `sqnorms` -- the local
-    slice can't see the other shards' mass."""
+    axis completes (the conjugate map is elementwise, hence shard-local),
+    and the axpy touches only the local v shard. The coordinate decisions
+    (delta) are then identical on every model shard by construction.
+    Requires precomputed *global* `sqnorms` -- the local slice can't see
+    the other shards' mass."""
     nk = X_k.shape[0]
     if model_axis is not None and sqnorms is None:
         raise ValueError("feature-sharded local_sdca needs global sqnorms; "
                          "the local slice can't reconstruct ||x_i||^2")
     if sqnorms is None:
         sqnorms = jnp.sum(X_k * X_k, axis=-1) * mask_k   # padded rows -> 0
-    scale = sigma_p / (lam * n)
+    scale = sigma_p / (reg.tau(lam) * n)
     idxs = jax.random.randint(rng, (H,), 0, nk)
 
     def body(h, carry):
@@ -88,7 +109,7 @@ def local_sdca(X_k: jnp.ndarray, y_k: jnp.ndarray, alpha_k: jnp.ndarray,
         # duplicates the row gather per consumer (2x row traffic; measured
         # in EXPERIMENTS.md section Perf, iteration C3)
         x = jax.lax.optimization_barrier(X_k[i])
-        z = jnp.dot(x, u)
+        z = jnp.dot(x, reg.conj_grad(u, lam))
         if model_axis is not None:
             z = jax.lax.psum(z, model_axis)     # complete the sharded dot
         abar = alpha_k[i] + dalpha[i]
@@ -99,12 +120,13 @@ def local_sdca(X_k: jnp.ndarray, y_k: jnp.ndarray, alpha_k: jnp.ndarray,
         return dalpha, u
 
     dalpha0 = jnp.zeros(nk, X_k.dtype)
-    dalpha, u = jax.lax.fori_loop(0, H, body, (dalpha0, w.astype(X_k.dtype)))
-    return SDCAResult(dalpha, u - w, jnp.asarray(H))
+    dalpha, u = jax.lax.fori_loop(0, H, body, (dalpha0, v.astype(X_k.dtype)))
+    return SDCAResult(dalpha, u - v, jnp.asarray(H))
 
 
-def local_sdca_deadline(X_k, y_k, alpha_k, mask_k, w, rng, loss, lam, n,
-                        sigma_p: float, H: int, budget: jnp.ndarray) -> SDCAResult:
+def local_sdca_deadline(X_k, y_k, alpha_k, mask_k, v, rng, loss, lam, n,
+                        sigma_p: float, H: int, budget: jnp.ndarray,
+                        reg: Regularizer = L2) -> SDCAResult:
     """Straggler-tolerant variant: runs min(H, budget) steps.
 
     `budget` is a traced per-worker scalar (steps affordable before the round
@@ -114,7 +136,7 @@ def local_sdca_deadline(X_k, y_k, alpha_k, mask_k, w, rng, loss, lam, n,
     """
     nk = X_k.shape[0]
     sqnorms = jnp.sum(X_k * X_k, axis=-1) * mask_k
-    scale = sigma_p / (lam * n)
+    scale = sigma_p / (reg.tau(lam) * n)
     idxs = jax.random.randint(rng, (H,), 0, nk)
     hmax = jnp.minimum(jnp.asarray(H), budget)
 
@@ -123,7 +145,7 @@ def local_sdca_deadline(X_k, y_k, alpha_k, mask_k, w, rng, loss, lam, n,
         live = h < hmax
         i = idxs[h]
         x = X_k[i]
-        z = jnp.dot(x, u)
+        z = jnp.dot(x, reg.conj_grad(u, lam))
         abar = alpha_k[i] + dalpha[i]
         q = scale * sqnorms[i]
         delta = jnp.where(live, loss.cd_update(abar, z, q, y_k[i]) * mask_k[i], 0.0)
@@ -132,25 +154,26 @@ def local_sdca_deadline(X_k, y_k, alpha_k, mask_k, w, rng, loss, lam, n,
         return dalpha, u
 
     dalpha0 = jnp.zeros(nk, X_k.dtype)
-    dalpha, u = jax.lax.fori_loop(0, H, body, (dalpha0, w.astype(X_k.dtype)))
-    return SDCAResult(dalpha, u - w, hmax)
+    dalpha, u = jax.lax.fori_loop(0, H, body, (dalpha0, v.astype(X_k.dtype)))
+    return SDCAResult(dalpha, u - v, hmax)
 
 
-def local_gd(X_k, y_k, alpha_k, mask_k, w, rng, loss, lam, n,
-             sigma_p: float, H: int, lr_scale: float = 1.0) -> SDCAResult:
+def local_gd(X_k, y_k, alpha_k, mask_k, v, rng, loss, lam, n,
+             sigma_p: float, H: int, lr_scale: float = 1.0,
+             reg: Regularizer = L2) -> SDCAResult:
     """Projected-gradient ascent on G_k, full local batch -- the "arbitrary
     local solver" demonstration (Assumption 1 only needs Theta < 1).
 
-    grad_i(n*G_k) = -conj'(a_i + da_i) - x_i^T u ,
-        u = w + (sigma'/(lambda n)) A da.
-    Step size 1/L with L = sigma' sigma_k /(lambda n) + conj''_max, using
+    grad_i(n*G_k) = -conj'(a_i + da_i) - x_i^T grad g*(tau v_loc) ,
+        v_loc = v + (sigma'/(tau n)) A da.
+    Step size 1/L with L = sigma' sigma_k /(tau n) + conj''_max, using
     sigma_k <= max_i ||x_i||^2 * n_k and conj'' ~ max(mu, 1). Iterates are
     projected onto the dual-feasible set after every step (losses.project).
     """
     del rng
     assert loss.conj_grad is not None and loss.project is not None
     nk = X_k.shape[0]
-    scale = sigma_p / (lam * n)
+    scale = sigma_p / (reg.tau(lam) * n)
     sqmax = jnp.max(jnp.sum(X_k * X_k, axis=-1) * mask_k)
     L = scale * sqmax * nk + max(loss.mu, 1.0)
     lr = lr_scale / L
@@ -159,7 +182,7 @@ def local_gd(X_k, y_k, alpha_k, mask_k, w, rng, loss, lam, n,
         dalpha, u = carry
         a = alpha_k + dalpha
         g = (-loss.conj_grad(a, y_k)
-             - jnp.einsum("id,d->i", X_k, u)) * mask_k
+             - jnp.einsum("id,d->i", X_k, reg.conj_grad(u, lam))) * mask_k
         a_new = loss.project(a + lr * g, y_k) * mask_k
         step = a_new - a
         dalpha = dalpha + step
@@ -167,12 +190,13 @@ def local_gd(X_k, y_k, alpha_k, mask_k, w, rng, loss, lam, n,
         return dalpha, u
 
     dalpha0 = jnp.zeros(nk, X_k.dtype)
-    dalpha, u = jax.lax.fori_loop(0, H, body, (dalpha0, w.astype(X_k.dtype)))
-    return SDCAResult(dalpha, u - w, jnp.asarray(H))
+    dalpha, u = jax.lax.fori_loop(0, H, body, (dalpha0, v.astype(X_k.dtype)))
+    return SDCAResult(dalpha, u - v, jnp.asarray(H))
 
 
-def local_sdca_importance(X_k, y_k, alpha_k, mask_k, w, rng, loss, lam, n,
-                          sigma_p: float, H: int, sqnorms=None) -> SDCAResult:
+def local_sdca_importance(X_k, y_k, alpha_k, mask_k, v, rng, loss, lam, n,
+                          sigma_p: float, H: int, sqnorms=None,
+                          reg: Regularizer = L2) -> SDCAResult:
     """LocalSDCA with importance sampling p_i ~ ||x_i||^2 + mean||x||^2
     (Zhao & Zhang-style mixed sampling). The paper's Appendix C explicitly
     invites plugging better local solvers -- Assumption 1 only needs Theta<1.
@@ -181,7 +205,7 @@ def local_sdca_importance(X_k, y_k, alpha_k, mask_k, w, rng, loss, lam, n,
     nk = X_k.shape[0]
     if sqnorms is None:
         sqnorms = jnp.sum(X_k * X_k, axis=-1) * mask_k
-    scale = sigma_p / (lam * n)
+    scale = sigma_p / (reg.tau(lam) * n)
     mean_sq = jnp.sum(sqnorms) / jnp.maximum(jnp.sum(mask_k), 1.0)
     probs = (sqnorms + mean_sq) * mask_k
     probs = probs / jnp.sum(probs)
@@ -191,7 +215,7 @@ def local_sdca_importance(X_k, y_k, alpha_k, mask_k, w, rng, loss, lam, n,
         dalpha, u = carry
         i = idxs[h]
         x = X_k[i]
-        z = jnp.dot(x, u)
+        z = jnp.dot(x, reg.conj_grad(u, lam))
         abar = alpha_k[i] + dalpha[i]
         q = scale * sqnorms[i]
         delta = loss.cd_update(abar, z, q, y_k[i]) * mask_k[i]
@@ -200,27 +224,33 @@ def local_sdca_importance(X_k, y_k, alpha_k, mask_k, w, rng, loss, lam, n,
         return dalpha, u
 
     dalpha0 = jnp.zeros(nk, X_k.dtype)
-    dalpha, u = jax.lax.fori_loop(0, H, body, (dalpha0, w.astype(X_k.dtype)))
-    return SDCAResult(dalpha, u - w, jnp.asarray(H))
+    dalpha, u = jax.lax.fori_loop(0, H, body, (dalpha0, v.astype(X_k.dtype)))
+    return SDCAResult(dalpha, u - v, jnp.asarray(H))
 
 
-def local_sdca_sparse(shard, y_k, alpha_k, mask_k, w, rng, loss: Loss,
+def local_sdca_sparse(shard, y_k, alpha_k, mask_k, v, rng, loss: Loss,
                       lam: float, n, sigma_p: float, H: int,
-                      sqnorms=None, model_axis=None) -> SDCAResult:
+                      sqnorms=None, model_axis=None,
+                      reg: Regularizer = L2) -> SDCAResult:
     """LocalSDCA over a padded-ELL shard (repro.data.sparse.SparseShards,
     per-worker: cols/vals (nk, r_max)). Per step one r_max-gather dot and
     one r_max scatter-axpy (a segment-sum over the row's columns) instead
     of the dense d-dot/d-axpy -- O(nnz) work at the paper's densities.
+
+    The conjugate map commutes with the gather (it is elementwise), so the
+    generalized z costs reg.conj_grad on just the r_max gathered entries:
+    z = sum_r vals[r] * grad g*(tau v_loc)[cols[r]] -- the sparse fast path
+    stays O(nnz) for every regularizer (identity under L2, bit-for-bit).
 
     This is the portable jnp fallback for the Pallas kernel in
     repro.kernels.sparse_sdca; padding slots (col 0, val 0) are exact
     arithmetic no-ops, so no per-row nnz bookkeeping is needed here.
 
     `model_axis`: feature-sharded mode -- the shard's `cols` are
-    *shard-local* column ids into the local w slice (d_local floats, see
+    *shard-local* column ids into the local v slice (d_local floats, see
     data.sparse.shard_features), the gather-dot yields a partial z
     completed by one scalar psum over the model axis, and the scatter-axpy
-    touches only the local u shard. Requires precomputed *global*
+    touches only the local v shard. Requires precomputed *global*
     `sqnorms` (the slice only sees its own entries' mass)."""
     cols, vals = shard.cols, shard.vals
     nk = cols.shape[0]
@@ -230,7 +260,7 @@ def local_sdca_sparse(shard, y_k, alpha_k, mask_k, w, rng, loss: Loss,
                          "||x_i||^2")
     if sqnorms is None:
         sqnorms = jnp.sum(vals * vals, axis=-1) * mask_k
-    scale = sigma_p / (lam * n)
+    scale = sigma_p / (reg.tau(lam) * n)
     idxs = jax.random.randint(rng, (H,), 0, nk)
 
     def body(h, carry):
@@ -240,7 +270,7 @@ def local_sdca_sparse(shard, y_k, alpha_k, mask_k, w, rng, loss: Loss,
         # (gather-dot + scatter-axpy); without it XLA duplicates the row
         # gather per consumer (2x ELL-row traffic)
         ci, vi = jax.lax.optimization_barrier((cols[i], vals[i]))
-        z = jnp.dot(vi, u[ci])
+        z = jnp.dot(vi, reg.conj_grad(u[ci], lam))
         if model_axis is not None:
             z = jax.lax.psum(z, model_axis)     # complete the sharded dot
         abar = alpha_k[i] + dalpha[i]
@@ -251,8 +281,8 @@ def local_sdca_sparse(shard, y_k, alpha_k, mask_k, w, rng, loss: Loss,
         return dalpha, u
 
     dalpha0 = jnp.zeros(nk, vals.dtype)
-    dalpha, u = jax.lax.fori_loop(0, H, body, (dalpha0, w.astype(vals.dtype)))
-    return SDCAResult(dalpha, u - w, jnp.asarray(H))
+    dalpha, u = jax.lax.fori_loop(0, H, body, (dalpha0, v.astype(vals.dtype)))
+    return SDCAResult(dalpha, u - v, jnp.asarray(H))
 
 
 SOLVERS = {

@@ -1,9 +1,16 @@
-"""The sigma'-damped data-local subproblem G_k^{sigma'} (paper eq. 9).
+"""The sigma'-damped data-local subproblem G_k^{sigma'} (paper eq. 9),
+generalized over the regularizer g (CoCoA general, Smith et al. 1611.02189):
 
     G_k(da; w, a_k) = -(1/n) sum_{i in P_k} l_i*(-(a_i + da_i))
-                      - (1/K)(lambda/2)||w||^2
+                      - (1/K) g(w)
                       - (1/n) w^T A da
-                      - (lambda sigma'/2) || A da / (lambda n) ||^2
+                      - (sigma' tau / 2) || A da / (tau n) ||^2
+
+where w = grad g*(tau v) is the round's primal point and tau = reg.tau(lam)
+is g's strong-convexity constant -- the quadratic damping term is exactly
+the (1/tau)-smoothness bound on g*, so any tau-strongly-convex g reuses the
+same sigma'-safe aggregation machinery. With the default L2 (tau = lambda,
+g(w) = (lambda/2)||w||^2) every term reduces to the paper's eq. 9 verbatim.
 
 Used directly by tests (Lemma 3 inequality, Assumption-1 quality of solvers)
 and by the LocalGD solver. The SDCA solvers use the per-coordinate closed
@@ -14,26 +21,31 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from .losses import Loss
+from .regularizers import L2, Regularizer
 
 
 def subproblem_value(dalpha_k: jnp.ndarray, w: jnp.ndarray, alpha_k: jnp.ndarray,
                      X_k: jnp.ndarray, y_k: jnp.ndarray, mask_k: jnp.ndarray,
-                     loss: Loss, lam: float, n, K: int, sigma_p: float) -> jnp.ndarray:
-    """G_k^{sigma'} for one worker. X_k: (nk, d); vectors are (nk,)."""
+                     loss: Loss, lam: float, n, K: int, sigma_p: float,
+                     reg: Regularizer = L2) -> jnp.ndarray:
+    """G_k^{sigma'} for one worker. X_k: (nk, d); vectors are (nk,).
+    `w` is the primal point (grad g*(tau v) for generalized regularizers)."""
+    tau = reg.tau(lam)
     conj = loss.conj(alpha_k + dalpha_k, y_k) * mask_k
     Ada = X_k.T @ (dalpha_k * mask_k)          # A da  (d,)
-    quad = (0.5 * sigma_p / lam) * jnp.dot(Ada, Ada) / (n * n)
+    quad = (0.5 * sigma_p / tau) * jnp.dot(Ada, Ada) / (n * n)
     return (-jnp.sum(conj) / n
-            - (0.5 * lam / K) * jnp.dot(w, w)
+            - reg.value(w, lam) / K
             - jnp.dot(w, Ada) / n
             - quad)
 
 
-def subproblem_sum(dalpha, w, alpha, X, y, mask, loss, lam, n, K, sigma_p):
+def subproblem_sum(dalpha, w, alpha, X, y, mask, loss, lam, n, K, sigma_p,
+                   reg: Regularizer = L2):
     """sum_k G_k over the stacked (K, nk, ...) layout (vmapped)."""
     import jax
     vals = jax.vmap(
         lambda da, a, Xk, yk, mk: subproblem_value(
-            da, w, a, Xk, yk, mk, loss, lam, n, K, sigma_p)
+            da, w, a, Xk, yk, mk, loss, lam, n, K, sigma_p, reg)
     )(dalpha, alpha, X, y, mask)
     return jnp.sum(vals)

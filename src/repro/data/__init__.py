@@ -3,4 +3,5 @@ from .synthetic import (DATASETS, load, make_classification,
 from .sparse import (CSRMatrix, FeatureShards, SparseShards, csr_to_ell,
                      csr_vstack, densify, ell_to_csr, iter_libsvm_chunks,
                      load_libsvm, make_sparse_classification,
-                     partition_sparse, shard_features)
+                     partition_sparse, shard_features,
+                     shard_features_streaming)

@@ -314,6 +314,105 @@ def shard_features(sh: SparseShards, M: int) -> FeatureShards:
                          d=sh.d, M=M, d_local=d_local)
 
 
+def shard_features_streaming(chunks, K: int, M: int = 1, *,
+                             n_features: Optional[int] = None):
+    """Build per-shard `FeatureShards` incrementally from streamed
+    (CSRMatrix, labels) blocks -- e.g. `iter_libsvm_chunks` -- without ever
+    materializing a host-side full-width global array (neither the padded
+    (n, r_max) global ELL nor the (K, nk, r_max) worker ELL that the
+    `partition_sparse` -> `shard_features` path routes through). This is
+    the url/webspam-scale ingest (d ~ 3.2M): peak host memory is O(nnz)
+    entry lists plus the final per-shard padded blocks, independent of
+    n * r_max.
+
+    Rows are dealt round-robin in arrival order (row j -> worker j % K; a
+    streaming source has no global row count to split contiguously, and
+    round-robin keeps worker loads balanced for any stream length). Each
+    row is sliced into its M feature blocks on arrival and stored with
+    shard-local column ids -- the same contiguous block map as
+    `shard_features` (d_local = ceil(d/M)), so the result is exactly the
+    `FeatureShards` the materialized path produces for the same row
+    assignment (equality-tested in tests/test_sparse.py).
+
+    `n_features` fixes the global width d up front (required unless the
+    chunks already carry a stable width, i.e. `iter_libsvm_chunks` was
+    given n_features). Returns (FeatureShards, y (K, nk), mask (K, nk))
+    with the usual zero-pad + mask tail on each worker.
+    """
+    if K < 1 or M < 1:
+        raise ValueError(f"need K >= 1 and M >= 1, got K={K} M={M}")
+    d = n_features
+    d_local = None
+    # O(1) python objects per *chunk*: each chunk contributes one tuple of
+    # flat per-entry arrays (k, m, local row, ELL slot, local col, val) and
+    # one (rows, M) slice-count block; the padded output is allocated once
+    # at the end when n and r_loc are known
+    entry_blocks, count_blocks, label_blocks = [], [], []
+    n = 0
+    for csr, y in chunks:
+        if d is None:
+            d = csr.shape[1]
+            if d < 1:
+                raise ValueError("cannot infer d from an empty first chunk; "
+                                 "pass n_features")
+        if csr.shape[1] > d:
+            raise ValueError(f"chunk width {csr.shape[1]} exceeds d={d}; "
+                             f"pass n_features for a stable column count")
+        if d_local is None:
+            d_local = -(-d // M)
+        nc = csr.shape[0]
+        if nc == 0:
+            continue
+        ip = csr.indptr.astype(np.int64)
+        row_nnz = np.diff(ip)
+        row_of = np.repeat(np.arange(nc, dtype=np.int64), row_nnz)
+        owner = csr.indices.astype(np.int64) // d_local
+        # entries are column-sorted within a row, so each row's m-slices
+        # are contiguous runs: the slice counts give every entry's ELL
+        # slot without any per-row python work
+        counts = np.zeros((nc, M), np.int64)
+        np.add.at(counts, (row_of, owner), 1)
+        starts = np.zeros((nc, M), np.int64)
+        starts[:, 1:] = np.cumsum(counts, axis=1)[:, :-1]
+        pos_in_row = np.arange(len(row_of)) - np.repeat(ip[:-1], row_nnz)
+        slot = pos_in_row - starts[row_of, owner]
+        g = n + row_of                       # global arrival row id
+        entry_blocks.append((
+            (g % K).astype(np.int32), owner.astype(np.int32),
+            (g // K).astype(np.int64), slot,
+            (csr.indices - owner * d_local).astype(np.int32),
+            csr.data.astype(np.float32)))
+        gr = n + np.arange(nc, dtype=np.int64)
+        count_blocks.append(((gr % K).astype(np.int32), gr // K, counts))
+        label_blocks.append((np.asarray(y, np.float32),))
+        n += nc
+    if d is None:
+        raise ValueError("empty stream and no n_features; cannot size d")
+    if n == 0:
+        raise ValueError("empty stream: no rows to shard (a zero-row "
+                         "FeatureShards would certify NaN gaps downstream)")
+    d_local = -(-d // M)
+    nk = -(-n // K)
+    r_loc = max((int(c.max()) for _, _, c in count_blocks if c.size),
+                default=0)
+    r_loc = max(r_loc, 1)
+    cols = np.zeros((K, M, nk, r_loc), np.int32)
+    vals = np.zeros((K, M, nk, r_loc), np.float32)
+    nnz = np.zeros((K, M, nk), np.int32)
+    yp = np.zeros((K, nk), np.float32)
+    mask = np.zeros((K, nk), np.float32)
+    for (ke, me, re, se, ce, ve), (kr, rr, cnt), (yb,) in zip(
+            entry_blocks, count_blocks, label_blocks):
+        cols[ke, me, re, se] = ce
+        vals[ke, me, re, se] = ve
+        nnz[kr, :, rr] = cnt
+        yp[kr, rr] = yb
+        mask[kr, rr] = 1.0
+    fs = FeatureShards(jnp.asarray(cols), jnp.asarray(vals),
+                       jnp.asarray(nnz), d=d, M=M, d_local=d_local)
+    return fs, jnp.asarray(yp), jnp.asarray(mask)
+
+
 def matvec(sh, w: jnp.ndarray) -> jnp.ndarray:
     """z = A^T w per row:  z_i = sum_r vals[i, r] * w[cols[i, r]].
 

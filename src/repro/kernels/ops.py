@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.losses import Loss
+from repro.core.regularizers import L2, Regularizer
 from repro.core.solvers import SDCAResult
 from .local_sdca import local_sdca_pallas
 from .sparse_sdca import sparse_local_sdca
@@ -47,17 +48,26 @@ def _check_placement(model_axis, name):
             f"unchanged -- the local shard is the full w.")
 
 
-def local_sdca_block(X_k, y_k, alpha_k, mask_k, w, rng, loss: Loss,
+def local_sdca_block(X_k, y_k, alpha_k, mask_k, v, rng, loss: Loss,
                      lam: float, n, sigma_p: float, H: int,
                      *, block_rows: int = 128,
                      interpret: bool | None = None,
-                     model_axis=None) -> SDCAResult:
+                     model_axis=None, reg: Regularizer = L2) -> SDCAResult:
     """Drop-in solver: block-shuffled SDCA via the Pallas kernel.
 
-    Placement: `X_k`/`w` may be a feature *slice* (nk, d_loc)/(d_loc,) --
+    `v` is the shared scaled dual-side vector (== the primal w under L2).
+    The conjugate map w0 = grad g*(tau v) is *hoisted outside* the
+    pallas_call -- one elementwise pass per round, not per step -- so the
+    kernel body is untouched and runs the exact linearized CoCoA-general
+    subproblem around w0 (identical to the jnp solvers under L2, where
+    the map is the identity; for the L1 family the jnp solvers re-apply
+    the map per step, a Theta difference, not a correctness one).
+
+    Placement: `X_k`/`v` may be a feature *slice* (nk, d_loc)/(d_loc,) --
     the kernel is shard-shape-agnostic -- but only at M=1 (see
     `_check_placement`)."""
     _check_placement(model_axis, "local_sdca_block")
+    w0 = reg.conj_grad(v, lam)        # hoisted conjugate map (round-level)
     nk, d = X_k.shape
     n_passes = max(1, int(round(H / max(nk, 1))))
 
@@ -72,29 +82,37 @@ def local_sdca_block(X_k, y_k, alpha_k, mask_k, w, rng, loss: Loss,
     yp = _pad_to(yp, br, 0)
     ap = _pad_to(ap, br, 0)
     mp = _pad_to(mp, br, 0)
-    wp = _pad_to(w, 128, 0)
+    wp = _pad_to(w0, 128, 0)
 
-    scale = sigma_p / (lam * jnp.asarray(n, jnp.float32))
+    scale = sigma_p / (reg.tau(lam) * jnp.asarray(n, jnp.float32))
     da_p, du_p = local_sdca_pallas(Xp, yp, ap, mp, wp, scale, loss=loss,
                                    n_passes=n_passes, block_rows=br,
                                    interpret=interpret)
-    # un-permute dalpha; drop padding
+    # un-permute dalpha; drop padding. du is u - w0 with scale-weighted
+    # axpy accumulations only, i.e. already the sigma'-scaled v-space delta
     dalpha = jnp.zeros(nk, da_p.dtype).at[perm].set(da_p[:nk])
-    return SDCAResult(dalpha.astype(X_k.dtype), du_p[:d].astype(w.dtype),
+    return SDCAResult(dalpha.astype(X_k.dtype), du_p[:d].astype(v.dtype),
                       jnp.asarray(n_passes * nk))
 
 
-def sparse_local_sdca_block(shard, y_k, alpha_k, mask_k, w, rng, loss: Loss,
+def sparse_local_sdca_block(shard, y_k, alpha_k, mask_k, v, rng, loss: Loss,
                             lam: float, n, sigma_p: float, H: int,
                             *, block_rows: int = 128,
                             interpret: bool | None = None,
-                            model_axis=None) -> SDCAResult:
+                            model_axis=None,
+                            reg: Regularizer = L2) -> SDCAResult:
     """Drop-in solver: block-shuffled SDCA over a padded-ELL shard.
 
     `shard` is a per-worker SparseShards (cols/vals (nk, r_max)). Same
     responsibilities as `local_sdca_block` -- fresh row permutation per call,
     padding to the kernel's alignment contract (r_max and d to multiples of
-    128 on real TPUs; padding entries are exact no-ops), H -> whole passes.
+    128 on real TPUs; padding entries are exact no-ops), H -> whole passes --
+    including the hoisted conjugate map: w0 = grad g*(tau v) is one
+    elementwise pass *before* the pallas_call, so the kernel's O(nnz)
+    gather/scatter stream is untouched for every regularizer (the per-step
+    map would cost O(d) per step inside the kernel and void the sparse
+    advantage; hoisting makes the kernel solve the exact linearized
+    CoCoA-general subproblem around w0).
 
     Placement: the kernel gathers/scatters against whatever w vector it is
     handed, so a shard whose `cols` are shard-local ids against a local
@@ -104,9 +122,10 @@ def sparse_local_sdca_block(shard, y_k, alpha_k, mask_k, w, rng, loss: Loss,
     M=1 placement is runnable end-to-end (see `_check_placement`).
     """
     _check_placement(model_axis, "sparse_local_sdca_block")
+    w0 = reg.conj_grad(v, lam)        # hoisted conjugate map (round-level)
     cols, vals = shard.cols, shard.vals
     nk, r_max = cols.shape
-    d = w.shape[0]
+    d = v.shape[0]
     n_passes = max(1, int(round(H / max(nk, 1))))
 
     perm = jax.random.permutation(rng, nk)
@@ -123,12 +142,12 @@ def sparse_local_sdca_block(shard, y_k, alpha_k, mask_k, w, rng, loss: Loss,
     yp = _pad_to(yp, br, 0)
     ap = _pad_to(ap, br, 0)
     mp = _pad_to(mp, br, 0)
-    wp = _pad_to(w, lane, 0)
+    wp = _pad_to(w0, lane, 0)
 
-    scale = sigma_p / (lam * jnp.asarray(n, jnp.float32))
+    scale = sigma_p / (reg.tau(lam) * jnp.asarray(n, jnp.float32))
     da_p, du_p = sparse_local_sdca(cp, vp, yp, ap, mp, wp, scale, loss=loss,
                                    n_passes=n_passes, block_rows=br,
                                    interpret=interpret)
     dalpha = jnp.zeros(nk, da_p.dtype).at[perm].set(da_p[:nk])
-    return SDCAResult(dalpha.astype(vals.dtype), du_p[:d].astype(w.dtype),
+    return SDCAResult(dalpha.astype(vals.dtype), du_p[:d].astype(v.dtype),
                       jnp.asarray(n_passes * nk))

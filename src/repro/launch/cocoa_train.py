@@ -30,6 +30,11 @@ elastic re-partitioning).
     PYTHONPATH=src python -m repro.launch.cocoa_train \
         --dataset rcv1_sparse --mesh 4x2 --rounds 40
 
+    # generalized objective: elastic-net (sparse w) via the conjugate map
+    # w = grad g*(v); the duality-gap certificate generalizes with it
+    PYTHONPATH=src python -m repro.launch.cocoa_train \
+        --dataset rcv1_sparse --rounds 40 --reg elastic:0.5
+
 On a real TPU mesh pass --backend shard_map (workers = data-axis shards);
 the default vmap backend simulates any K on one device with identical
 math. Both layouts run on both backends (sparse = per-device padded-ELL
@@ -51,6 +56,7 @@ from repro.checkpoint import CheckpointManager
 from repro.core import CoCoAConfig, duality, solve
 from repro.core.cocoa import CoCoAState, init_state, reshard_w_state
 from repro.core.losses import get_loss
+from repro.core.regularizers import get_regularizer
 from repro.data import DATASETS, load, partition
 from repro.data.sparse import (FeatureShards, SparseShards, partition_sparse,
                                shard_features)
@@ -61,6 +67,10 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", default="covtype_like")
     ap.add_argument("--loss", default="hinge")
+    ap.add_argument("--reg", default="l2",
+                    help="regularizer g(w): l2 | elastic:<eta> (elastic "
+                         "net, lam*(eta*L1 + (1-eta)/2*L2)) | l1s:<eps> "
+                         "(smoothed L1 / Lasso, lam*L1 + eps/2*L2)")
     ap.add_argument("--lam", type=float, default=1e-4)
     ap.add_argument("--workers", type=int, default=8)
     ap.add_argument("--H", type=int, default=2048)
@@ -128,6 +138,10 @@ def main():
         raise SystemExit("--gather needs --compress topk or randk "
                          "(the sparse (idx, val) wire form)")
     try:
+        get_regularizer(args.reg)
+    except (KeyError, ValueError) as e:
+        raise SystemExit(f"--reg: {e}")
+    try:
         comm.Topology.simulated(args.workers, topology=args.topology)
         if args.elastic_to:
             # the re-partition target must fit the topology too, or the
@@ -162,7 +176,7 @@ def main():
     mk_cfg = dict(loss=args.loss, lam=args.lam, H=args.H, solver=args.solver,
                   backend=args.backend, compress=args.compress,
                   compress_k=args.compress_k, topology=args.topology,
-                  gather=args.gather,
+                  gather=args.gather, reg=args.reg,
                   model_axis="model" if M > 1 else None)
 
     def make_cfg(K):
@@ -229,6 +243,7 @@ def main():
         el_K, el_round = (int(v) for v in args.elastic_to.split("@"))
 
     loss = get_loss(args.loss)
+    reg = get_regularizer(args.reg)
     done = start
     while done < args.rounds:
         stop = min(r for r in
@@ -253,8 +268,9 @@ def main():
             break
         if done == args.simulate_failure and args.simulate_failure:
             print("simulating loss of worker 0 (dual-safe drop + recovery)")
-            state = failures.fail_and_recover(state, Xp, mk, args.lam, k=0)
-            # w_of_alpha on dense (unpadded) data returns a (d,) vector;
+            state = failures.fail_and_recover(state, Xp, mk, args.lam, k=0,
+                                              reg=reg)
+            # v_of_alpha on dense (unpadded) data returns a (d,) vector;
             # re-place it for the mesh (identity when already padded --
             # FeatureShards rmatvec emits d_padded directly)
             state = state._replace(w=wspec.pad_w(state.w))
@@ -304,21 +320,29 @@ def main():
     if mgr:
         mgr.wait()
     if args.compress != "none":
-        # lossy wire: certify the w the algorithm actually carries.
-        # FeatureShards evaluate against the padded placed w; the dense
-        # and replicated-sparse data here are unpadded, so unplace first
-        w_eval = (state.w if isinstance(Xp, FeatureShards)
+        # lossy wire: certify the primal point w = grad g*(tau v) of the
+        # v the algorithm actually carries. FeatureShards evaluate against
+        # the padded placed vector; the dense and replicated-sparse data
+        # here are unpadded, so unplace first (conj_grad is elementwise,
+        # so it commutes with the unpad)
+        v_eval = (state.w if isinstance(Xp, FeatureShards)
                   else wspec.unpad_w(state.w))
-        p, d, g = duality.gap_at_w(w_eval, state.alpha, Xp, yp, mk, loss,
-                                   args.lam)
+        p, d, g = duality.gap_at_v(v_eval, state.alpha, Xp, yp, mk, loss,
+                                   args.lam, reg)
     else:
         p, d, g = duality.gap_decomposed(state.alpha, Xp, yp, mk, loss,
-                                         args.lam)
+                                         args.lam, reg)
+    if args.reg != "l2":
+        from repro.core import primal_w
+        w_fin = primal_w(state, cfg)
+        nz = int(jnp.sum(jnp.abs(w_fin) > 0))
+        print(f"reg[{reg.name}]: tau={reg.tau(args.lam):.3g} "
+              f"primal w nonzeros: {nz}/{w_fin.shape[0]}")
     print(f"final: P={float(p):.6f} D={float(d):.6f} gap={float(g):.3e} "
           f"(certificate: primal suboptimality <= gap)")
     topo = comm.Topology.simulated(K, topology=args.topology)
     tr = comm.CommTracer.for_run(K=K, d_local=wspec.d_local,
-                                 compressor=cfg.compressor(),
+                                 compressor=cfg.compressor(M=M),
                                  topo=topo, gather=args.gather,
                                  extra_hops=comm.model_hops(wspec, K,
                                                             args.H))

@@ -1,12 +1,21 @@
 """Re-export shim: update compression moved to `repro.comm.compress`.
 
 The pytree error-feedback API (`EFState`/`ef_init`/`compress`/
-`compressed_bytes`) used by CoCoA-DP (`optim.localdp`) lives there now,
-alongside the per-worker vector compressors (top-k / rand-k / stochastic
-quantization) the CoCoA comm pipeline uses. Import from `repro.comm`
-going forward.
+`compressed_bytes`) lives there now, alongside the per-worker vector
+compressors (top-k / rand-k / stochastic quantization) the CoCoA comm
+pipeline uses. Import from `repro.comm` going forward -- the last direct
+importers (`optim.localdp`, the optimizer tests) have been migrated, so
+importing this module now raises a DeprecationWarning and the shim will be
+removed once external callers have had a release to move.
 """
+import warnings
+
 from repro.comm.compress import (EFState, compress, compressed_bytes,
                                  ef_init)
+
+warnings.warn(
+    "repro.optim.compress is a deprecated re-export shim; import from "
+    "repro.comm.compress (or repro.comm) instead",
+    DeprecationWarning, stacklevel=2)
 
 __all__ = ["EFState", "compress", "compressed_bytes", "ef_init"]

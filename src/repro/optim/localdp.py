@@ -27,7 +27,7 @@ from typing import Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from . import compress as C
+from repro.comm import compress as C
 
 
 @dataclasses.dataclass(frozen=True)

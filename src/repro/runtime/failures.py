@@ -16,6 +16,7 @@ import jax.numpy as jnp
 
 from repro.core import duality
 from repro.core.cocoa import CoCoAState
+from repro.core.regularizers import L2, Regularizer
 
 
 def drop_worker(state: CoCoAState, k: int) -> CoCoAState:
@@ -30,13 +31,17 @@ def drop_worker(state: CoCoAState, k: int) -> CoCoAState:
     return state._replace(alpha=alpha, alpha_bar=bar, ef=ef)
 
 
-def recover_consistent_w(state: CoCoAState, X, mask, lam: float) -> CoCoAState:
-    """Recompute w = w(alpha) after a drop so (w, alpha) are consistent."""
+def recover_consistent_w(state: CoCoAState, X, mask, lam: float,
+                         reg: Regularizer = L2) -> CoCoAState:
+    """Recompute the shared state after a drop so it is consistent with the
+    surviving duals. The state's leaf carries v = A alpha/(tau n) (the
+    primal w is reg.conj_grad of it); under L2 this is exactly the old
+    w(alpha) rebuild."""
     n = duality.effective_n(mask)
-    w = duality.w_of_alpha(X, state.alpha, lam, n)
-    return state._replace(w=w)
+    v = duality.v_of_alpha(X, state.alpha, lam, n, reg)
+    return state._replace(w=v)
 
 
-def fail_and_recover(state: CoCoAState, X, mask, lam: float,
-                     k: int) -> CoCoAState:
-    return recover_consistent_w(drop_worker(state, k), X, mask, lam)
+def fail_and_recover(state: CoCoAState, X, mask, lam: float, k: int,
+                     reg: Regularizer = L2) -> CoCoAState:
+    return recover_consistent_w(drop_worker(state, k), X, mask, lam, reg)

@@ -211,8 +211,14 @@ def test_wire_model_floats_per_message():
 
 def test_optim_compress_shim_still_serves_pytree_api():
     """repro.optim.compress moved to repro.comm.compress; the shim must
-    re-export the same objects (CoCoA-DP depends on them)."""
-    from repro.optim import compress as legacy
+    re-export the same objects, and -- now that its last direct importers
+    (optim.localdp, the optimizer tests) import from repro.comm -- warn
+    anyone still routing through it."""
+    import importlib
+
+    import repro.optim.compress as legacy
+    with pytest.warns(DeprecationWarning, match="repro.comm.compress"):
+        legacy = importlib.reload(legacy)
     assert legacy.compress is compress.compress
     assert legacy.ef_init is compress.ef_init
     assert legacy.EFState is compress.EFState

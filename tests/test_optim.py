@@ -4,8 +4,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.comm import compress as C
 from repro.optim import adamw_init, adamw_update
-from repro.optim import compress as C
 from repro.optim.localdp import LocalDPConfig, init_state, make_round_fn
 
 
