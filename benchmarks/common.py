@@ -1,9 +1,18 @@
-"""Shared helpers for the paper-reproduction benchmarks."""
+"""Shared helpers for the paper-reproduction benchmarks.
+
+Timing goes through `repro.obs.metrics` (`fenced_call` / `fenced_time`
+re-exported here): the clock is read only after `jax.block_until_ready`
+fenced every output, so bench numbers and the trainer's per-round
+`RoundRecord` timings are comparable by construction -- one timing path,
+not two ad-hoc ones.
+"""
 from __future__ import annotations
 
 import json
 import pathlib
 import time
+
+from repro.obs.metrics import fenced_call, fenced_time  # noqa: F401  (re-export)
 
 RESULTS = pathlib.Path(__file__).resolve().parent / "results"
 
@@ -43,9 +52,12 @@ def maybe_plot(name: str, draw):
 
 
 class Timer:
+    """Wall-clock context; the caller fences (see `fenced_call` for the
+    one-shot fn-call form that fences for you)."""
+
     def __enter__(self):
-        self.t0 = time.time()
+        self.t0 = time.perf_counter()
         return self
 
     def __exit__(self, *a):
-        self.s = time.time() - self.t0
+        self.s = time.perf_counter() - self.t0

@@ -27,7 +27,6 @@ kernel solver), merged into BENCH_cocoa.json under "reg_sweep"."""
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
@@ -37,7 +36,7 @@ from repro.core.losses import get_loss
 from repro.core.solvers import local_sdca, local_sdca_sparse
 from repro.kernels.ops import local_sdca_block, sparse_local_sdca_block
 
-from .common import save
+from .common import fenced_call, fenced_time, save
 
 
 def bench_jnp(nk=2048, d=512, H=4096, iters=3):
@@ -50,12 +49,8 @@ def bench_jnp(nk=2048, d=512, H=4096, iters=3):
     loss = get_loss("hinge")
     fn = jax.jit(lambda r: local_sdca(X, y, a, m, w, r, loss, 1e-4,
                                       float(nk), 8.0, H))
-    fn(jax.random.PRNGKey(0)).du.block_until_ready()
-    t0 = time.time()
-    for i in range(iters):
-        fn(jax.random.PRNGKey(i)).du.block_until_ready()
-    us = (time.time() - t0) / iters / H * 1e6
-    return us
+    s = fenced_time(fn, jax.random.PRNGKey(0), iters=iters, warmup=1)
+    return s / H * 1e6
 
 
 def vmem_analysis(nk=16384, d=16384, block_rows=128):
@@ -102,11 +97,8 @@ def sparse_roofline(densities=(0.003, 0.01, 0.05, 0.1), d=4096, nk=1024,
     a0 = jnp.zeros(yp.shape[1])
 
     def timed(fn):
-        fn(jax.random.PRNGKey(0)).du.block_until_ready()
-        t0 = time.time()
-        for i in range(3):
-            fn(jax.random.PRNGKey(i)).du.block_until_ready()
-        return (time.time() - t0) / 3 / H * 1e6
+        return fenced_time(fn, jax.random.PRNGKey(0),
+                           iters=3, warmup=1) / H * 1e6
 
     f_sp = jax.jit(lambda r, s: local_sdca_sparse(
         s, yp[0], a0, mk[0], w, r, loss, 1e-4, float(nk), 4.0, H))
@@ -118,13 +110,12 @@ def sparse_roofline(densities=(0.003, 0.01, 0.05, 0.1), d=4096, nk=1024,
           f"speedup={us_de / us_sp:.1f}x")
 
     # interpret-mode sparse kernel roundtrip (interface under jit)
-    t0 = time.time()
-    res = sparse_local_sdca_block(
+    _, dt = fenced_call(
+        sparse_local_sdca_block,
         jax.tree.map(lambda a: a[:256], shard), yp[0][:256], a0[:256],
         mk[0][:256], w, jax.random.PRNGKey(0), loss, 1e-4, 256.0, 4.0, 256,
         interpret=True)
-    res.du.block_until_ready()
-    print(f"kernel,sparse_pallas_interpret_roundtrip_s,{time.time() - t0:.2f}")
+    print(f"kernel,sparse_pallas_interpret_roundtrip_s,{dt:.2f}")
 
     from repro.kernels.sparse_sdca import vmem_budget as sparse_vmem
     svm = sparse_vmem(nk=16384, d=47236, r_max=128)   # rcv1-scale shard
@@ -292,11 +283,9 @@ def mesh_sweep(mesh_spec="2x2", quick=True, n=512, d=2048, density=0.01):
         return w_err
 
     def timed_solve(cfg, X, mesh=None):
-        t0 = time.time()
-        r = solve(cfg, X, yp, mk, rounds=rounds, gap_every=1, seed=2,
-                  mesh=mesh)
-        jax.block_until_ready(r.state.w)
-        return (cfg, r), time.time() - t0
+        r, dt = fenced_call(solve, cfg, X, yp, mk, rounds=rounds,
+                            gap_every=1, seed=2, mesh=mesh)
+        return (cfg, r), dt
 
     # 1) vmap reference
     cfgv = CoCoAConfig.adding(K, **kw)
@@ -397,6 +386,38 @@ def reg_sweep(reg_spec="elastic:0.5", quick=True, K=4, n=512, d=2048,
     return rows
 
 
+def obs_quick(quick=True, K=4, rounds=None):
+    """Small end-to-end CoCoA+ solve through the obs pipeline -> the
+    wall-clock fields in BENCH_cocoa.json (compile/execute/certify split,
+    round latency percentiles, sustained wire floats/sec). Runs in the
+    default `--quick` CI step, so the trajectory file carries measured
+    time next to gap and floats across PRs -- same fenced timers as the
+    trainer's RoundRecords, so the two are directly comparable."""
+    from repro.core import CoCoAConfig, solve
+    from repro.data import load, partition
+    from repro.obs import Aggregator, EventBus
+
+    from .common import save_updated
+
+    rounds = rounds or (6 if quick else 24)
+    X, y = load("tiny")
+    Xp, yp, mk = partition(X, y, K, seed=0)
+    cfg = CoCoAConfig.adding(K, loss="hinge", lam=1e-4,
+                             H=256 if quick else 1024)
+    bus = EventBus()
+    agg = bus.subscribe(Aggregator())
+    solve(cfg, Xp, yp, mk, rounds=rounds, gap_every=2, seed=2, obs=bus)
+    bus.close()
+    s = agg.summary()
+    save_updated("BENCH_cocoa", {"kernel_quick": s})
+    print(f"cocoa,obs_quick,rounds={s['rounds']},gap={s['final_gap']:.3e},"
+          f"compile_s={s['compile_s']:.2f},"
+          f"round_p50_ms={1e3 * s['round_p50_s']:.2f},"
+          f"round_p99_ms={1e3 * s['round_p99_s']:.2f},"
+          f"wire_floats_per_sec={s['wire_floats_per_sec']:.3g}")
+    return s
+
+
 def run(quick: bool = True):
     us = bench_jnp(H=1024 if quick else 8192)
     print(f"kernel,jnp_sdca_us_per_step,{us:.2f}")
@@ -406,12 +427,11 @@ def run(quick: bool = True):
     nk, d = 256, 256
     X = jnp.asarray(rng.standard_normal((nk, d)).astype(np.float32))
     y = jnp.asarray(np.sign(rng.standard_normal(nk)).astype(np.float32))
-    t0 = time.time()
-    res = local_sdca_block(X, y, jnp.zeros(nk), jnp.ones(nk), jnp.zeros(d),
-                           jax.random.PRNGKey(0), get_loss("hinge"),
-                           1e-4, float(nk), 4.0, nk, interpret=True)
-    res.du.block_until_ready()
-    print(f"kernel,pallas_interpret_roundtrip_s,{time.time() - t0:.2f}")
+    _, dt = fenced_call(local_sdca_block, X, y, jnp.zeros(nk), jnp.ones(nk),
+                        jnp.zeros(d), jax.random.PRNGKey(0),
+                        get_loss("hinge"), 1e-4, float(nk), 4.0, nk,
+                        interpret=True)
+    print(f"kernel,pallas_interpret_roundtrip_s,{dt:.2f}")
     vm = vmem_analysis()
     print(f"kernel,vmem_total_mb,{vm['total_mb']:.2f},fits={vm['fits_16mb']}")
     # fused selective-scan kernel: interpret-mode validation + HBM model
@@ -439,6 +459,7 @@ def run(quick: bool = True):
     save("kernel_bench", dict(jnp_us_per_step=us, vmem=vm, ssm_err=err,
                               ssm_vmem=svm, ssm_hbm_cut=jnp_path / fused,
                               sparse=sparse))
+    obs_quick(quick=quick)
     return vm
 
 

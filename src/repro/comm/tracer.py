@@ -55,6 +55,9 @@ class CommTracer:
     hops: Tuple[Hop, ...]
     rounds: int = 0
     measured: dict = dataclasses.field(default_factory=dict)
+    # the most recent single-round observation per hop (the cumulative sum
+    # lives in `measured`); what the per-round RoundRecord delta reports
+    round_measured: dict = dataclasses.field(default_factory=dict)
 
     @staticmethod
     def for_run(K: int, d_local: int,
@@ -83,8 +86,12 @@ class CommTracer:
         """Record one round's *measured* floats for `hop` (e.g. the
         post-dedup inter_gather volume). Accumulates across rounds; the
         hop's analytic plan becomes an upper bound and every total below
-        uses the measurement instead."""
+        uses the measurement instead. The single-round value is kept too
+        (`round_measured`, surfaced as `measured_floats_round` in
+        `per_hop()`), so per-round measured wire is never lost into the
+        running sum."""
         self.measured[hop] = self.measured.get(hop, 0) + int(floats)
+        self.round_measured[hop] = int(floats)
 
     def _hop_floats(self, h: Hop) -> int:
         if h.name in self.measured:
@@ -138,8 +145,10 @@ class CommTracer:
         """Per-hop per-round breakdown; analytic floats sum to
         per_round()['floats'] (each message is counted in exactly one
         hop). Hops with a measurement additionally report
-        'measured_floats': the cumulative observed volume that replaces
-        the analytic plan in `totals()`."""
+        'measured_floats' (the cumulative observed volume that replaces
+        the analytic plan in `totals()`) and 'measured_floats_round'
+        (the most recent round's observation -- the per-round delta the
+        obs RoundRecord carries)."""
         out = []
         for h in self.hops:
             row = {"hop": h.name, "axis": h.axis, "messages": h.messages,
@@ -147,6 +156,7 @@ class CommTracer:
                    "floats": h.floats, "bytes": 4 * h.floats}
             if h.name in self.measured:
                 row["measured_floats"] = self.measured[h.name]
+                row["measured_floats_round"] = self.round_measured[h.name]
             out.append(row)
         return out
 

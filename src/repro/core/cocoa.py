@@ -52,6 +52,7 @@ from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro import comm
@@ -59,6 +60,8 @@ from repro.comm.placement import WSpec
 from repro.comm.topology import Topology
 from repro.data import sparse as sparse_data
 from repro.data.sparse import FeatureShards, SparseShards
+from repro.obs.events import Aggregator, EventBus
+from repro.obs.metrics import RoundRecord, aot_compile, fenced_call
 
 from . import duality
 from .losses import Loss, get_loss
@@ -190,6 +193,15 @@ def reshard_w_state(state: CoCoAState, old: WSpec, new: WSpec,
                                                 state.ef.dtype))
 
 
+def _scoped(name: str, fn):
+    """Label `fn`'s ops with a jax.named_scope so the region is visible
+    in profiler traces (obs.ProfilerSink); free when not tracing."""
+    def wrapped(*args, **kwargs):
+        with jax.named_scope(name):
+            return fn(*args, **kwargs)
+    return wrapped
+
+
 def _solver_fn(name: str):
     if name == "sdca_kernel":
         from repro.kernels import ops as kernel_ops
@@ -284,20 +296,25 @@ def make_round_vmap(cfg: CoCoAConfig, K: int,
         body = functools.partial(
             _worker_body, loss=loss, lam=cfg.lam, n=n, sigma_p=p.sigma_prime,
             H=cfg.H, solver=solver, reg=reg)
-        if budget is None:
-            res = jax.vmap(lambda Xk, yk, ak, mk, r: body(Xk, yk, ak, mk, state.w, r)
-                           )(X, y, alpha_split(state.alpha, K), mask, rngs)
-        else:
-            res = jax.vmap(lambda Xk, yk, ak, mk, r, b: body(
-                Xk, yk, ak, mk, state.w, r, budget=b)
-            )(X, y, alpha_split(state.alpha, K), mask, rngs, budget)
+        # the named scopes label the solver vs. exchange regions in a
+        # jax.profiler trace (obs.ProfilerSink) -- no-ops otherwise
+        with jax.named_scope("cocoa/local_solve"):
+            if budget is None:
+                res = jax.vmap(lambda Xk, yk, ak, mk, r: body(Xk, yk, ak, mk, state.w, r)
+                               )(X, y, alpha_split(state.alpha, K), mask, rngs)
+            else:
+                res = jax.vmap(lambda Xk, yk, ak, mk, r, b: body(
+                    Xk, yk, ak, mk, state.w, r, budget=b)
+                )(X, y, alpha_split(state.alpha, K), mask, rngs, budget)
         # --- the communication step: damp, compress, reduce, apply ---
-        crngs = jax.vmap(comm.comm_rng)(rngs)
-        stats = {}
-        dw_sum, ef = comm.exchange(topo, res.du, state.ef, crngs, p,
-                                   compressor, gather=cfg.gather, stats=stats)
-        w, alpha = comm.apply_update(state.w, state.alpha, dw_sum,
-                                     res.dalpha, p)
+        with jax.named_scope("cocoa/exchange"):
+            crngs = jax.vmap(comm.comm_rng)(rngs)
+            stats = {}
+            dw_sum, ef = comm.exchange(topo, res.du, state.ef, crngs, p,
+                                       compressor, gather=cfg.gather,
+                                       stats=stats)
+            w, alpha = comm.apply_update(state.w, state.alpha, dw_sum,
+                                         res.dalpha, p)
         return CoCoAState(w, alpha, rng, state.rounds + 1,
                           state.alpha_bar + alpha, ef,
                           stats.get("inter_gather"))
@@ -365,15 +382,19 @@ def make_round_sharded(cfg: CoCoAConfig, mesh) -> Callable[..., CoCoAState]:
         # index runs over the data axes only, so every model shard of a
         # worker draws the identical coordinate sequence
         rngk = jax.random.fold_in(rng, topo.worker_index())
-        res = _worker_body(Xk, yk, ak, mk, w, rngk, loss=loss, lam=cfg.lam,
-                           n=n, sigma_p=p.sigma_prime, H=cfg.H, solver=solver,
-                           sqnorms=sqn_k, model_axis=model_axis, reg=reg)
+        with jax.named_scope("cocoa/local_solve"):
+            res = _worker_body(Xk, yk, ak, mk, w, rngk, loss=loss,
+                               lam=cfg.lam, n=n, sigma_p=p.sigma_prime,
+                               H=cfg.H, solver=solver, sqnorms=sqn_k,
+                               model_axis=model_axis, reg=reg)
         # --- the one communicated w-shard per round per worker ---
-        stats = {}
-        dw_sum, ef_new = comm.exchange(topo, res.du, efk, comm.comm_rng(rngk),
-                                       p, compressor, gather=cfg.gather,
-                                       stats=stats)
-        wire = stats.get("inter_gather")
+        with jax.named_scope("cocoa/exchange"):
+            stats = {}
+            dw_sum, ef_new = comm.exchange(topo, res.du, efk,
+                                           comm.comm_rng(rngk), p,
+                                           compressor, gather=cfg.gather,
+                                           stats=stats)
+            wire = stats.get("inter_gather")
         if wire is not None and sharded_w:
             # each model shard ran its own per-shard gather; the tracer
             # prices hops per model shard (d/M-scaled), so report the
@@ -545,20 +566,32 @@ def make_round_sharded(cfg: CoCoAConfig, mesh) -> Callable[..., CoCoAState]:
 class SolveResult(NamedTuple):
     state: CoCoAState
     history: dict   # lists: round, gap, primal, dual, comm_vectors,
-                    # comm_floats, comm_bytes, comm_psums
+                    # comm_floats, comm_bytes, comm_psums -- a thin view
+                    # over the emitted RoundRecords (obs.Aggregator.history)
 
 
 def solve(cfg: CoCoAConfig, X, y, mask, *, rounds: int, eps_gap: float = 0.0,
           seed: int = 0, gap_every: int = 1, mesh=None, budget_fn=None,
           on_round: Optional[Callable[[int, CoCoAState, float], None]] = None,
-          state: Optional[CoCoAState] = None) -> SolveResult:
+          state: Optional[CoCoAState] = None,
+          obs: Optional[EventBus] = None,
+          throughput=None) -> SolveResult:
     """Run CoCoA+/CoCoA until `rounds` or duality gap <= eps_gap.
 
     `X` is a dense (K, nk, d) array, a data.sparse.SparseShards (either
     backend), or a data.sparse.FeatureShards for the feature-sharded 2-D
     mesh (shard_map backend with cfg.model_axis). `on_round(t, state,
-    gap)` is the checkpoint/telemetry hook. `budget_fn(t) -> (K,) int
-    array` enables deadline-budgeted solving (vmap backend).
+    gap)` is the legacy checkpoint hook; `obs` is its generalization --
+    an `repro.obs.EventBus` that receives one frozen, schema-versioned
+    `RoundRecord` per certified round (gap/primal/dual, the per-hop wire
+    plan, and the compile/execute/certificate wall-clock split measured
+    with `block_until_ready` fencing; the round step is AOT-compiled so
+    compile is priced separately from steady-state execution). The
+    returned history is itself derived from those records. `budget_fn(t)
+    -> (K,) int array` enables deadline-budgeted solving (vmap backend);
+    `throughput` is an optional `runtime.straggler.ThroughputTracker`
+    fed each round with (steps_done, fenced round seconds) -- its EMA
+    rates and the budgets land in the records.
 
     The state's w width follows the placement: WSpec.d_padded (= M *
     ceil(d/M)) under feature sharding, d otherwise; dense X is zero-padded
@@ -612,11 +645,11 @@ def solve(cfg: CoCoAConfig, X, y, mask, *, rounds: int, eps_gap: float = 0.0,
         # with lossy messages the state's v drifts from v(alpha); certify
         # the primal point w = grad g*(tau v) the algorithm actually
         # carries (still >= D by weak duality)
-        gap_fn = jax.jit(functools.partial(
-            duality.gap_at_v, loss=loss, lam=cfg.lam, reg=reg))
+        gap_fn = jax.jit(_scoped("cocoa/certificate", functools.partial(
+            duality.gap_at_v, loss=loss, lam=cfg.lam, reg=reg)))
     else:
-        gap_fn = jax.jit(functools.partial(
-            duality.gap_decomposed, loss=loss, lam=cfg.lam, reg=reg))
+        gap_fn = jax.jit(_scoped("cocoa/certificate", functools.partial(
+            duality.gap_decomposed, loss=loss, lam=cfg.lam, reg=reg)))
 
     # per-round communication accounting: the topology's reduce plan priced
     # by the compressor's wire model (per hop under hier/a2a, the sparse
@@ -631,39 +664,95 @@ def solve(cfg: CoCoAConfig, X, y, mask, *, rounds: int, eps_gap: float = 0.0,
                                      extra_hops=comm.model_hops(wspec, K,
                                                                 cfg.H))
 
-    hist = {"round": [], "gap": [], "primal": [], "dual": [],
-            "comm_vectors": [], "comm_floats": [], "comm_bytes": [],
-            "comm_psums": []}
+    # --- the instrumented round loop -----------------------------------
+    # `agg` collects the emitted records; the returned history is its
+    # view, so history and any external bus sink describe the same bytes.
+    agg = Aggregator()
+    if budget_fn is not None and cfg.backend != "shard_map":
+        extra_args = lambda t: (budget_fn(t),)
+    else:
+        extra_args = lambda t: ()
+    # AOT-split trace+compile out of the per-round fenced timings (falls
+    # back to the jitted callable -- compile then lands in round 1's
+    # execute_s, still a correct total)
+    run_fn, pending_compile = aot_compile(round_fn, state, X, y, mask,
+                                          *extra_args(0))
+    gap_run = None
+    base_round = int(state.rounds)
     gap = float("inf")
+    exec_acc = 0.0
+    covered = 0
+    prev_floats = 0
     for t in range(rounds):
-        if cfg.backend == "shard_map":
-            state = round_fn(state, X, y, mask)
-        elif budget_fn is not None:
-            state = round_fn(state, X, y, mask, budget_fn(t))
-        else:
-            state = round_fn(state, X, y, mask)
+        with jax.profiler.StepTraceAnnotation("cocoa_round", step_num=t):
+            try:
+                state, dt = fenced_call(run_fn, state, X, y, mask,
+                                        *extra_args(t))
+            except Exception:
+                if run_fn is round_fn:
+                    raise
+                # the AOT executable pins input shardings; a carried
+                # state placed elsewhere (host rebuild after failure
+                # recovery / resharding) is rejected where jit would
+                # silently re-place it -- fall back to the jitted callable
+                run_fn = round_fn
+                state, dt = fenced_call(run_fn, state, X, y, mask,
+                                        *extra_args(t))
+        exec_acc += dt
+        covered += 1
         tracer.tick()
         if state.wire is not None:
             # hier compressed gather: replace the inter hop's analytic
             # upper bound with the measured post-dedup volume
             tracer.observe("inter_gather", state.wire)
+        budgets = (np.asarray(budget_fn(t))
+                   if budget_fn is not None else None)
+        if throughput is not None:
+            # bulk-synchronous round: every worker shares the fenced
+            # round wall-clock; steps actually run are the budgets (or H)
+            throughput.observe_round(
+                budgets if budgets is not None else float(cfg.H), dt)
         if (t + 1) % gap_every == 0 or t == rounds - 1:
             alpha_eval = state.alpha
             if cfg.average_iterates:
                 alpha_eval = state.alpha_bar / jnp.maximum(state.rounds, 1)
-            if compressed:
-                pval, dval, g = gap_fn(state.w, alpha_eval, X, y, mask)
-            else:
-                pval, dval, g = gap_fn(alpha_eval, X, y, mask)
+            gargs = ((state.w, alpha_eval, X, y, mask) if compressed
+                     else (alpha_eval, X, y, mask))
+            if gap_run is None:
+                gap_run, dtc = aot_compile(gap_fn, *gargs)
+                pending_compile += dtc
+            with jax.profiler.TraceAnnotation("cocoa_certificate"):
+                try:
+                    (pval, dval, g), cert_s = fenced_call(gap_run, *gargs)
+                except Exception:
+                    if gap_run is gap_fn:
+                        raise
+                    gap_run = gap_fn        # same sharding-pinning fallback
+                    (pval, dval, g), cert_s = fenced_call(gap_run, *gargs)
             gap = float(g)
-            hist["round"].append(t + 1)
-            hist["gap"].append(gap)
-            hist["primal"].append(float(pval))
-            hist["dual"].append(float(dval))
-            for key, val in tracer.totals().items():
-                hist[key].append(val)
+            totals = tracer.totals()
+            rec = RoundRecord(
+                round=t + 1,
+                round_global=base_round + t + 1,
+                rounds_in_record=covered,
+                gap=gap, primal=float(pval), dual=float(dval),
+                compile_s=pending_compile, execute_s=exec_acc,
+                certificate_s=cert_s,
+                wire_floats=totals["comm_floats"] - prev_floats,
+                wire_bytes=4 * (totals["comm_floats"] - prev_floats),
+                hops=tuple(tracer.per_hop()),
+                comm=totals,
+                budgets=(tuple(int(b) for b in budgets)
+                         if budgets is not None else None),
+                throughput=(tuple(float(r) for r in throughput.rate)
+                            if throughput is not None else None))
+            prev_floats = totals["comm_floats"]
+            pending_compile, exec_acc, covered = 0.0, 0.0, 0
+            agg.emit(rec)
+            if obs is not None:
+                obs.emit(rec)
             if on_round is not None:
                 on_round(t + 1, state, gap)
             if gap <= eps_gap:
                 break
-    return SolveResult(state, hist)
+    return SolveResult(state, agg.history())

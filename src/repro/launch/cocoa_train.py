@@ -53,13 +53,13 @@ import numpy as np
 
 from repro import comm
 from repro.checkpoint import CheckpointManager
-from repro.core import CoCoAConfig, duality, solve
+from repro.core import CoCoAConfig, solve
 from repro.core.cocoa import CoCoAState, init_state, reshard_w_state
-from repro.core.losses import get_loss
 from repro.core.regularizers import get_regularizer
 from repro.data import DATASETS, load, partition
 from repro.data.sparse import (FeatureShards, SparseShards, partition_sparse,
                                shard_features)
+from repro.obs import Aggregator, Dashboard, EventBus, JsonlSink, ProfilerSink
 from repro.runtime import elastic, failures, straggler
 
 
@@ -114,6 +114,18 @@ def main():
                     help="worker index running at 10%% speed (deadline budget)")
     ap.add_argument("--elastic-to", default="",
                     help="'K@round': re-partition to K workers at round")
+    ap.add_argument("--metrics-out", default="",
+                    help="write one schema-versioned JSONL RoundRecord per "
+                         "certified round (validate with "
+                         "python -m repro.obs.validate)")
+    ap.add_argument("--dashboard", action="store_true",
+                    help="live terminal dashboard: gap trajectory, per-hop "
+                         "wire rates, per-worker throughput (plain per-round "
+                         "lines when stdout is not a tty)")
+    ap.add_argument("--profile", default="",
+                    help="jax.profiler trace directory; the trace carries "
+                         "cocoa/local_solve, cocoa/exchange and "
+                         "cocoa/certificate named-scope regions per round")
     args = ap.parse_args()
 
     # validate the comm flags before the (possibly minutes-long) dataset
@@ -230,19 +242,46 @@ def main():
         start = man["step"]
         print(f"resumed from round {start}")
 
-    budget_fn = None
-    if args.simulate_straggler >= 0:
-        rates = np.full(K, 1e4)
-        rates[args.simulate_straggler] = 1e3
-        budget_fn = straggler.budget_fn_from_rates(
-            rates, deadline_s=args.H / 1e4, H_max=args.H)
-        print(f"straggler budgets: {np.asarray(budget_fn(0))}")
+    # observability: one bus; solve emits a RoundRecord per certified
+    # round and every sink below sees the same frozen record. The
+    # profiler sink is built first so its trace brackets compile.
+    bus = EventBus()
+    if args.profile:
+        bus.subscribe(ProfilerSink(args.profile))
+    agg = bus.subscribe(Aggregator())
+    if args.metrics_out:
+        bus.subscribe(JsonlSink(args.metrics_out))
+    if args.dashboard:
+        bus.subscribe(Dashboard(total_rounds=args.rounds))
+
+    def make_tracker(K):
+        # measured per-round wall-clock feeds the EMA; a simulated
+        # straggler scales one worker's clock instead of inventing rates
+        slow = np.ones(K)
+        if 0 <= args.simulate_straggler < K:
+            slow[args.simulate_straggler] = 10.0
+        tr = straggler.ThroughputTracker(K, slowdown=slow)
+        if 0 <= args.simulate_straggler < K:
+            tr.rate[args.simulate_straggler] = 1e3   # pre-measurement seed
+        return tr
+
+    tracker = make_tracker(K)
+
+    def make_budget_fn():
+        if args.simulate_straggler < 0:
+            return None
+        return straggler.budget_fn_from_tracker(
+            tracker, deadline_s=args.H / 1e4, H_max=args.H)
+
+    budget_fn = make_budget_fn()
+    if budget_fn is not None:
+        print(f"straggler budgets: {np.asarray(budget_fn(0))} "
+              f"(re-derived per round from measured throughput)")
 
     el_K, el_round = 0, -1
     if args.elastic_to:
         el_K, el_round = (int(v) for v in args.elastic_to.split("@"))
 
-    loss = get_loss(args.loss)
     reg = get_regularizer(args.reg)
     done = start
     while done < args.rounds:
@@ -251,18 +290,23 @@ def main():
                     args.simulate_failure if args.simulate_failure > done else args.rounds,
                     el_round if el_round > done else args.rounds]
                    if r > done)
+        rounds_before = int(state.rounds)
         r = solve(cfg, Xp, yp, mk, rounds=stop - done, eps_gap=args.eps,
                   gap_every=2, state=state, mesh=mesh, budget_fn=budget_fn,
+                  obs=bus, throughput=tracker,
                   on_round=(lambda t, st, gap:
                             mgr.save(done + t, st._asdict(),
                                      {"gap": gap})
                             if mgr and (done + t) % args.ckpt_every == 0
                             else None))
         state = r.state
-        done += r.history["round"][-1] if r.history["round"] else stop - done
-        gap = r.history["gap"][-1] if r.history["gap"] else float("inf")
-        fl = (r.history["comm_floats"][-1] // r.history["round"][-1]
-              if r.history["round"] else 0)
+        # advance by the rounds the solver actually ran (its round counter
+        # delta) -- robust to eps-early exit at any gap_every phase, with
+        # no history fallback to go stale
+        done += int(state.rounds) - rounds_before
+        gap = agg.final_gap
+        last = agg.last
+        fl = last.wire_floats // last.rounds_in_record if last else 0
         print(f"round {done}: gap={gap:.3e} comm={fl} floats/round")
         if gap <= args.eps:
             break
@@ -303,6 +347,8 @@ def main():
                 Xp, yp = new["X"], new["y"]
             K = el_K
             cfg = make_cfg(K)
+            tracker = make_tracker(K)          # per-worker EMA is K-shaped
+            budget_fn = make_budget_fn()
             d_dim, nk_dim = dims(Xp)
             if mesh is not None:
                 mesh = (jax.make_mesh((K, M), ("data", "model")) if M > 1
@@ -319,27 +365,17 @@ def main():
 
     if mgr:
         mgr.wait()
-    if args.compress != "none":
-        # lossy wire: certify the primal point w = grad g*(tau v) of the
-        # v the algorithm actually carries. FeatureShards evaluate against
-        # the padded placed vector; the dense and replicated-sparse data
-        # here are unpadded, so unplace first (conj_grad is elementwise,
-        # so it commutes with the unpad)
-        v_eval = (state.w if isinstance(Xp, FeatureShards)
-                  else wspec.unpad_w(state.w))
-        p, d, g = duality.gap_at_v(v_eval, state.alpha, Xp, yp, mk, loss,
-                                   args.lam, reg)
-    else:
-        p, d, g = duality.gap_decomposed(state.alpha, Xp, yp, mk, loss,
-                                         args.lam, reg)
     if args.reg != "l2":
         from repro.core import primal_w
         w_fin = primal_w(state, cfg)
         nz = int(jnp.sum(jnp.abs(w_fin) > 0))
         print(f"reg[{reg.name}]: tau={reg.tau(args.lam):.3g} "
               f"primal w nonzeros: {nz}/{w_fin.shape[0]}")
-    print(f"final: P={float(p):.6f} D={float(d):.6f} gap={float(g):.3e} "
-          f"(certificate: primal suboptimality <= gap)")
+    # one source of truth for the certificate: the last RoundRecord solve
+    # emitted (the solver certifies its final round unconditionally, on
+    # exactly the primal point the run carries -- no recomputation here
+    # that could drift from what the records/JSONL say)
+    print(agg.format_summary())
     topo = comm.Topology.simulated(K, topology=args.topology)
     tr = comm.CommTracer.for_run(K=K, d_local=wspec.d_local,
                                  compressor=cfg.compressor(M=M),
@@ -362,6 +398,12 @@ def main():
         print(f"  per-axis floats/round: data={ax.get('data', 0)} "
               f"model={ax.get('model', 0)}; w memory/device: "
               f"{wspec.d_local} floats (replicated would be {d_dim})")
+    bus.close()                  # flush JSONL, stop the profiler trace
+    if args.metrics_out:
+        print(f"metrics: {agg.rounds} rounds -> {args.metrics_out} "
+              f"(validate: python -m repro.obs.validate {args.metrics_out})")
+    if args.profile:
+        print(f"profile: trace written to {args.profile}")
 
 
 if __name__ == "__main__":

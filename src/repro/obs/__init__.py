@@ -1,0 +1,30 @@
+"""Observability: structured round telemetry, timing traces, dashboards.
+
+Every claim this reproduction makes is a statement about gap vs. rounds
+vs. communication vs. *time*; this package owns the fourth axis and the
+plumbing that carries all four out of a run:
+
+    metrics   -- Counter/Gauge/Histogram primitives, fenced wall-clock
+                 timing (`fenced_call` / `aot_compile` split compile from
+                 execute), and the frozen schema-versioned `RoundRecord`
+                 `core.cocoa.solve` emits per certified round
+    events    -- the `EventBus` that generalizes `solve`'s single
+                 `on_round` callback into composable sinks: `JsonlSink`
+                 (one record per line), `Aggregator` (p50/p99 latency,
+                 floats/sec, rounds-to-gap, the history view), and
+                 `ProfilerSink` (jax.profiler trace with `cocoa/*`
+                 named-scope regions)
+    dashboard -- zero-dependency live terminal dashboard
+                 (`cocoa_train --dashboard`): gap trajectory, per-hop
+                 wire rates, per-worker throughput, redrawn in place
+    validate  -- `python -m repro.obs.validate run.jsonl` schema gate
+                 (the CI smoke step for `cocoa_train --metrics-out`)
+
+`solve`'s history is a thin view over this bus (`Aggregator.history()`),
+and the benchmarks time through the same fenced helpers, so trainer and
+bench numbers are comparable by construction.
+"""
+from .dashboard import Dashboard, sparkline
+from .events import Aggregator, EventBus, JsonlSink, ProfilerSink
+from .metrics import (SCHEMA_VERSION, Counter, Gauge, Histogram, RoundRecord,
+                      aot_compile, fenced_call, fenced_time, validate_record)

@@ -1,0 +1,63 @@
+"""JSONL schema validator CLI: `python -m repro.obs.validate run.jsonl`.
+
+Reads the metrics file `cocoa_train --metrics-out` (or any `JsonlSink`)
+wrote, validates every line against the `RoundRecord` schema, and exits
+nonzero on the first violation -- the CI gate that keeps the emitted
+telemetry and the schema from drifting apart. `--require-timing` also
+insists every record carries nonzero fenced execute time (the acceptance
+bar for a real run; omit it for synthetic fixtures).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from .metrics import validate_record
+
+
+def validate_file(path: str, require_timing: bool = False) -> int:
+    """Validate every JSONL record in `path`; returns the record count,
+    raises ValueError (with the line number) on the first bad row."""
+    count = 0
+    with open(path) as fh:
+        for lineno, line in enumerate(fh, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = validate_record(json.loads(line))
+                if require_timing and rec["execute_s"] <= 0.0:
+                    raise ValueError("execute_s must be > 0 for a real run")
+                # round_global is monotone across solve segments (elastic /
+                # failure restarts reset the in-call round, not this one)
+                if rec["round_global"] <= count and count > 0:
+                    raise ValueError(
+                        f"round_global must be strictly increasing; "
+                        f"{rec['round_global']} after {count}")
+                count = rec["round_global"]
+            except (ValueError, json.JSONDecodeError) as e:
+                raise ValueError(f"{path}:{lineno}: {e}") from e
+    if count == 0:
+        raise ValueError(f"{path}: no records")
+    return count
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("paths", nargs="+", help="JSONL metrics files")
+    ap.add_argument("--require-timing", action="store_true",
+                    help="fail records with execute_s == 0")
+    args = ap.parse_args(argv)
+    for path in args.paths:
+        try:
+            n = validate_file(path, require_timing=args.require_timing)
+        except ValueError as e:
+            print(f"INVALID {e}", file=sys.stderr)
+            return 1
+        print(f"ok {path}: rounds covered through {n}, schema valid")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -7,6 +7,14 @@ blocking on the slowest machine:
 
     budget_k = clip(throughput_k * round_deadline, H_min, H)
 
+The tracker is fed from *measured* per-round timings: `core.cocoa.solve`
+calls `observe_round(steps_done, round_execute_s)` with the fenced
+wall-clock of every round when a tracker is attached (the obs layer's
+`RoundRecord` then carries both the budgets and the EMA rates). A
+`slowdown` vector lets a simulated straggler run on real measurements
+with one worker's clock scaled (the `--simulate-straggler` trainer flag)
+-- the budgets still derive from observed time, not synthetic rates.
+
 Convergence degrades gracefully per Theorems 8/10 (rate scales with
 1/(1-Theta)) rather than wall-clock stalling -- tested in
 tests/test_runtime.py by giving one worker 10x fewer steps.
@@ -20,13 +28,33 @@ import jax.numpy as jnp
 class ThroughputTracker:
     """EWMA steps/sec per worker, fed by round telemetry."""
 
-    def __init__(self, K: int, init_rate: float = 1e4, beta: float = 0.8):
+    def __init__(self, K: int, init_rate: float = 1e4, beta: float = 0.8,
+                 slowdown=None):
         self.rate = np.full(K, init_rate)
         self.beta = beta
+        # per-worker wall-clock multiplier for simulated heterogeneity
+        # (identity by default: measurements are taken at face value)
+        self.slowdown = (np.ones(K) if slowdown is None
+                         else np.asarray(slowdown, float))
+        if self.slowdown.shape != (K,):
+            raise ValueError(f"slowdown wants shape ({K},), got "
+                             f"{self.slowdown.shape}")
 
     def update(self, steps_done: np.ndarray, elapsed_s: np.ndarray):
         inst = steps_done / np.maximum(elapsed_s, 1e-9)
         self.rate = self.beta * self.rate + (1 - self.beta) * inst
+
+    def observe_round(self, steps_done, round_s: float) -> None:
+        """Feed one measured round: `steps_done` is the per-worker inner
+        steps actually run ((K,) array or a scalar broadcast to all
+        workers) and `round_s` the fenced wall-clock of the round. In a
+        bulk-synchronous round every worker shares the round's wall
+        clock; the `slowdown` vector then scales each worker's effective
+        elapsed time (1x everywhere outside simulations)."""
+        steps = np.broadcast_to(np.asarray(steps_done, float),
+                                self.rate.shape)
+        elapsed = np.maximum(float(round_s), 1e-9) * self.slowdown
+        self.update(steps, elapsed)
 
     def budgets(self, deadline_s: float, H_max: int,
                 H_min: int = 16) -> jnp.ndarray:
@@ -39,3 +67,11 @@ def budget_fn_from_rates(rates, deadline_s: float, H_max: int, H_min: int = 16):
     b = np.clip((np.asarray(rates) * deadline_s).astype(np.int64), H_min, H_max)
     b = jnp.asarray(b, jnp.int32)
     return lambda t: b
+
+
+def budget_fn_from_tracker(tracker: ThroughputTracker, deadline_s: float,
+                           H_max: int, H_min: int = 16):
+    """Deadline-budget function that re-reads the tracker every round, so
+    budgets follow the measured EMA as `solve` feeds `observe_round` --
+    the closed loop the deadline trainer runs on."""
+    return lambda t: tracker.budgets(deadline_s, H_max, H_min)

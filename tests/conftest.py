@@ -24,6 +24,13 @@ except ImportError:
     pass
 
 
+def pytest_configure(config):
+    # registered here (no pytest.ini/pyproject [tool.pytest] section) so
+    # `-W error` runs don't trip PytestUnknownMarkWarning
+    config.addinivalue_line(
+        "markers", "slow: long-running test (multi-device dry runs)")
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)

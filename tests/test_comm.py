@@ -216,8 +216,10 @@ def test_optim_compress_shim_still_serves_pytree_api():
     anyone still routing through it."""
     import importlib
 
-    import repro.optim.compress as legacy
     with pytest.warns(DeprecationWarning, match="repro.comm.compress"):
+        # import inside the catcher: under `-W error::DeprecationWarning`
+        # a bare first import would raise before the reload could warn
+        import repro.optim.compress as legacy
         legacy = importlib.reload(legacy)
     assert legacy.compress is compress.compress
     assert legacy.ef_init is compress.ef_init

@@ -146,6 +146,53 @@ def test_throughput_tracker_updates():
     assert b[3] < b[0]
 
 
+def test_throughput_tracker_from_measured_rounds():
+    """`observe_round` feeds the EMA from real fenced wall-clock: every
+    worker shares the bulk-synchronous round time, and the `slowdown`
+    vector scales one worker's effective clock (the trainer's
+    --simulate-straggler on measured -- not synthetic -- timings)."""
+    tr = straggler.ThroughputTracker(4, init_rate=1e4, beta=0.5,
+                                     slowdown=[1.0, 1.0, 10.0, 1.0])
+    for _ in range(12):
+        tr.observe_round(steps_done=256, round_s=0.01)   # 25.6k steps/s
+    # converged near measurement; the slowed worker lands at a tenth
+    assert tr.rate[0] == pytest.approx(256 / 0.01, rel=0.05)
+    assert tr.rate[2] == pytest.approx(256 / 0.01 / 10, rel=0.05)
+    b = np.asarray(tr.budgets(deadline_s=0.01, H_max=1000, H_min=16))
+    assert b[2] < b[0]
+    # per-worker steps_done broadcasts too (deadline solver budgets)
+    tr.observe_round(steps_done=np.array([256, 256, 32, 256]), round_s=0.01)
+    assert tr.rate.shape == (4,)
+    with pytest.raises(ValueError, match="slowdown"):
+        straggler.ThroughputTracker(4, slowdown=[1.0, 2.0])
+
+
+def test_tracker_closed_loop_through_solve():
+    """End to end: solve feeds the tracker measured per-round timings and
+    `budget_fn_from_tracker` re-derives deadline budgets from the moving
+    EMA -- the closed loop the deadline trainer runs on. The budgets and
+    EMA rates also land in the emitted RoundRecords."""
+    from repro.obs import Aggregator, EventBus
+
+    K = 4
+    X, y = make_classification(512, 32, seed=0)
+    Xp, yp, mk = partition(X, y, K, seed=0)
+    cfg = CoCoAConfig.adding(K, loss="hinge", lam=1e-3, H=128,
+                             solver="sdca_deadline")
+    tr = straggler.ThroughputTracker(K, init_rate=1e4)
+    budget = straggler.budget_fn_from_tracker(tr, deadline_s=1e-2,
+                                              H_max=128, H_min=16)
+    bus = EventBus()
+    agg = bus.subscribe(Aggregator())
+    r = solve(cfg, Xp, yp, mk, rounds=6, gap_every=3, budget_fn=budget,
+              obs=bus, throughput=tr)
+    assert not np.allclose(tr.rate, 1e4)       # the EMA moved off its seed
+    rec = agg.last
+    assert rec.budgets is not None and len(rec.budgets) == K
+    assert rec.throughput == tuple(float(v) for v in tr.rate)
+    assert r.history["gap"][-1] < r.history["gap"][0] * 1.05
+
+
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:                     # vendored deterministic fallback
