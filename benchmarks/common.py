@@ -15,12 +15,30 @@ import time
 from repro.obs.metrics import fenced_call, fenced_time  # noqa: F401  (re-export)
 
 RESULTS = pathlib.Path(__file__).resolve().parent / "results"
+HISTORY = RESULTS / "history"
+
+
+def append_history(name: str, payload) -> pathlib.Path:
+    """Append one timestamped run record to `results/history/<name>.jsonl`.
+
+    This is the bench trajectory the regression gate reads
+    (`python -m repro.obs.regress`): every `save()` snapshot also lands
+    here, so `results/<name>.json` stays the human-readable latest while
+    the history file is the append-only record of every run."""
+    HISTORY.mkdir(parents=True, exist_ok=True)
+    p = HISTORY / f"{name}.jsonl"
+    rec = {"ts": time.strftime("%Y-%m-%dT%H:%M:%S"), "name": name,
+           "payload": payload}
+    with p.open("a") as fh:
+        fh.write(json.dumps(rec) + "\n")
+    return p
 
 
 def save(name: str, payload) -> pathlib.Path:
     RESULTS.mkdir(parents=True, exist_ok=True)
     p = RESULTS / f"{name}.json"
     p.write_text(json.dumps(payload, indent=1))
+    append_history(name, payload)
     return p
 
 

@@ -125,6 +125,99 @@ def sparse_roofline(densities=(0.003, 0.01, 0.05, 0.1), d=4096, nk=1024,
                 dense_us_per_step=us_de, vmem=svm)
 
 
+def autotune_sweep(quick=True, nk=512, d=512, density=0.05):
+    """`--autotune`: sweep the sparse SDCA kernel's launch knobs, persist
+    the winner, and profile it.
+
+    Sweeps block_rows (ELL block shape) x slot_unroll (slot-walk unroll
+    depth) -- both visit-order-preserving, so every config returns
+    bit-for-bit identical results and only time differs. The fenced-
+    wall-clock winner is recorded into the autotune cache that
+    `kernels.ops` dispatch consults (per (kernel, backend, d, r_max,
+    density)), then the winning config and the jnp sparse solver are run
+    through `repro.obs.prof.profile_fn`, pairing measured wall-clock
+    with the analytic HLO cost (flops / HBM bytes / roofline fractions).
+    The whole run lands in `results/autotune.json` *and* appends to
+    `results/history/autotune.jsonl` -- the trajectory the
+    `repro.obs.regress` gate compares against its pinned baseline."""
+    import functools
+
+    from repro.data import sparse as sp
+    from repro.kernels.autotune import get_cache
+    from repro.kernels.sparse_sdca import sparse_local_sdca
+    from repro.obs.prof import default_hardware, profile_fn
+
+    from .common import save
+
+    loss = get_loss("hinge")
+    csr, y = sp.make_sparse_classification(nk, d, density=density, seed=0)
+    sh, yp, mk = sp.partition_sparse(csr, y, 1, seed=0)
+    shard = jax.tree.map(lambda a: a[0], sh)
+    cols, vals = shard.cols, shard.vals
+    r_max = int(cols.shape[1])
+    a0, m, w = jnp.zeros(nk), mk[0], jnp.zeros(d)
+    scale = jnp.float32(1.0 / (1e-3 * nk))
+    backend = jax.default_backend()
+    interpret = backend != "tpu"
+
+    brs = [b for b in ((64, 128) if quick else (32, 64, 128, 256))
+           if nk % b == 0]
+    uns = (1, 2) if quick else (1, 2, 4)
+    iters = 2 if quick else 5
+    trials = []
+    for br in brs:
+        for un in uns:
+            fn = jax.jit(functools.partial(
+                sparse_local_sdca, loss=loss, n_passes=1, block_rows=br,
+                slot_unroll=un, interpret=interpret))
+            s = fenced_time(fn, cols, vals, yp[0], a0, m, w, scale,
+                            iters=iters, warmup=1)
+            trials.append(dict(block_rows=br, slot_unroll=un,
+                               wall_s=float(s)))
+            print(f"kernel,autotune,block_rows={br},slot_unroll={un},"
+                  f"wall_s={s:.4f}")
+    best = min(trials, key=lambda t: t["wall_s"])
+    cache = get_cache()
+    cache.record("sparse_sdca", backend, d=d, r_max=r_max, density=density,
+                 config={k: best[k] for k in ("block_rows", "slot_unroll")},
+                 wall_s=best["wall_s"])
+    print(f"kernel,autotune,winner=block_rows={best['block_rows']}/"
+          f"slot_unroll={best['slot_unroll']},cache={cache.path}")
+
+    # profile the winner + the jnp sparse solver: measured wall next to
+    # the analytic HLO cost on the active HardwareSpec
+    hw = default_hardware()
+    win = functools.partial(sparse_local_sdca, loss=loss, n_passes=1,
+                            block_rows=best["block_rows"],
+                            slot_unroll=best["slot_unroll"],
+                            interpret=interpret)
+    p_kern = profile_fn(win, cols, vals, yp[0], a0, m, w, scale,
+                        name="sparse_sdca", hw=hw, iters=iters,
+                        shape=dict(nk=nk, d=d, r_max=r_max, density=density,
+                                   **{k: best[k] for k in
+                                      ("block_rows", "slot_unroll")}))
+    H = nk
+    p_jnp = profile_fn(
+        lambda r: local_sdca_sparse(shard, yp[0], a0, m, w, r, loss, 1e-3,
+                                    float(nk), 1.0, H),
+        jax.random.PRNGKey(0), name="sdca_sparse_jnp", hw=hw, iters=iters,
+        shape=dict(nk=nk, d=d, r_max=r_max, density=density, H=H))
+    for p in (p_kern, p_jnp):
+        print(f"kernel,profile,{p.name},wall_s={p.wall_s:.4f},"
+              f"flops={p.flops:.3g},hbm_bytes={p.hbm_bytes:.3g},"
+              f"dominant={p.dominant},model_vs_measured="
+              f"{p.model_vs_measured:.2f}")
+
+    payload = dict(backend=backend, hw=hw.name, nk=nk, d=d, density=density,
+                   r_max=r_max, trials=trials, winner=best,
+                   cache_path=str(cache.path),
+                   profiles=[p_kern.to_dict(), p_jnp.to_dict()],
+                   metrics={"sparse_sdca_wall_s": p_kern.wall_s,
+                            "sdca_sparse_jnp_wall_s": p_jnp.wall_s})
+    save("autotune", payload)      # snapshot + history/autotune.jsonl
+    return payload
+
+
 def comm_sweep(quick=True, K=4, n=512, d=2048, density=0.01,
                topology="flat"):
     """Comm-volume vs gap-per-round: the repro.comm compressors at equal
@@ -485,8 +578,15 @@ def main():
                     help="run the generalized-objective sweep for this "
                          "regularizer (elastic:<eta> | l1s:<eps>) vs the "
                          "L2 baseline; merges into BENCH_cocoa.json")
+    ap.add_argument("--autotune", action="store_true",
+                    help="sweep the sparse kernel launch config, persist "
+                         "the winner to the autotune cache, and append a "
+                         "profiled run record to results/history/ for the "
+                         "repro.obs.regress gate")
     args = ap.parse_args()
-    if args.reg:
+    if args.autotune:
+        autotune_sweep(quick=not args.full)
+    elif args.reg:
         reg_sweep(reg_spec=args.reg, quick=not args.full)
     elif args.mesh:
         mesh_sweep(mesh_spec=args.mesh, quick=not args.full)

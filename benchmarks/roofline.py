@@ -1,150 +1,165 @@
-"""Roofline analysis over the dry-run artifacts (deliverable g).
+"""Roofline report over `repro.obs.prof` records (CoCoA solver path).
 
-Reads benchmarks/results/dryrun/*.json (written by repro.launch.dryrun),
-computes the three per-device roofline terms against TPU v5e constants,
-identifies the dominant bottleneck, and emits the EXPERIMENTS.md tables.
+The seed-era version of this file read token-LM dry-run artifacts against
+hard-coded TPU v5e constants; the solver reproduction's compute story now
+flows through `KernelProfile` records instead -- `kernel_bench --autotune`
+profiles the sparse SDCA kernel and the jnp solver, `cocoa_train
+--profile` emits one per certified round -- so this tool renders those:
+the three analytic time terms, the dominant one, achieved FLOP/s and
+HBM-BW fractions, and `model_vs_measured` (analytic bound / measured
+wall; ~1 = the paper's cost model prices the computation honestly).
 
-  compute    = HLO_dot_flops / PEAK_FLOPS          (197 TFLOP/s bf16 / chip)
-  memory     = HLO_hbm_bytes / HBM_BW              (819 GB/s / chip)
-  collective = wire_bytes    / ICI_BW              (50 GB/s / link)
+Peaks are a pluggable `repro.obs.prof.HardwareSpec` (`--hw cpu_host`
+default, so the quick CI path lands at plausible sub-1 fractions;
+`--hw tpu_v5e` restates the same analytic counts against TPU peaks).
 
-MODEL_FLOPS (useful work): 6*N*D train / 2*N*D prefill / 2*N*B decode, with
-N = active params (MoE: top-k experts' worth). The ratio
-MODEL_FLOPS / HLO_FLOPs exposes remat/dispatch overheads.
-
-Usage: PYTHONPATH=src python -m benchmarks.roofline [--dir ...] [--md out.md]
+Usage:
+    PYTHONPATH=src python -m benchmarks.roofline
+    PYTHONPATH=src python -m benchmarks.roofline --hw tpu_v5e run.prof.jsonl
+Default inputs: results/autotune.json (the sweep's profiles) plus any
+results/*.prof.jsonl round-profile streams.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import pathlib
-from typing import Optional
+from typing import List
 
-PEAK_FLOPS = 197e12          # bf16 / chip
-HBM_BW = 819e9               # bytes/s / chip
-ICI_BW = 50e9                # bytes/s / link
+from repro.obs.prof import HARDWARE, HardwareSpec, validate_profile
 
 HERE = pathlib.Path(__file__).resolve().parent
-DEFAULT_DIR = HERE / "results" / "dryrun"
-
-_PCOUNT_CACHE = {}
+RESULTS = HERE / "results"
 
 
-def _model_flops(rec) -> Optional[float]:
-    """Analytic useful FLOPs per device for this cell."""
-    arch, shape = rec["arch"], rec.get("shape", "")
-    if arch == "paper-svm":
-        return None
-    from repro.configs import get_config
-    from repro.launch.specs import SHAPES
-    from repro.models.model import count_params
-    if arch not in _PCOUNT_CACHE:
-        cfg = get_config(arch)
-        _PCOUNT_CACHE[arch] = (count_params(cfg),
-                               count_params(cfg, active_only=True))
-    total, active = _PCOUNT_CACHE[arch]
-    info = SHAPES[shape]
-    B, S = info["batch"], info["seq"]
-    if rec["kind"] == "train":
-        D = B * S
-        f = 6.0 * active * D
-    elif rec["kind"] == "prefill":
-        f = 2.0 * active * B * S
-    else:                                     # decode: one token per seq
-        f = 2.0 * active * B
-    return f / rec["n_devices"]
-
-
-def analyze(rec) -> dict:
-    t_c = rec["flops_per_device"] / PEAK_FLOPS
-    t_m = rec["hbm_bytes_per_device"] / HBM_BW
-    t_x = rec["collective_wire_bytes_per_device"] / ICI_BW
-    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
-              key=lambda kv: kv[1])
-    mf = _model_flops(rec)
-    useful = (mf / rec["flops_per_device"]
-              if mf and rec["flops_per_device"] > 0 else None)
-    # roofline fraction: useful compute time / bound (perfect overlap model)
-    bound = max(t_c, t_m, t_x)
-    frac = (mf / PEAK_FLOPS) / bound if (mf and bound > 0) else None
-    return {
-        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
-        "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
-        "dominant": dom[0], "bound_s": bound,
-        "model_flops_per_dev": mf, "useful_flops_ratio": useful,
-        "roofline_fraction": frac,
-        "compile_s": rec.get("compile_s"),
-    }
-
-
-def load_records(d: pathlib.Path):
-    recs, skips, fails = [], [], []
-    for p in sorted(d.glob("*.json")):
-        r = json.loads(p.read_text())
-        if "skipped" in r:
-            skips.append(r)
-        elif "error" in r:
-            fails.append(r)
+def load_profiles(paths: List[pathlib.Path]) -> List[dict]:
+    """Profile dicts from either a JSONL stream of KernelProfiles or a
+    results JSON whose payload carries a "profiles" list (autotune.json).
+    Invalid records are dropped with a note, never fatal."""
+    profs = []
+    for p in paths:
+        try:
+            text = p.read_text()
+        except OSError as e:
+            print(f"[roofline] skipping {p}: {e}")
+            continue
+        if p.suffix == ".jsonl":
+            candidates = [json.loads(ln) for ln in text.splitlines()
+                          if ln.strip()]
         else:
-            recs.append(r)
-    return recs, skips, fails
+            payload = json.loads(text)
+            candidates = payload.get("profiles", [])
+        for d in candidates:
+            try:
+                profs.append(validate_profile(dict(d)))
+            except ValueError as e:
+                print(f"[roofline] dropping record from {p.name}: {e}")
+    return profs
+
+
+def analyze(prof: dict, hw: HardwareSpec) -> dict:
+    """Restate one profile's analytic counts + measured wall on `hw`.
+
+    The record's raw counts (flops / hbm_bytes / collective_bytes) are
+    hardware-independent; the time terms and fractions are recomputed
+    here so one set of measurements can be read against any peak set."""
+    roof = hw.roofline(prof["flops"], prof["hbm_bytes"],
+                       prof["collective_bytes"])
+    wall = prof["wall_s"]
+    achieved_f = prof["flops"] / wall if wall > 0 else 0.0
+    achieved_b = prof["hbm_bytes"] / wall if wall > 0 else 0.0
+    return {
+        "name": prof["name"], "kind": prof["kind"],
+        "backend": prof["backend"], "hw": hw.name, "shape": prof["shape"],
+        "wall_s": wall, "flops": prof["flops"],
+        "hbm_bytes": prof["hbm_bytes"],
+        "collective_bytes": prof["collective_bytes"],
+        "round_global": prof["round_global"],
+        "flops_frac": achieved_f / hw.peak_flops,
+        "bw_frac": achieved_b / hw.hbm_bw,
+        "model_vs_measured": roof["bound_s"] / wall if wall > 0 else 0.0,
+        **roof,
+    }
 
 
 def _fmt(x, width=9):
     if x is None:
         return " " * (width - 3) + "n/a"
-    if x == 0:
-        return f"{'0':>{width}}"
     return f"{x:>{width}.3g}"
 
 
-def render_tables(recs, skips, fails) -> str:
-    rows = [analyze(r) for r in recs]
-    out = []
-    for mesh in ("single", "multi"):
-        out.append(f"\n### Roofline — {mesh} pod mesh "
-                   f"({'16x16=256' if mesh == 'single' else '2x16x16=512'} chips)\n")
-        out.append("| arch | shape | compute s | memory s | collect s | "
-                   "dominant | useful F ratio | roofline frac |")
-        out.append("|---|---|---|---|---|---|---|---|")
-        for r in sorted((x for x in rows if x["mesh"] == mesh),
-                        key=lambda x: (x["arch"], x["shape"])):
-            out.append(
-                f"| {r['arch']} | {r['shape']} | {_fmt(r['t_compute_s'])} | "
-                f"{_fmt(r['t_memory_s'])} | {_fmt(r['t_collective_s'])} | "
-                f"{r['dominant']} | {_fmt(r['useful_flops_ratio'], 6)} | "
-                f"{_fmt(r['roofline_fraction'], 6)} |")
-    if skips:
-        out.append("\n### Skipped cells (assignment rules; per mesh)\n")
-        seen = set()
-        for s in skips:
-            key = (s["arch"], s["shape"])
-            if key in seen:
-                continue
-            seen.add(key)
-            out.append(f"- **{s['arch']} x {s['shape']}**: {s['skipped']}")
-    if fails:
-        out.append("\n### FAILED cells\n")
-        for f in fails:
-            out.append(f"- {f['arch']} x {f['shape']} ({f['mesh']}): "
-                       f"{f['error']}")
+def render_table(rows: List[dict], hw: HardwareSpec) -> str:
+    out = [f"\n### Roofline — {hw.name} "
+           f"(peak {hw.peak_flops / 1e12:.3g} TFLOP/s, "
+           f"HBM {hw.hbm_bw / 1e9:.3g} GB/s, "
+           f"interconnect {hw.ici_bw / 1e9:.3g} GB/s)\n",
+           "| name | kind | wall s | compute s | memory s | collect s | "
+           "dominant | FLOP/s frac | BW frac | model/measured |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r['name']} | {r['kind']} | {_fmt(r['wall_s'])} | "
+            f"{_fmt(r['t_compute_s'])} | {_fmt(r['t_memory_s'])} | "
+            f"{_fmt(r['t_collective_s'])} | {r['dominant']} | "
+            f"{_fmt(r['flops_frac'], 6)} | {_fmt(r['bw_frac'], 6)} | "
+            f"{_fmt(r['model_vs_measured'], 6)} |")
     return "\n".join(out)
+
+
+def default_inputs() -> List[pathlib.Path]:
+    paths = []
+    auto = RESULTS / "autotune.json"
+    if auto.exists():
+        paths.append(auto)
+    paths.extend(sorted(RESULTS.glob("*.prof.jsonl")))
+    return paths
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--dir", default=str(DEFAULT_DIR))
-    ap.add_argument("--md", default=str(HERE / "results" / "roofline.md"))
-    ap.add_argument("--json", default=str(HERE / "results" / "roofline.json"))
+    ap.add_argument("paths", nargs="*",
+                    help="profile sources: KernelProfile .jsonl streams "
+                         "and/or results .json files with a 'profiles' "
+                         "list (default: results/autotune.json + "
+                         "results/*.prof.jsonl)")
+    ap.add_argument("--hw", default="cpu_host", choices=sorted(HARDWARE),
+                    help="HardwareSpec the fractions are stated against")
+    ap.add_argument("--md", default=str(RESULTS / "roofline.md"))
+    ap.add_argument("--json", default=str(RESULTS / "roofline.json"))
     args = ap.parse_args()
-    recs, skips, fails = load_records(pathlib.Path(args.dir))
-    rows = [analyze(r) for r in recs]
+
+    paths = ([pathlib.Path(p) for p in args.paths] if args.paths
+             else default_inputs())
+    profs = load_profiles(paths)
+    if not profs:
+        print("roofline: no KernelProfile records found -- run "
+              "`kernel_bench --quick --autotune` or `cocoa_train --profile "
+              "--metrics-out` first")
+        return
+    hw = HARDWARE[args.hw]
+    rows = [analyze(p, hw) for p in profs]
+    # round streams can be long: aggregate kind=round rows per name
+    kernel_rows = [r for r in rows if r["kind"] == "kernel"]
+    round_rows = [r for r in rows if r["kind"] == "round"]
+    shown = list(kernel_rows)
+    if round_rows:
+        n = len(round_rows)
+        mean = {k: sum(r[k] for r in round_rows) / n
+                for k in ("wall_s", "t_compute_s", "t_memory_s",
+                          "t_collective_s", "flops_frac", "bw_frac",
+                          "model_vs_measured")}
+        dom = hw.roofline(round_rows[0]["flops"], round_rows[0]["hbm_bytes"],
+                          round_rows[0]["collective_bytes"])["dominant"]
+        shown.append({"name": f"{round_rows[0]['name']} (mean of {n})",
+                      "kind": "round", "dominant": dom, **mean})
+    md = render_table(shown, hw)
+    RESULTS.mkdir(parents=True, exist_ok=True)
     pathlib.Path(args.json).write_text(json.dumps(rows, indent=1))
-    md = render_tables(recs, skips, fails)
     pathlib.Path(args.md).write_text(md)
     print(md)
-    print(f"\n{len(recs)} analyzed, {len(skips)} skipped, {len(fails)} failed")
+    print(f"\n{len(profs)} profiles analyzed "
+          f"({len(kernel_rows)} kernel, {len(round_rows)} round) "
+          f"-> {args.md}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,171 @@
+"""Persisted autotune cache for the Pallas kernel launch configs.
+
+`kernel_bench --autotune` sweeps the sparse SDCA kernel's launch knobs
+(ELL block shape `block_rows`, slot-loop unroll depth `slot_unroll`) over
+a grid of problem shapes and records the fenced-wall-clock winner per
+(kernel, backend, d, r_max, density) here. The dispatch wrappers in
+`kernels.ops` consult the cache at call time when the caller leaves the
+knobs unset -- an explicitly passed config always wins, and a cache miss
+falls back to the static defaults, so the cache is a pure go-faster
+overlay: removing the file changes performance, never results (both
+knobs are visit-order-preserving, see `sparse_sdca`).
+
+Keying: d / r_max / backend are static at dispatch time (they are array
+*shapes*); density is not (nnz is a traced value under jit), so lookup
+matches exactly on (kernel, backend, d, r_max) and picks the recorded
+entry whose density is closest to the caller's estimate (default: the
+ELL upper bound r_max / d).
+
+The cache lives next to the kernels (checked in, like the bench
+baselines) at `kernels/autotune_cache.json`; `REPRO_AUTOTUNE_CACHE`
+overrides the path (tests point it at a tmp file and call
+`reset_cache()`).
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import time
+from typing import Dict, List, Optional
+
+AUTOTUNE_SCHEMA_VERSION = 1
+
+_DEFAULT_PATH = pathlib.Path(__file__).with_name("autotune_cache.json")
+
+# knob defaults used on a cache miss (also the pre-autotune behavior)
+DEFAULT_CONFIG = {"block_rows": 128, "slot_unroll": 1}
+
+_CONFIG_KEYS = tuple(sorted(DEFAULT_CONFIG))
+
+
+def cache_path() -> pathlib.Path:
+    return pathlib.Path(os.environ.get("REPRO_AUTOTUNE_CACHE",
+                                       str(_DEFAULT_PATH)))
+
+
+class AutotuneCache:
+    """JSON-persisted map (kernel, backend, d, r_max, density) -> config.
+
+    `record` replaces any entry with the same key and persists
+    immediately; `lookup` returns the winning config dict (a *copy*) or
+    None. Corrupt/missing files read as empty -- autotuning must never
+    be able to break dispatch."""
+
+    def __init__(self, path: Optional[pathlib.Path] = None):
+        self.path = pathlib.Path(path) if path is not None else cache_path()
+        self._entries: Optional[List[Dict]] = None
+
+    # -- persistence ---------------------------------------------------------
+
+    def _load(self) -> List[Dict]:
+        if self._entries is not None:
+            return self._entries
+        self._entries = []
+        try:
+            payload = json.loads(self.path.read_text())
+            if payload.get("schema") == AUTOTUNE_SCHEMA_VERSION:
+                self._entries = list(payload.get("entries", []))
+        except (OSError, ValueError):
+            pass
+        return self._entries
+
+    def _save(self) -> None:
+        payload = {"schema": AUTOTUNE_SCHEMA_VERSION,
+                   "entries": self._entries or []}
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        self.path.write_text(json.dumps(payload, indent=1) + "\n")
+
+    # -- API -----------------------------------------------------------------
+
+    @staticmethod
+    def _key(kernel: str, backend: str, d: int, r_max: int,
+             density: float) -> tuple:
+        return (kernel, backend, int(d), int(r_max), round(float(density), 6))
+
+    def record(self, kernel: str, backend: str, *, d: int, r_max: int,
+               density: float, config: Dict, wall_s: float) -> Dict:
+        """Insert/replace the winner for one swept shape and persist."""
+        entry = {
+            "kernel": kernel, "backend": backend, "d": int(d),
+            "r_max": int(r_max), "density": round(float(density), 6),
+            "config": {k: int(config[k]) for k in _CONFIG_KEYS},
+            "wall_s": float(wall_s),
+            "written_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        }
+        key = self._key(kernel, backend, d, r_max, density)
+        entries = self._load()
+        self._entries = [e for e in entries
+                         if self._key(e["kernel"], e["backend"], e["d"],
+                                      e["r_max"], e["density"]) != key]
+        self._entries.append(entry)
+        self._save()
+        return entry
+
+    def lookup(self, kernel: str, backend: str, *, d: int, r_max: int,
+               density: Optional[float] = None) -> Optional[Dict]:
+        """Winning config for this shape, or None.
+
+        Exact match on (kernel, backend, d, r_max); among those, the
+        entry whose recorded density is closest to `density` (defaults
+        to the ELL upper bound r_max / d -- the only density visible at
+        dispatch time, where nnz is traced)."""
+        if density is None:
+            density = r_max / max(d, 1)
+        best, best_gap = None, float("inf")
+        for e in self._load():
+            if (e["kernel"], e["backend"]) != (kernel, backend):
+                continue
+            if (e["d"], e["r_max"]) != (int(d), int(r_max)):
+                continue
+            gap = abs(e["density"] - density)
+            if gap < best_gap:
+                best, best_gap = e, gap
+        return dict(best["config"]) if best else None
+
+    def entries(self) -> List[Dict]:
+        return [dict(e) for e in self._load()]
+
+
+_CACHE: Optional[AutotuneCache] = None
+
+
+def get_cache() -> AutotuneCache:
+    """Process-wide cache singleton (path resolved at first use)."""
+    global _CACHE
+    if _CACHE is None:
+        _CACHE = AutotuneCache()
+    return _CACHE
+
+
+def reset_cache() -> None:
+    """Drop the singleton so the next `get_cache()` re-reads the path --
+    call after changing REPRO_AUTOTUNE_CACHE (tests)."""
+    global _CACHE
+    _CACHE = None
+
+
+def resolve_sparse_config(*, d: int, r_max: int,
+                          block_rows: Optional[int],
+                          slot_unroll: Optional[int],
+                          backend: Optional[str] = None) -> Dict:
+    """The dispatch-time merge: explicit knob > cache hit > default.
+
+    Returns {"block_rows", "slot_unroll", "source"} where source is
+    "explicit" | "cache" | "default" (for observability -- `ops` exposes
+    the last resolution as `LAST_SPARSE_CONFIG`)."""
+    if block_rows is not None and slot_unroll is not None:
+        return {"block_rows": int(block_rows),
+                "slot_unroll": int(slot_unroll), "source": "explicit"}
+    if backend is None:
+        import jax
+        backend = jax.default_backend()
+    hit = get_cache().lookup("sparse_sdca", backend, d=d, r_max=r_max)
+    base = dict(hit) if hit else dict(DEFAULT_CONFIG)
+    base["source"] = "cache" if hit else "default"
+    # a partially explicit call still wins on the knobs it names
+    if block_rows is not None:
+        base["block_rows"] = int(block_rows)
+    if slot_unroll is not None:
+        base["slot_unroll"] = int(slot_unroll)
+    return base

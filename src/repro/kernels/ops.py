@@ -20,8 +20,15 @@ import jax.numpy as jnp
 from repro.core.losses import Loss
 from repro.core.regularizers import L2, Regularizer
 from repro.core.solvers import SDCAResult
+from .autotune import resolve_sparse_config
 from .local_sdca import local_sdca_pallas
 from .sparse_sdca import sparse_local_sdca
+
+# last launch config the sparse dispatch resolved (observability hook for
+# tests and the bench harness): {"block_rows", "slot_unroll", "source"}.
+# Set at *trace* time -- a jit cache hit reuses the traced kernel without
+# updating this, so read it right after a fresh-shape call.
+LAST_SPARSE_CONFIG = None
 
 
 def _pad_to(x, m, axis):
@@ -97,7 +104,8 @@ def local_sdca_block(X_k, y_k, alpha_k, mask_k, v, rng, loss: Loss,
 
 def sparse_local_sdca_block(shard, y_k, alpha_k, mask_k, v, rng, loss: Loss,
                             lam: float, n, sigma_p: float, H: int,
-                            *, block_rows: int = 128,
+                            *, block_rows: int | None = None,
+                            slot_unroll: int | None = None,
                             interpret: bool | None = None,
                             model_axis=None,
                             reg: Regularizer = L2) -> SDCAResult:
@@ -126,6 +134,14 @@ def sparse_local_sdca_block(shard, y_k, alpha_k, mask_k, v, rng, loss: Loss,
     cols, vals = shard.cols, shard.vals
     nk, r_max = cols.shape
     d = v.shape[0]
+    # launch config: explicit kwargs win, else the persisted autotune
+    # cache (kernel_bench --autotune), else the static defaults -- keyed
+    # on static shapes only (d, r_max, backend), since nnz is traced here
+    cfg = resolve_sparse_config(d=d, r_max=r_max, block_rows=block_rows,
+                                slot_unroll=slot_unroll)
+    global LAST_SPARSE_CONFIG
+    LAST_SPARSE_CONFIG = cfg
+    block_rows, slot_unroll = cfg["block_rows"], cfg["slot_unroll"]
     n_passes = max(1, int(round(H / max(nk, 1))))
 
     perm = jax.random.permutation(rng, nk)
@@ -147,6 +163,7 @@ def sparse_local_sdca_block(shard, y_k, alpha_k, mask_k, v, rng, loss: Loss,
     scale = sigma_p / (reg.tau(lam) * jnp.asarray(n, jnp.float32))
     da_p, du_p = sparse_local_sdca(cp, vp, yp, ap, mp, wp, scale, loss=loss,
                                    n_passes=n_passes, block_rows=br,
+                                   slot_unroll=slot_unroll,
                                    interpret=interpret)
     dalpha = jnp.zeros(nk, da_p.dtype).at[perm].set(da_p[:nk])
     return SDCAResult(dalpha.astype(vals.dtype), du_p[:d].astype(v.dtype),

@@ -53,13 +53,33 @@ from repro.core.losses import Loss
 from .local_sdca import _check_loss
 
 
+def _unrolled_fori(n: int, unroll: int, body, init):
+    """`fori_loop(0, n, body, init)` with `unroll` consecutive iterations
+    per loop step -- same visit order, same carry chain, so results are
+    bit-for-bit identical to the rolled loop for any unroll that divides
+    n (otherwise falls back to rolled). This is the sparse kernel's
+    "buffer depth" tuning knob: deeper unroll trades instruction-stream
+    size for fewer loop-carried branches on the r_max slot walk."""
+    if unroll <= 1 or n % unroll != 0:
+        return jax.lax.fori_loop(0, n, body, init)
+
+    def block(j, carry):
+        base = j * unroll
+        for t in range(unroll):
+            carry = body(base + t, carry)
+        return carry
+
+    return jax.lax.fori_loop(0, n // unroll, block, init)
+
+
 def _sparse_sdca_kernel(scale_ref,                     # SMEM (1, 1)
                         c_ref, v_ref,                  # VMEM (B, r_max) tiles
                         y_ref, a_ref, m_ref,           # VMEM (1, B) tiles
                         w_ref,                         # VMEM (1, d)
                         da_out, du_out,                # VMEM (1, nk), (1, d)
                         da_scr, u_scr,                 # VMEM scratch
-                        *, loss: Loss, block_rows: int, nk: int, r_max: int):
+                        *, loss: Loss, block_rows: int, nk: int, r_max: int,
+                        slot_unroll: int = 1):
     p = pl.program_id(0)
     b = pl.program_id(1)
     nb = pl.num_programs(1)
@@ -89,7 +109,7 @@ def _sparse_sdca_kernel(scale_ref,                     # SMEM (1, 1)
             vv = jax.lax.dynamic_index_in_dim(vi, r, keepdims=False)
             return z + uv * vv
 
-        z = jax.lax.fori_loop(0, r_max, gather_dot, jnp.float32(0.0))
+        z = _unrolled_fori(r_max, slot_unroll, gather_dot, jnp.float32(0.0))
         q = scale * jnp.sum(vi * vi)
         yi = jax.lax.dynamic_slice_in_dim(y_blk, i, 1, axis=1)[0, 0]
         mi = jax.lax.dynamic_slice_in_dim(m_blk, i, 1, axis=1)[0, 0]
@@ -109,7 +129,8 @@ def _sparse_sdca_kernel(scale_ref,                     # SMEM (1, 1)
             return jax.lax.dynamic_update_index_in_dim(
                 u, uv + coef * vv, c, axis=0)
 
-        u_scr[...] = jax.lax.fori_loop(0, r_max, scatter_axpy, u)[None]
+        u_scr[...] = _unrolled_fori(r_max, slot_unroll, scatter_axpy,
+                                    u)[None]
         return 0
 
     jax.lax.fori_loop(0, block_rows, step, 0)
@@ -123,13 +144,21 @@ def _sparse_sdca_kernel(scale_ref,                     # SMEM (1, 1)
 def sparse_local_sdca(cols: jnp.ndarray, vals: jnp.ndarray, y: jnp.ndarray,
                       alpha: jnp.ndarray, mask: jnp.ndarray, w: jnp.ndarray,
                       scale: jnp.ndarray, *, loss: Loss, n_passes: int = 1,
-                      block_rows: int = 128, interpret: bool | None = None):
+                      block_rows: int = 128, slot_unroll: int = 1,
+                      vmem_limit_mb: int | None = None,
+                      interpret: bool | None = None):
     """Run `n_passes` block-sequential SDCA passes over one ELL shard.
 
     cols/vals: (nk, r_max) padded-ELL rows (padding = col 0 / val 0);
     y/alpha/mask: (nk,); w: (d,); scale: scalar sigma' / (lambda n).
     Returns (dalpha (nk,), du (d,)) with du = scale * A_[k] dalpha.
     nk must be divisible by block_rows (ops.py pads).
+
+    `block_rows` and `slot_unroll` are the autotune knobs (`kernel_bench
+    --autotune`): both preserve the sequential visit order exactly, so
+    any setting returns bit-for-bit identical results. `vmem_limit_mb`
+    raises Mosaic's VMEM ceiling on real TPUs (ignored in interpret
+    mode and on jax builds without `pltpu.TPUCompilerParams`).
     """
     _check_loss(loss)
     nk, r_max = cols.shape
@@ -142,8 +171,15 @@ def sparse_local_sdca(cols: jnp.ndarray, vals: jnp.ndarray, y: jnp.ndarray,
 
     f32 = jnp.float32
     kernel = functools.partial(_sparse_sdca_kernel, loss=loss,
-                               block_rows=block_rows, nk=nk, r_max=r_max)
+                               block_rows=block_rows, nk=nk, r_max=r_max,
+                               slot_unroll=slot_unroll)
     grid = (n_passes, nb)
+    extra = {}
+    if vmem_limit_mb and not interpret:
+        params_cls = getattr(pltpu, "TPUCompilerParams", None)
+        if params_cls is not None:
+            extra["compiler_params"] = params_cls(
+                vmem_limit_bytes=int(vmem_limit_mb) * 2**20)
     da, du = pl.pallas_call(
         kernel,
         grid=grid,
@@ -169,6 +205,7 @@ def sparse_local_sdca(cols: jnp.ndarray, vals: jnp.ndarray, y: jnp.ndarray,
             pltpu.VMEM((1, d), f32),
         ],
         interpret=interpret,
+        **extra,
     )(
         jnp.asarray(scale, f32).reshape(1, 1),
         cols.astype(jnp.int32),

@@ -125,7 +125,11 @@ def main():
     ap.add_argument("--profile", default="",
                     help="jax.profiler trace directory; the trace carries "
                          "cocoa/local_solve, cocoa/exchange and "
-                         "cocoa/certificate named-scope regions per round")
+                         "cocoa/certificate named-scope regions per round. "
+                         "With --metrics-out also emits one KernelProfile "
+                         "per certified round (<metrics-out>.prof.jsonl): "
+                         "measured round wall vs the lowered round fn's "
+                         "analytic HLO cost")
     args = ap.parse_args()
 
     # validate the comm flags before the (possibly minutes-long) dataset
@@ -251,8 +255,38 @@ def main():
     agg = bus.subscribe(Aggregator())
     if args.metrics_out:
         bus.subscribe(JsonlSink(args.metrics_out))
+    prof_path, prof_sink = None, None
+    if args.profile and args.metrics_out:
+        # the compute-side twin of the RoundRecord stream: lower the same
+        # round fn solve will run, extract its analytic HLO cost once, and
+        # mirror every RoundRecord with a kind="round" KernelProfile that
+        # shares its round_global (checked by repro.obs.validate --prof).
+        # Never fails the run -- profiling is observability, not control.
+        import time as _time
+
+        from repro.core.cocoa import make_round_sharded, make_round_vmap
+        from repro.launch.hlo_analysis import stats_of_compiled
+        from repro.obs.prof import RoundProfileSink
+        try:
+            rf = jax.jit(make_round_sharded(cfg, mesh) if mesh is not None
+                         else make_round_vmap(cfg, K))
+            t0 = _time.perf_counter()
+            stats = stats_of_compiled(rf.lower(state, Xp, yp, mk).compile())
+            prof_path = pathlib.Path(args.metrics_out).with_suffix(
+                ".prof.jsonl")
+            prof_sink = bus.subscribe(RoundProfileSink(
+                prof_path, stats, name="cocoa_round",
+                shape=dict(K=K, d=int(d_dim), nk=int(nk_dim), H=args.H,
+                           solver=args.solver),
+                compile_s=_time.perf_counter() - t0))
+        except Exception as e:                         # pragma: no cover
+            prof_path = None
+            print(f"[obs] per-round profiling disabled: {e}")
     if args.dashboard:
-        bus.subscribe(Dashboard(total_rounds=args.rounds))
+        # subscribed after the profile sink, so the compute/roofline row
+        # can read the profile already emitted for the same record
+        bus.subscribe(Dashboard(total_rounds=args.rounds,
+                                prof_source=prof_sink))
 
     def make_tracker(K):
         # measured per-round wall-clock feeds the EMA; a simulated
@@ -404,6 +438,10 @@ def main():
               f"(validate: python -m repro.obs.validate {args.metrics_out})")
     if args.profile:
         print(f"profile: trace written to {args.profile}")
+    if prof_path is not None:
+        print(f"profile: per-round KernelProfiles -> {prof_path} "
+              f"(validate both streams: python -m repro.obs.validate "
+              f"{args.metrics_out} --prof {prof_path})")
 
 
 if __name__ == "__main__":

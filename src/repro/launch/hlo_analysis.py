@@ -129,7 +129,14 @@ class HloModule:
                 if " while(" in ln:
                     body = re.search(r"body=%?([\w\.\-]+)", ln)
                     cond = re.search(r"condition=%?([\w\.\-]+)", ln)
-                    trip = self._trip_count(cond.group(1)) if cond else 1
+                    # XLA stamps the resolved trip count into backend_config
+                    # when it can prove it; trust that over the heuristic
+                    ktc = re.search(r'known_trip_count[":{\s]+n["\s:]+(\d+)',
+                                    ln)
+                    if ktc:
+                        trip = int(ktc.group(1))
+                    else:
+                        trip = self._trip_count(cond.group(1)) if cond else 1
                     if body:
                         calls[name].append((body.group(1), trip))
                     if cond:
@@ -145,8 +152,11 @@ class HloModule:
                                 c = c.strip().lstrip("%")
                                 if c in self.comps:
                                     calls[name].append((c, 1))
-        # relaxation sweeps over the call DAG until fixpoint (handles
-        # arbitrary nesting depth and diamond patterns)
+        # Jacobi relaxation over the call DAG until fixpoint: each sweep
+        # recomputes every computation's multiplier from the *previous*
+        # sweep's caller values, so one sweep propagates one level of
+        # nesting regardless of definition order (HLO lists callees before
+        # callers, so an in-sweep update would never reach nested loops)
         self.mult = defaultdict(float)
         self.mult[self.entry] = 1.0
         for _ in range(50):
@@ -154,8 +164,9 @@ class HloModule:
             new[self.entry] = 1.0
             for name in self.comps:
                 for callee, k in calls.get(name, []):
-                    new[callee] += new.get(name, 0.0) * k
-            if all(abs(new[n] - self.mult[n]) < 0.5 for n in new):
+                    new[callee] += self.mult.get(name, 0.0) * k
+            if all(abs(new[n] - self.mult[n]) < 0.5
+                   for n in set(new) | set(self.mult)):
                 self.mult = new
                 break
             self.mult = new
@@ -255,6 +266,43 @@ class HloModule:
             return False
         return True
 
+    # elementwise arithmetic opcodes priced at one FLOP per result element
+    # (ops that move/select/compare data are not FLOPs; exp/log/tanh etc.
+    # are counted at 1 -- a transcendental is more, but by the time they
+    # matter the dots dominate anyway)
+    _EW_OPS = {"add", "subtract", "multiply", "divide", "negate", "abs",
+               "maximum", "minimum", "power", "sqrt", "rsqrt", "exponential",
+               "log", "tanh", "logistic", "sine", "cosine"}
+
+    def ew_flops(self) -> float:
+        """Elementwise FLOPs: sum over arithmetic instructions of result
+        elements x the computation's execution multiplier, fusion bodies
+        included. The scalar gather-dot/scatter-axpy loops of the sparse
+        SDCA kernel lower to while bodies of scalar multiply-adds with no
+        `dot` anywhere -- `dot_flops` alone would price that kernel at
+        zero; this counter is what makes its analytic cost nonzero."""
+        total = 0.0
+        for mult, name, op, rtype, ln in self.instructions():
+            if op == "reduce":
+                # one combine per input element (the scalar to_apply body
+                # would otherwise price a jnp.sum at 1 FLOP)
+                ops = self._operands(ln)
+                if ops and ops[0] in self.shape_of:
+                    _, idims = _first_shape_dims(self.shape_of[ops[0]])
+                    n = 1
+                    for dim in idims:
+                        n *= dim
+                    total += mult * n
+                continue
+            if op not in self._EW_OPS:
+                continue
+            _, rdims = _first_shape_dims(rtype)
+            n = 1
+            for dim in rdims:
+                n *= dim
+            total += mult * n
+        return total
+
     def hbm_bytes(self) -> float:
         """HBM-traffic model of the *target* (TPU) execution.
 
@@ -352,9 +400,24 @@ def total_wire_bytes(stats: Dict[str, Dict[str, float]]) -> float:
 def full_stats(hlo: str) -> Dict[str, object]:
     mod = HloModule(hlo)
     coll = mod.collective_stats()
+    dot = mod.dot_flops()
+    ew = mod.ew_flops()
     return {
-        "dot_flops": mod.dot_flops(),
+        "dot_flops": dot,
+        "ew_flops": ew,
+        "flops": dot + ew,
         "hbm_bytes": mod.hbm_bytes(),
         "collectives": coll,
         "collective_wire_bytes": total_wire_bytes(coll),
     }
+
+
+def stats_of_compiled(compiled) -> Dict[str, object]:
+    """`full_stats` of a compiled executable (`jit(f).lower(...).compile()`)
+    -- the post-SPMD, post-optimization module the device actually runs,
+    which is the text every analytic number in `repro.obs.prof` comes
+    from."""
+    texts = compiled.as_text()
+    if isinstance(texts, (list, tuple)):       # one module per partition
+        texts = texts[0]
+    return full_stats(texts)

@@ -18,7 +18,18 @@ plumbing that carries all four out of a run:
                  (`cocoa_train --dashboard`): gap trajectory, per-hop
                  wire rates, per-worker throughput, redrawn in place
     validate  -- `python -m repro.obs.validate run.jsonl` schema gate
-                 (the CI smoke step for `cocoa_train --metrics-out`)
+                 (the CI smoke step for `cocoa_train --metrics-out`);
+                 also validates KernelProfile streams and the
+                 cross-schema `round_global` pairing (`--prof`)
+    prof      -- the compute-side twin of the wire accounting: frozen
+                 `KernelProfile` records pairing fenced measured
+                 wall-clock with the analytic HLO cost (flops / HBM
+                 bytes / collective bytes via `launch.hlo_analysis`)
+                 and its roofline placement on a pluggable
+                 `HardwareSpec`
+    regress   -- `python -m repro.obs.regress` perf-regression gate:
+                 latest bench-history run vs a pinned baseline with a
+                 noise band; nonzero exit on regression
 
 `solve`'s history is a thin view over this bus (`Aggregator.history()`),
 and the benchmarks time through the same fenced helpers, so trainer and
@@ -28,3 +39,6 @@ from .dashboard import Dashboard, sparkline
 from .events import Aggregator, EventBus, JsonlSink, ProfilerSink
 from .metrics import (SCHEMA_VERSION, Counter, Gauge, Histogram, RoundRecord,
                       aot_compile, fenced_call, fenced_time, validate_record)
+from .prof import (PROF_SCHEMA_VERSION, HardwareSpec, KernelProfile,
+                   RoundProfileSink, build_profile, get_hardware, profile_fn,
+                   validate_profile)

@@ -13,12 +13,17 @@ Layout (one screen, one scale per element):
          trajectory  ▇▆▅▄▃▂▁▁ (last 48 certified rounds)
     wire 12,288 floats/round · 49.2 KiB · 1.1e6 floats/s
          hop reduce[data]  8 msg x 1536 = 12288
+    comp 1.1e9 FLOP/s |#---------| 1.1% peak · 3.2e9 B/s |##--------| 16% HBM
     thru w0 ████████ 9.8e3  w1 ████ 5.1e3  ... steps/s (EMA)
 
 The gap meter and sparkline share one log10 scale anchored at the first
 certified gap; per-worker throughput bars share one linear scale. More
 than 8 workers fold into a `+K more` tail rather than shrinking bars
-below legibility.
+below legibility. The compute/roofline row appears when a
+`prof.RoundProfileSink` is wired in as `prof_source` (`cocoa_train
+--profile --metrics-out --dashboard`): achieved FLOP/s and HBM-BW as
+fractions of the profile's `HardwareSpec` peaks, plus the dominant
+roofline term -- same tty/piped split as every other row.
 """
 from __future__ import annotations
 
@@ -62,10 +67,14 @@ class Dashboard:
     text stream (tests use StringIO, which takes the non-tty path)."""
 
     def __init__(self, out=None, total_rounds: Optional[int] = None,
-                 width: int = 72):
+                 width: int = 72, prof_source=None):
         self.out = out if out is not None else sys.stdout
         self.total_rounds = total_rounds
         self.width = width
+        # anything with a `.profiles` list of KernelProfiles (a
+        # `prof.RoundProfileSink` subscribed *before* this dashboard, so
+        # the matching profile exists by the time a record renders)
+        self.prof_source = prof_source
         self._tty = bool(getattr(self.out, "isatty", lambda: False)())
         self._gaps: List[float] = []
         self._lines_drawn = 0
@@ -92,12 +101,26 @@ class Dashboard:
 
     # -- rendering -----------------------------------------------------------
 
+    def _profile_for(self, r: RoundRecord):
+        """The round profile paired with this record, if a prof source is
+        wired in and its latest profile shares the record's round_global."""
+        profs = getattr(self.prof_source, "profiles", None)
+        if not profs:
+            return None
+        p = profs[-1]
+        return p if p.round_global == r.round_global else None
+
     def _plain_line(self, r: RoundRecord) -> str:
         ms = 1e3 * r.execute_s / r.rounds_in_record
-        return (f"round {r.round_global}: gap={r.gap:.3e} "
+        line = (f"round {r.round_global}: gap={r.gap:.3e} "
                 f"P={r.primal:.6f} D={r.dual:.6f} "
                 f"round_ms={ms:.1f} wire_floats={r.wire_floats}"
                 + (f" compile_s={r.compile_s:.2f}" if r.compile_s else ""))
+        p = self._profile_for(r)
+        if p is not None:
+            line += (f" flops_frac={p.flops_frac:.3g} "
+                     f"bw_frac={p.bw_frac:.3g} dominant={p.dominant}")
+        return line
 
     def _render(self, r: RoundRecord) -> List[str]:
         lines = []
@@ -134,6 +157,18 @@ class Dashboard:
             lines.append(self._dim(
                 f"     hop {h['hop']}[{h['axis']}]  {h['messages']} msg x "
                 f"{h['floats_per_message']} = {h['floats']}{measured}"))
+        p = self._profile_for(r)
+        if p is not None:
+            # achieved-vs-peak fraction bars (clamped at full; >100% means
+            # the HardwareSpec understates this host, stated in the label)
+            lines.append(
+                f"comp {p.achieved_flops:.3g} FLOP/s "
+                f"|{_bar(p.flops_frac, 10)}| {p.flops_frac:.1%} peak"
+                + self._dim(" · ")
+                + f"{p.achieved_bw:.3g} B/s |{_bar(p.bw_frac, 10)}| "
+                  f"{p.bw_frac:.1%} HBM"
+                + self._dim(f" · {p.dominant}-bound on {p.hw}, "
+                            f"model/meas {p.model_vs_measured:.2f}"))
         if r.throughput:
             rates = list(r.throughput)
             shown = rates[:_MAX_WORKER_BARS]

@@ -65,17 +65,22 @@ class EventBus:
 
 
 class JsonlSink:
-    """One schema-versioned JSON record per line, flushed per record."""
+    """One schema-versioned JSON record per line, flushed per record.
+
+    Accepts any record with a `to_dict()` (RoundRecord, `prof.
+    KernelProfile`) or a plain dict -- one sink class for every schema
+    the obs package emits."""
 
     def __init__(self, path: Union[str, pathlib.Path]):
         self.path = pathlib.Path(path)
         self._fh = None
 
-    def emit(self, record: RoundRecord) -> None:
+    def emit(self, record) -> None:
         if self._fh is None:
             self.path.parent.mkdir(parents=True, exist_ok=True)
             self._fh = self.path.open("w")
-        self._fh.write(json.dumps(record.to_dict()) + "\n")
+        d = record if isinstance(record, dict) else record.to_dict()
+        self._fh.write(json.dumps(d) + "\n")
         self._fh.flush()
 
     def close(self) -> None:

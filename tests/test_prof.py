@@ -1,0 +1,443 @@
+"""Kernel performance observatory: golden-HLO cost extraction, the
+KernelProfile schema gate, the autotune cache + dispatch consultation,
+the regression detector, and the round-profile pairing."""
+import io
+import json
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ops
+from repro.kernels.autotune import (AutotuneCache, DEFAULT_CONFIG, get_cache,
+                                    reset_cache, resolve_sparse_config)
+from repro.launch.hlo_analysis import HloModule, full_stats
+from repro.obs import regress
+from repro.obs.dashboard import Dashboard
+from repro.obs.prof import (CPU_HOST, KernelProfile, RoundProfileSink,
+                            build_profile, get_hardware, profile_fn,
+                            validate_profile)
+from repro.obs.validate import check_cross, validate_file
+
+from test_obs import make_record
+
+# Nested while loops around elementwise arithmetic -- the shape the
+# interpret-mode sparse SDCA kernel lowers to (scalar multiply-add loop
+# bodies, no dot anywhere). Outer trip count comes from the XLA
+# backend_config annotation, inner from the condition constant; the
+# fixed expectations below pin both extraction paths AND the Jacobi
+# multiplier relaxation (an in-sweep propagation bug priced nested
+# bodies at zero: HLO lists callees before callers).
+GOLD = """
+HloModule gold
+
+%ibody (p: (s32[], f32[8])) -> (s32[], f32[8]) {
+  %p = (s32[], f32[8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8] get-tuple-element(%p), index=1
+  %y = f32[8] multiply(%x, %x)
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8]) tuple(%ni, %y)
+}
+
+%icond (p: (s32[], f32[8])) -> pred[] {
+  %p = (s32[], f32[8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(4)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+%obody (p: (s32[], f32[8])) -> (s32[], f32[8]) {
+  %p = (s32[], f32[8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8] get-tuple-element(%p), index=1
+  %z = s32[] constant(0)
+  %t0 = (s32[], f32[8]) tuple(%z, %x)
+  %il = (s32[], f32[8]) while(%t0), condition=%icond, body=%ibody
+  %xr = f32[8] get-tuple-element(%il), index=1
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8]) tuple(%ni, %xr)
+}
+
+%ocond (p: (s32[], f32[8])) -> pred[] {
+  %p = (s32[], f32[8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(99)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (x: f32[8]) -> f32[8] {
+  %x = f32[8] parameter(0)
+  %z = s32[] constant(0)
+  %t0 = (s32[], f32[8]) tuple(%z, %x)
+  %loop = (s32[], f32[8]) while(%t0), condition=%ocond, body=%obody, backend_config={"known_trip_count":{"n":"3"}}
+  ROOT %r = f32[8] get-tuple-element(%loop), index=1
+}
+"""
+
+# ibody runs 3 (outer, from backend_config -- NOT ocond's misleading 99)
+# x 4 (inner, from icond's constant): multiply f32[8] = 8 + scalar add = 9
+# flops per execution; obody's own scalar add adds 1 x 3.
+GOLD_EW = 3 * 4 * 9 + 3
+
+
+# ----------------------------------------------------------------------------
+# golden HLO -> analytic cost -> profile
+# ----------------------------------------------------------------------------
+
+def test_golden_nested_while_multipliers():
+    mod = HloModule(GOLD)
+    assert abs(mod.mult["obody"] - 3) < 0.6       # known_trip_count wins
+    assert abs(mod.mult["ibody"] - 12) < 0.6      # 3 x 4, Jacobi-propagated
+    assert mod.ew_flops() == GOLD_EW
+
+
+def test_golden_build_profile():
+    st = full_stats(GOLD)
+    assert st["flops"] == GOLD_EW and st["dot_flops"] == 0
+    prof = build_profile("gold", st, wall_s=1e-3, backend="cpu",
+                         hw=CPU_HOST, shape={"d": 8}, iters=2)
+    assert prof.flops == GOLD_EW
+    assert prof.hbm_bytes > 0
+    assert prof.achieved_flops == pytest.approx(GOLD_EW / 1e-3)
+    assert prof.flops_frac == pytest.approx(prof.achieved_flops
+                                            / CPU_HOST.peak_flops)
+    assert prof.dominant in ("compute", "memory", "collective")
+    assert prof.bound_s == max(prof.t_compute_s, prof.t_memory_s,
+                               prof.t_collective_s)
+    # JSON round-trip through the schema gate
+    back = KernelProfile.from_dict(json.loads(json.dumps(prof.to_dict())))
+    assert back == prof
+
+
+def test_profile_fn_real_kernel_nonzero_cost():
+    """The acceptance bar: profiling the interpret-mode sparse kernel must
+    yield nonzero analytic flops AND bytes AND measured wall-clock."""
+    import functools
+
+    from repro.core.losses import get_loss
+    from repro.data import sparse as sp
+    from repro.kernels.sparse_sdca import sparse_local_sdca
+
+    nk, d = 128, 256
+    csr, y = sp.make_sparse_classification(nk, d, density=0.05, seed=0)
+    sh, yp, mk = sp.partition_sparse(csr, y, 1, seed=0)
+    shard = jax.tree.map(lambda a: a[0], sh)
+    fn = functools.partial(sparse_local_sdca, loss=get_loss("hinge"),
+                           n_passes=1, block_rows=64, interpret=True)
+    prof = profile_fn(fn, shard.cols, shard.vals, yp[0], jnp.zeros(nk),
+                      mk[0], jnp.zeros(d), jnp.float32(0.1),
+                      name="sparse_sdca", iters=1,
+                      shape={"nk": nk, "d": d})
+    assert prof.flops > 1000          # scalar gather/scatter loops counted
+    assert prof.hbm_bytes > 0
+    assert prof.wall_s > 0
+    validate_profile(prof.to_dict())
+
+
+# ----------------------------------------------------------------------------
+# schema rejections
+# ----------------------------------------------------------------------------
+
+def _good_profile_dict():
+    return build_profile("k", {"flops": 10.0, "dot_flops": 4.0,
+                               "hbm_bytes": 100.0,
+                               "collective_wire_bytes": 8.0},
+                         wall_s=1e-3, backend="cpu", hw=CPU_HOST).to_dict()
+
+
+@pytest.mark.parametrize("mutate,msg", [
+    (lambda d: d.update(extra=1), "unknown"),
+    (lambda d: d.pop("wall_s"), "missing"),
+    (lambda d: d.update(flops="many"), "flops"),
+    (lambda d: d.update(iters=True), "iters"),
+    (lambda d: d.update(schema=99), "schema"),
+    (lambda d: d.update(kind="epoch"), "kind"),
+    (lambda d: d.update(wall_s=-1.0), "wall_s"),
+    (lambda d: d.update(hbm_bytes=float("nan")), "hbm_bytes"),
+    (lambda d: d.update(iters=0), "iters"),
+    (lambda d: d.update(dot_flops=11.0), "dot_flops"),
+    (lambda d: d.update(kind="round"), "round_global"),
+])
+def test_validate_profile_rejects(mutate, msg):
+    d = _good_profile_dict()
+    mutate(d)
+    with pytest.raises(ValueError, match=msg):
+        validate_profile(d)
+
+
+def test_get_hardware_unknown():
+    with pytest.raises(KeyError, match="unknown hardware"):
+        get_hardware("abacus")
+
+
+# ----------------------------------------------------------------------------
+# autotune cache: round-trip, lookup, dispatch consultation
+# ----------------------------------------------------------------------------
+
+@pytest.fixture
+def tmp_cache(tmp_path, monkeypatch):
+    path = tmp_path / "cache.json"
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(path))
+    reset_cache()
+    yield path
+    reset_cache()
+
+
+def test_cache_roundtrip(tmp_cache):
+    c = get_cache()
+    c.record("sparse_sdca", "cpu", d=512, r_max=44, density=0.05,
+             config={"block_rows": 64, "slot_unroll": 2}, wall_s=1e-3)
+    # a fresh instance re-reads the persisted file
+    c2 = AutotuneCache(tmp_cache)
+    hit = c2.lookup("sparse_sdca", "cpu", d=512, r_max=44)
+    assert hit == {"block_rows": 64, "slot_unroll": 2}
+    # re-record same key replaces, not duplicates
+    c2.record("sparse_sdca", "cpu", d=512, r_max=44, density=0.05,
+              config={"block_rows": 128, "slot_unroll": 1}, wall_s=5e-4)
+    assert len(AutotuneCache(tmp_cache).entries()) == 1
+    assert AutotuneCache(tmp_cache).lookup(
+        "sparse_sdca", "cpu", d=512, r_max=44)["block_rows"] == 128
+
+
+def test_cache_lookup_closest_density_and_misses(tmp_cache):
+    c = get_cache()
+    for rho, br in ((0.01, 32), (0.2, 256)):
+        c.record("sparse_sdca", "cpu", d=512, r_max=44, density=rho,
+                 config={"block_rows": br, "slot_unroll": 1}, wall_s=1e-3)
+    assert c.lookup("sparse_sdca", "cpu", d=512, r_max=44,
+                    density=0.02)["block_rows"] == 32
+    assert c.lookup("sparse_sdca", "cpu", d=512, r_max=44,
+                    density=0.3)["block_rows"] == 256
+    # shape/backend mismatches miss
+    assert c.lookup("sparse_sdca", "cpu", d=1024, r_max=44) is None
+    assert c.lookup("sparse_sdca", "tpu", d=512, r_max=44) is None
+    assert c.lookup("dense_sdca", "cpu", d=512, r_max=44) is None
+
+
+def test_cache_corrupt_file_reads_empty(tmp_cache):
+    tmp_cache.write_text("{not json")
+    assert get_cache().lookup("sparse_sdca", "cpu", d=512, r_max=44) is None
+
+
+def test_resolve_explicit_wins_over_cache(tmp_cache):
+    get_cache().record("sparse_sdca", "cpu", d=512, r_max=44, density=0.05,
+                       config={"block_rows": 32, "slot_unroll": 2},
+                       wall_s=1e-3)
+    cfg = resolve_sparse_config(d=512, r_max=44, block_rows=64,
+                                slot_unroll=1, backend="cpu")
+    assert cfg == {"block_rows": 64, "slot_unroll": 1, "source": "explicit"}
+    cfg = resolve_sparse_config(d=512, r_max=44, block_rows=None,
+                                slot_unroll=None, backend="cpu")
+    assert cfg == {"block_rows": 32, "slot_unroll": 2, "source": "cache"}
+    # partial explicit: named knob wins, the other comes from the cache
+    cfg = resolve_sparse_config(d=512, r_max=44, block_rows=64,
+                                slot_unroll=None, backend="cpu")
+    assert cfg["block_rows"] == 64 and cfg["slot_unroll"] == 2
+    # miss -> defaults
+    cfg = resolve_sparse_config(d=999, r_max=44, block_rows=None,
+                                slot_unroll=None, backend="cpu")
+    assert cfg == {**DEFAULT_CONFIG, "source": "default"}
+
+
+def _sparse_problem(nk=192, d=256):
+    from repro.core.losses import get_loss
+    from repro.data import sparse as sp
+
+    csr, y = sp.make_sparse_classification(nk, d, density=0.05, seed=1)
+    sh, yp, mk = sp.partition_sparse(csr, y, 1, seed=0)
+    shard = jax.tree.map(lambda a: a[0], sh)
+    return (shard, yp[0], jnp.zeros(nk), mk[0], jnp.zeros(d),
+            jax.random.PRNGKey(3), get_loss("hinge"), 0.01, nk, 1.0, nk)
+
+
+def test_dispatch_consults_cache_and_results_invariant(tmp_cache):
+    """The acceptance-criterion test: with a cache entry present, the
+    unconfigured ops dispatch resolves the cached launch config -- and
+    because both knobs preserve the visit order, the cached config's
+    results are bit-for-bit those of the default."""
+    args = _sparse_problem()
+    shard = args[0]
+    r_default = ops.sparse_local_sdca_block(*args)
+    assert ops.LAST_SPARSE_CONFIG["source"] == "default"
+    assert ops.LAST_SPARSE_CONFIG["block_rows"] == 128
+
+    get_cache().record(
+        "sparse_sdca", jax.default_backend(), d=256,
+        r_max=int(shard.cols.shape[1]), density=0.05,
+        config={"block_rows": 32, "slot_unroll": 2}, wall_s=1e-3)
+    r_cached = ops.sparse_local_sdca_block(*args)
+    assert ops.LAST_SPARSE_CONFIG == {"block_rows": 32, "slot_unroll": 2,
+                                      "source": "cache"}
+    assert jnp.array_equal(r_cached.dalpha, r_default.dalpha)
+    assert jnp.array_equal(r_cached.du, r_default.du)
+
+    r_exp = ops.sparse_local_sdca_block(*args, block_rows=64, slot_unroll=1)
+    assert ops.LAST_SPARSE_CONFIG["source"] == "explicit"
+    assert ops.LAST_SPARSE_CONFIG["block_rows"] == 64
+    assert jnp.array_equal(r_exp.dalpha, r_default.dalpha)
+
+
+# ----------------------------------------------------------------------------
+# regression detector
+# ----------------------------------------------------------------------------
+
+def test_regress_verdicts_synthetic():
+    base = {"a_s": 1.0, "b_s": 1.0, "c_s": 1.0}
+    rows = regress.compare({"a_s": 0.4, "b_s": 1.2, "c_s": 1.6, "d_s": 2.0},
+                           base, noise_band=0.5)
+    verdicts = {r["metric"]: r["verdict"] for r in rows}
+    assert verdicts == {"a_s": "improvement", "b_s": "within-noise",
+                        "c_s": "regression", "d_s": "missing-baseline"}
+    assert regress.overall(rows) == "regression"
+    assert regress.overall([r for r in rows
+                            if r["verdict"] != "regression"]) \
+        == "missing-baseline"
+    assert regress.overall(regress.compare({"a_s": 1.0}, base)) \
+        == "within-noise"
+    assert regress.overall([]) == "within-noise"
+
+
+def _write_history(path, metrics):
+    path.write_text(json.dumps(
+        {"ts": "2026-01-01T00:00:00", "name": "autotune",
+         "payload": {"metrics": metrics}}) + "\n")
+
+
+def test_regress_cli_end_to_end(tmp_path):
+    hist = tmp_path / "autotune.jsonl"
+    baseline = tmp_path / "baseline.json"
+    argv = ["--history", str(hist), "--baseline", str(baseline)]
+
+    # no history yet: hard exit 2, report-only exit 0
+    assert regress.main(argv) == 2
+    assert regress.main(argv + ["--report-only"]) == 0
+
+    _write_history(hist, {"sparse_sdca_wall_s": 1.0})
+    assert regress.main(argv + ["--update-baseline"]) == 0
+    assert json.loads(baseline.read_text())["metrics"] \
+        == {"sparse_sdca_wall_s": 1.0}
+    assert regress.main(argv) == 0                      # 1.0x: within noise
+
+    _write_history(hist, {"sparse_sdca_wall_s": 2.0})   # 2x slowdown
+    assert regress.main(argv) == 1
+    assert regress.main(argv + ["--report-only"]) == 0
+    assert regress.main(argv + ["--noise-band", "1.5"]) == 0  # wider band
+
+
+# ----------------------------------------------------------------------------
+# round-profile stream: sink, validate, cross-schema pairing, dashboard
+# ----------------------------------------------------------------------------
+
+_STATS = {"flops": 1000.0, "dot_flops": 600.0, "hbm_bytes": 4096.0,
+          "collective_wire_bytes": 512.0}
+
+
+def test_round_profile_sink_pairs_with_records(tmp_path):
+    mpath, ppath = tmp_path / "run.jsonl", tmp_path / "run.prof.jsonl"
+    from repro.obs import EventBus, JsonlSink
+    bus = EventBus()
+    bus.subscribe(JsonlSink(mpath))
+    sink = bus.subscribe(RoundProfileSink(ppath, _STATS, hw=CPU_HOST,
+                                          shape={"K": 4}, compile_s=0.5))
+    for rg in (2, 4):
+        bus.emit(make_record(round=rg, round_global=rg, rounds_in_record=2,
+                             execute_s=2e-3))
+    bus.close()
+
+    assert len(sink.profiles) == 2
+    p = sink.profiles[0]
+    assert p.kind == "round" and p.round_global == 2
+    assert p.wall_s == pytest.approx(1e-3)       # execute_s / rounds covered
+    assert p.compile_s == 0.5 and sink.profiles[1].compile_s == 0.0
+    assert p.flops == 1000.0 and p.collective_bytes == 512.0
+
+    assert validate_file(str(mpath), require_timing=True) == 4
+    assert validate_file(str(ppath), require_timing=True) == 4
+    assert check_cross(str(mpath), str(ppath)) == 2
+
+
+def test_validate_cross_schema_orphan_fails(tmp_path):
+    mpath, ppath = tmp_path / "run.jsonl", tmp_path / "run.prof.jsonl"
+    mpath.write_text(json.dumps(make_record(round=2).to_dict()) + "\n")
+    prof = build_profile("cocoa_round", _STATS, 1e-3, kind="round",
+                         backend="cpu", hw=CPU_HOST, round_global=9)
+    ppath.write_text(json.dumps(prof.to_dict()) + "\n")
+    assert validate_file(str(ppath)) == 9
+    with pytest.raises(ValueError, match=r"\[9\] have no matching"):
+        check_cross(str(mpath), str(ppath))
+
+
+def test_validate_file_sniffs_kernel_profiles(tmp_path):
+    p = tmp_path / "k.jsonl"
+    p.write_text(json.dumps(_good_profile_dict()) + "\n")
+    assert validate_file(str(p)) == 1            # kernel count, no rounds
+    bad = _good_profile_dict()
+    bad["flops"] = "fast"
+    p.write_text(json.dumps(bad) + "\n")
+    with pytest.raises(ValueError, match="flops"):
+        validate_file(str(p))
+
+
+class _ProfSource:
+    def __init__(self, profiles):
+        self.profiles = profiles
+
+
+def _round_profile(rg):
+    return build_profile("cocoa_round", _STATS, 1e-3, kind="round",
+                         backend="cpu", hw=CPU_HOST, round_global=rg)
+
+
+def test_dashboard_compute_row_piped_and_tty():
+    prof = _round_profile(2)
+    out = io.StringIO()
+    db = Dashboard(out=out, prof_source=_ProfSource([prof]))
+    db.emit(make_record(round=2, round_global=2))
+    line = out.getvalue()
+    assert "flops_frac=" in line and "dominant=" in line
+
+    from test_obs import _FakeTty
+    tty = _FakeTty()
+    db = Dashboard(out=tty, prof_source=_ProfSource([prof]))
+    db.emit(make_record(round=2, round_global=2))
+    assert "comp " in tty.getvalue() and "% peak" in tty.getvalue()
+    db.close()
+
+    # profile for a different round: the row is withheld, not mispaired
+    out = io.StringIO()
+    db = Dashboard(out=out, prof_source=_ProfSource([_round_profile(9)]))
+    db.emit(make_record(round=2, round_global=2))
+    assert "flops_frac" not in out.getvalue()
+
+    # no prof source: unchanged plain line
+    out = io.StringIO()
+    Dashboard(out=out).emit(make_record(round=2, round_global=2))
+    assert "flops_frac" not in out.getvalue()
+
+
+# ----------------------------------------------------------------------------
+# slot unroll: order-preserving by construction
+# ----------------------------------------------------------------------------
+
+def test_slot_unroll_bitwise_parity():
+    import functools
+
+    from repro.core.losses import get_loss
+    from repro.kernels.sparse_sdca import sparse_local_sdca
+
+    args = _sparse_problem(nk=128, d=256)
+    shard, yp, a0, m, w = args[0], args[1], args[2], args[3], args[4]
+    base = None
+    for un in (1, 2, 4):
+        fn = functools.partial(sparse_local_sdca, loss=get_loss("hinge"),
+                               n_passes=1, block_rows=64, slot_unroll=un,
+                               interpret=True)
+        da, du = fn(shard.cols, shard.vals, yp, a0, m, w, jnp.float32(0.1))
+        if base is None:
+            base = (da, du)
+        else:
+            assert jnp.array_equal(da, base[0])
+            assert jnp.array_equal(du, base[1])
