@@ -130,16 +130,21 @@ def autotune_sweep(quick=True, nk=512, d=512, density=0.05):
     the winner, and profile it.
 
     Sweeps block_rows (ELL block shape) x slot_unroll (slot-walk unroll
-    depth) -- both visit-order-preserving, so every config returns
-    bit-for-bit identical results and only time differs. The fenced-
-    wall-clock winner is recorded into the autotune cache that
-    `kernels.ops` dispatch consults (per (kernel, backend, d, r_max,
-    density)), then the winning config and the jnp sparse solver are run
-    through `repro.obs.prof.profile_fn`, pairing measured wall-clock
-    with the analytic HLO cost (flops / HBM bytes / roofline fractions).
+    depth) x buffer_depth (DMA prefetch ring: 1 = single-buffered via
+    the implicit Pallas pipeline, 2/4 = explicit double/quad buffering)
+    -- all visit-order-preserving, so every config returns bit-for-bit
+    identical results and only time differs. The fenced-wall-clock
+    winner is recorded into the autotune cache that `kernels.ops`
+    dispatch consults (per (kernel, backend, d, r_max, density)), then
+    the winning (block_rows, slot_unroll) is profiled at *every* swept
+    depth through `repro.obs.prof.profile_fn` -- each depth's
+    KernelProfile states the DMA-vs-compute split (t_memory_s vs
+    t_compute_s, the overlap the multi-buffering is there to win) next
+    to the measured wall -- plus the jnp sparse solver for reference.
     The whole run lands in `results/autotune.json` *and* appends to
     `results/history/autotune.jsonl` -- the trajectory the
-    `repro.obs.regress` gate compares against its pinned baseline."""
+    `repro.obs.regress` gate compares against its pinned baseline
+    (per-depth `sparse_sdca_depth<k>_wall_s` metrics included)."""
     import functools
 
     from repro.data import sparse as sp
@@ -163,57 +168,75 @@ def autotune_sweep(quick=True, nk=512, d=512, density=0.05):
     brs = [b for b in ((64, 128) if quick else (32, 64, 128, 256))
            if nk % b == 0]
     uns = (1, 2) if quick else (1, 2, 4)
+    depths = (1, 2) if quick else (1, 2, 4)
     iters = 2 if quick else 5
+    knobs = ("block_rows", "slot_unroll", "buffer_depth")
     trials = []
     for br in brs:
         for un in uns:
-            fn = jax.jit(functools.partial(
-                sparse_local_sdca, loss=loss, n_passes=1, block_rows=br,
-                slot_unroll=un, interpret=interpret))
-            s = fenced_time(fn, cols, vals, yp[0], a0, m, w, scale,
-                            iters=iters, warmup=1)
-            trials.append(dict(block_rows=br, slot_unroll=un,
-                               wall_s=float(s)))
-            print(f"kernel,autotune,block_rows={br},slot_unroll={un},"
-                  f"wall_s={s:.4f}")
+            for dp in depths:
+                fn = jax.jit(functools.partial(
+                    sparse_local_sdca, loss=loss, n_passes=1, block_rows=br,
+                    slot_unroll=un, buffer_depth=dp, interpret=interpret))
+                s = fenced_time(fn, cols, vals, yp[0], a0, m, w, scale,
+                                iters=iters, warmup=1)
+                trials.append(dict(block_rows=br, slot_unroll=un,
+                                   buffer_depth=dp, wall_s=float(s)))
+                print(f"kernel,autotune,block_rows={br},slot_unroll={un},"
+                      f"buffer_depth={dp},wall_s={s:.4f}")
     best = min(trials, key=lambda t: t["wall_s"])
     cache = get_cache()
     cache.record("sparse_sdca", backend, d=d, r_max=r_max, density=density,
-                 config={k: best[k] for k in ("block_rows", "slot_unroll")},
-                 wall_s=best["wall_s"])
+                 config={k: best[k] for k in knobs}, wall_s=best["wall_s"])
     print(f"kernel,autotune,winner=block_rows={best['block_rows']}/"
-          f"slot_unroll={best['slot_unroll']},cache={cache.path}")
+          f"slot_unroll={best['slot_unroll']}/"
+          f"buffer_depth={best['buffer_depth']},cache={cache.path}")
 
-    # profile the winner + the jnp sparse solver: measured wall next to
-    # the analytic HLO cost on the active HardwareSpec
+    # profile the winning (block_rows, slot_unroll) at every swept depth
+    # -- the per-depth DMA(t_memory)-vs-compute split -- plus the jnp
+    # sparse solver: measured wall next to the analytic HLO cost on the
+    # active HardwareSpec
     hw = default_hardware()
-    win = functools.partial(sparse_local_sdca, loss=loss, n_passes=1,
-                            block_rows=best["block_rows"],
-                            slot_unroll=best["slot_unroll"],
-                            interpret=interpret)
-    p_kern = profile_fn(win, cols, vals, yp[0], a0, m, w, scale,
-                        name="sparse_sdca", hw=hw, iters=iters,
-                        shape=dict(nk=nk, d=d, r_max=r_max, density=density,
-                                   **{k: best[k] for k in
-                                      ("block_rows", "slot_unroll")}))
+    depth_profiles = []
+    for dp in depths:
+        fn = functools.partial(sparse_local_sdca, loss=loss, n_passes=1,
+                               block_rows=best["block_rows"],
+                               slot_unroll=best["slot_unroll"],
+                               buffer_depth=dp, interpret=interpret)
+        p = profile_fn(fn, cols, vals, yp[0], a0, m, w, scale,
+                       name=f"sparse_sdca_depth{dp}", hw=hw, iters=iters,
+                       shape=dict(nk=nk, d=d, r_max=r_max, density=density,
+                                  block_rows=best["block_rows"],
+                                  slot_unroll=best["slot_unroll"],
+                                  buffer_depth=dp))
+        depth_profiles.append(p)
+        overlap = (p.t_memory_s + p.t_compute_s) / max(p.bound_s, 1e-30)
+        print(f"kernel,profile,{p.name},wall_s={p.wall_s:.4f},"
+              f"dma_s={p.t_memory_s:.3g},compute_s={p.t_compute_s:.3g},"
+              f"overlap_headroom={overlap:.2f}x,dominant={p.dominant},"
+              f"model_vs_measured={p.model_vs_measured:.2f}")
+    p_kern = depth_profiles[depths.index(best["buffer_depth"])]
     H = nk
     p_jnp = profile_fn(
         lambda r: local_sdca_sparse(shard, yp[0], a0, m, w, r, loss, 1e-3,
                                     float(nk), 1.0, H),
         jax.random.PRNGKey(0), name="sdca_sparse_jnp", hw=hw, iters=iters,
         shape=dict(nk=nk, d=d, r_max=r_max, density=density, H=H))
-    for p in (p_kern, p_jnp):
-        print(f"kernel,profile,{p.name},wall_s={p.wall_s:.4f},"
-              f"flops={p.flops:.3g},hbm_bytes={p.hbm_bytes:.3g},"
-              f"dominant={p.dominant},model_vs_measured="
-              f"{p.model_vs_measured:.2f}")
+    print(f"kernel,profile,{p_jnp.name},wall_s={p_jnp.wall_s:.4f},"
+          f"flops={p_jnp.flops:.3g},hbm_bytes={p_jnp.hbm_bytes:.3g},"
+          f"dominant={p_jnp.dominant},model_vs_measured="
+          f"{p_jnp.model_vs_measured:.2f}")
 
+    metrics = {"sparse_sdca_wall_s": p_kern.wall_s,
+               "sdca_sparse_jnp_wall_s": p_jnp.wall_s}
+    for p in depth_profiles:
+        metrics[f"{p.name}_wall_s"] = p.wall_s
     payload = dict(backend=backend, hw=hw.name, nk=nk, d=d, density=density,
                    r_max=r_max, trials=trials, winner=best,
                    cache_path=str(cache.path),
-                   profiles=[p_kern.to_dict(), p_jnp.to_dict()],
-                   metrics={"sparse_sdca_wall_s": p_kern.wall_s,
-                            "sdca_sparse_jnp_wall_s": p_jnp.wall_s})
+                   profiles=[p.to_dict() for p in depth_profiles]
+                   + [p_jnp.to_dict()],
+                   metrics=metrics)
     save("autotune", payload)      # snapshot + history/autotune.jsonl
     return payload
 

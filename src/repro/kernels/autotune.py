@@ -1,14 +1,19 @@
 """Persisted autotune cache for the Pallas kernel launch configs.
 
 `kernel_bench --autotune` sweeps the sparse SDCA kernel's launch knobs
-(ELL block shape `block_rows`, slot-loop unroll depth `slot_unroll`) over
-a grid of problem shapes and records the fenced-wall-clock winner per
-(kernel, backend, d, r_max, density) here. The dispatch wrappers in
-`kernels.ops` consult the cache at call time when the caller leaves the
-knobs unset -- an explicitly passed config always wins, and a cache miss
-falls back to the static defaults, so the cache is a pure go-faster
-overlay: removing the file changes performance, never results (both
-knobs are visit-order-preserving, see `sparse_sdca`).
+(ELL block shape `block_rows`, slot-loop unroll depth `slot_unroll`, DMA
+prefetch ring depth `buffer_depth`) over a grid of problem shapes and
+records the fenced-wall-clock winner per (kernel, backend, d, r_max,
+density) here. The dispatch wrappers in `kernels.ops` consult the cache
+at call time when the caller leaves the knobs unset -- an explicitly
+passed config always wins, and a cache miss falls back to the static
+defaults, so the cache is a pure go-faster overlay: removing the file
+changes performance, never results (all three knobs are
+visit-order-preserving, see `sparse_sdca`).
+
+Schema v2 added `buffer_depth` to the config; v1 files (and v1 entries
+generally) read back with `buffer_depth=1` -- the single-buffered kernel
+they were tuned for -- so an old checked-in cache keeps working.
 
 Keying: d / r_max / backend are static at dispatch time (they are array
 *shapes*); density is not (nnz is a traced value under jit), so lookup
@@ -29,12 +34,13 @@ import pathlib
 import time
 from typing import Dict, List, Optional
 
-AUTOTUNE_SCHEMA_VERSION = 1
+AUTOTUNE_SCHEMA_VERSION = 2
+_READABLE_SCHEMAS = (1, 2)          # v1 entries read with buffer_depth=1
 
 _DEFAULT_PATH = pathlib.Path(__file__).with_name("autotune_cache.json")
 
 # knob defaults used on a cache miss (also the pre-autotune behavior)
-DEFAULT_CONFIG = {"block_rows": 128, "slot_unroll": 1}
+DEFAULT_CONFIG = {"block_rows": 128, "slot_unroll": 1, "buffer_depth": 1}
 
 _CONFIG_KEYS = tuple(sorted(DEFAULT_CONFIG))
 
@@ -64,8 +70,12 @@ class AutotuneCache:
         self._entries = []
         try:
             payload = json.loads(self.path.read_text())
-            if payload.get("schema") == AUTOTUNE_SCHEMA_VERSION:
+            if payload.get("schema") in _READABLE_SCHEMAS:
                 self._entries = list(payload.get("entries", []))
+                for e in self._entries:
+                    # pre-buffer_depth (v1) entries were tuned for the
+                    # single-buffered kernel: read them as depth 1
+                    e.setdefault("config", {}).setdefault("buffer_depth", 1)
         except (OSError, ValueError):
             pass
         return self._entries
@@ -89,7 +99,8 @@ class AutotuneCache:
         entry = {
             "kernel": kernel, "backend": backend, "d": int(d),
             "r_max": int(r_max), "density": round(float(density), 6),
-            "config": {k: int(config[k]) for k in _CONFIG_KEYS},
+            "config": {k: int(config.get(k, DEFAULT_CONFIG[k]))
+                       for k in _CONFIG_KEYS},
             "wall_s": float(wall_s),
             "written_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
         }
@@ -145,27 +156,51 @@ def reset_cache() -> None:
     _CACHE = None
 
 
+def _largest_divisor_leq(n: int, k: int) -> int:
+    """Largest divisor of n that is <= k (>= 1)."""
+    k = max(1, min(int(k), int(n)))
+    while k > 1 and n % k:
+        k -= 1
+    return k
+
+
 def resolve_sparse_config(*, d: int, r_max: int,
                           block_rows: Optional[int],
                           slot_unroll: Optional[int],
-                          backend: Optional[str] = None) -> Dict:
+                          buffer_depth: Optional[int] = None,
+                          backend: Optional[str] = None,
+                          r_eff: Optional[int] = None) -> Dict:
     """The dispatch-time merge: explicit knob > cache hit > default.
 
-    Returns {"block_rows", "slot_unroll", "source"} where source is
-    "explicit" | "cache" | "default" (for observability -- `ops` exposes
-    the last resolution as `LAST_SPARSE_CONFIG`)."""
-    if block_rows is not None and slot_unroll is not None:
-        return {"block_rows": int(block_rows),
-                "slot_unroll": int(slot_unroll), "source": "explicit"}
-    if backend is None:
-        import jax
-        backend = jax.default_backend()
-    hit = get_cache().lookup("sparse_sdca", backend, d=d, r_max=r_max)
-    base = dict(hit) if hit else dict(DEFAULT_CONFIG)
-    base["source"] = "cache" if hit else "default"
-    # a partially explicit call still wins on the knobs it names
-    if block_rows is not None:
-        base["block_rows"] = int(block_rows)
-    if slot_unroll is not None:
-        base["slot_unroll"] = int(slot_unroll)
+    Returns {"block_rows", "slot_unroll", "buffer_depth", "source"} where
+    source names the provenance per knob set: "explicit" (all knobs
+    named), "cache" / "default" (none named), or the mixed
+    "explicit+cache" / "explicit+default" (for observability -- `ops`
+    exposes the last resolution, post-clamp, as `LAST_SPARSE_CONFIG`).
+
+    `slot_unroll` is rounded *down to a divisor* of the slot-walk trip
+    count `r_eff` (the post-lane-padding r_max the kernel actually runs
+    -- defaults to `r_max`): `_unrolled_fori` silently falls back to the
+    rolled loop on a non-divisor, so without rounding a cached unroll=4
+    would be a reported-but-inactive no-op whenever r_eff is odd (every
+    CPU/interpret shard, where lane padding is 1). The returned config
+    is always the one the kernel executes."""
+    explicit = {k: v for k, v in (("block_rows", block_rows),
+                                  ("slot_unroll", slot_unroll),
+                                  ("buffer_depth", buffer_depth))
+                if v is not None}
+    if len(explicit) == len(DEFAULT_CONFIG):
+        base, source = {}, "explicit"
+    else:
+        if backend is None:
+            import jax
+            backend = jax.default_backend()
+        hit = get_cache().lookup("sparse_sdca", backend, d=d, r_max=r_max)
+        base = dict(hit) if hit else dict(DEFAULT_CONFIG)
+        filled = "cache" if hit else "default"
+        source = f"explicit+{filled}" if explicit else filled
+    base.update({k: int(v) for k, v in explicit.items()})
+    base["slot_unroll"] = _largest_divisor_leq(
+        r_eff if r_eff is not None else r_max, base["slot_unroll"])
+    base["source"] = source
     return base

@@ -24,10 +24,14 @@ from .autotune import resolve_sparse_config
 from .local_sdca import local_sdca_pallas
 from .sparse_sdca import sparse_local_sdca
 
-# last launch config the sparse dispatch resolved (observability hook for
-# tests and the bench harness): {"block_rows", "slot_unroll", "source"}.
-# Set at *trace* time -- a jit cache hit reuses the traced kernel without
-# updating this, so read it right after a fresh-shape call.
+# last launch config the sparse dispatch actually launched with
+# (observability hook for tests and the bench harness): {"block_rows",
+# "slot_unroll", "buffer_depth", "source", "clamped"}. block_rows is the
+# *effective* post-clamp value (small shards clamp the resolved block
+# down to the padded nk; "clamped" flags when that happened), so the
+# reported config is always one the kernel ran with. Set at *trace*
+# time -- a jit cache hit reuses the traced kernel without updating
+# this, so read it right after a fresh-shape call.
 LAST_SPARSE_CONFIG = None
 
 
@@ -106,6 +110,7 @@ def sparse_local_sdca_block(shard, y_k, alpha_k, mask_k, v, rng, loss: Loss,
                             lam: float, n, sigma_p: float, H: int,
                             *, block_rows: int | None = None,
                             slot_unroll: int | None = None,
+                            buffer_depth: int | None = None,
                             interpret: bool | None = None,
                             model_axis=None,
                             reg: Regularizer = L2) -> SDCAResult:
@@ -136,12 +141,23 @@ def sparse_local_sdca_block(shard, y_k, alpha_k, mask_k, v, rng, loss: Loss,
     d = v.shape[0]
     # launch config: explicit kwargs win, else the persisted autotune
     # cache (kernel_bench --autotune), else the static defaults -- keyed
-    # on static shapes only (d, r_max, backend), since nnz is traced here
+    # on static shapes only (d, r_max, backend), since nnz is traced
+    # here. r_eff is the post-lane-padding slot count the kernel's
+    # unrolled walk actually runs, so the resolved slot_unroll divides it
+    lane = 128 if jax.default_backend() == "tpu" else 1
+    r_eff = r_max + (-r_max) % lane
     cfg = resolve_sparse_config(d=d, r_max=r_max, block_rows=block_rows,
-                                slot_unroll=slot_unroll)
+                                slot_unroll=slot_unroll,
+                                buffer_depth=buffer_depth, r_eff=r_eff)
+    # clamp the block to the (padded) shard *before* reporting: on small
+    # shards the kernel never runs with the resolved block_rows, and the
+    # observability hook must state the launch that actually happened
+    br = min(cfg["block_rows"], max(8, nk))
     global LAST_SPARSE_CONFIG
-    LAST_SPARSE_CONFIG = cfg
-    block_rows, slot_unroll = cfg["block_rows"], cfg["slot_unroll"]
+    LAST_SPARSE_CONFIG = {**cfg, "block_rows": br,
+                          "clamped": br != cfg["block_rows"]}
+    slot_unroll = cfg["slot_unroll"]
+    depth = cfg["buffer_depth"]
     n_passes = max(1, int(round(H / max(nk, 1))))
 
     perm = jax.random.permutation(rng, nk)
@@ -151,8 +167,6 @@ def sparse_local_sdca_block(shard, y_k, alpha_k, mask_k, v, rng, loss: Loss,
     ap = jnp.take(alpha_k, perm)
     mp = jnp.take(mask_k, perm)
 
-    br = min(block_rows, max(8, nk))
-    lane = 128 if jax.default_backend() == "tpu" else 1
     cp = _pad_to(_pad_to(cp, br, 0), lane, 1)
     vp = _pad_to(_pad_to(vp, br, 0), lane, 1)
     yp = _pad_to(yp, br, 0)
@@ -164,6 +178,7 @@ def sparse_local_sdca_block(shard, y_k, alpha_k, mask_k, v, rng, loss: Loss,
     da_p, du_p = sparse_local_sdca(cp, vp, yp, ap, mp, wp, scale, loss=loss,
                                    n_passes=n_passes, block_rows=br,
                                    slot_unroll=slot_unroll,
+                                   buffer_depth=depth,
                                    interpret=interpret)
     dalpha = jnp.zeros(nk, da_p.dtype).at[perm].set(da_p[:nk])
     return SDCAResult(dalpha.astype(vals.dtype), du_p[:d].astype(v.dtype),

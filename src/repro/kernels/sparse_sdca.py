@@ -25,11 +25,24 @@ Structure mirrors the dense kernel exactly:
     with the dense path (the wrapper in ops.py applies the per-call row
     permutation; `_check_loss` rejects logistic).
 
-VMEM budget (f32): B*r_max*8 bytes (cols+vals tile) + nk + 2*d + 3*B
-floats -- at rcv1_sparse production shapes (d 47k, r_max ~128) well under
-1 MiB, vs ~24 MiB for the dense tile at the same d. On real TPUs r_max and
-d should be multiples of 128 (ops.py pads); interpret=True is
-shape-agnostic.
+Pipelining (`buffer_depth`): the coordinate walk of block b only touches
+VMEM (u, dalpha, and the already-resident (B, r_max) cols/vals tiles), so
+the HBM fetch of block b+1 can hide entirely behind it. `buffer_depth=1`
+is the single-buffered kernel above, with the tiles delivered by the
+implicit Pallas pipeline. `buffer_depth>=2` switches to an explicitly
+multi-buffered kernel: cols/vals stay in HBM (`pltpu.ANY`), a
+(depth, B, r_max) VMEM scratch ring holds in-flight tiles, and
+`pltpu.make_async_copy` DMAs prefetch block b+depth-1 while block b is
+walked (double buffering at depth 2 keeps one fetch in flight, quad at
+depth 4 keeps three -- deeper rings absorb burstier DMA latency). Both
+kernels run the identical `_block_walk` on identical tile values, so
+every depth is bit-for-bit the depth-1 kernel, which the oracle pins.
+
+VMEM budget (f32): depth*B*r_max*8 bytes (cols+vals tile ring) + nk +
+2*d + 3*B floats -- at rcv1_sparse production shapes (d 47k, r_max ~128)
+well under 1 MiB even quad-buffered, vs ~24 MiB for the dense tile at
+the same d. On real TPUs r_max and d should be multiples of 128 (ops.py
+pads); interpret=True is shape-agnostic.
 
 Placement: `w` here is whatever shard the caller hands in -- the kernel's
 gather-dot/scatter-axpy are coordinate-frame-agnostic, so under the 2-D
@@ -57,9 +70,10 @@ def _unrolled_fori(n: int, unroll: int, body, init):
     """`fori_loop(0, n, body, init)` with `unroll` consecutive iterations
     per loop step -- same visit order, same carry chain, so results are
     bit-for-bit identical to the rolled loop for any unroll that divides
-    n (otherwise falls back to rolled). This is the sparse kernel's
-    "buffer depth" tuning knob: deeper unroll trades instruction-stream
-    size for fewer loop-carried branches on the r_max slot walk."""
+    n (otherwise falls back to rolled -- `autotune.resolve_sparse_config`
+    rounds dispatch-time unrolls down to a divisor so the fallback never
+    silently voids a cached config). Deeper unroll trades instruction-
+    stream size for fewer loop-carried branches on the r_max slot walk."""
     if unroll <= 1 or n % unroll != 0:
         return jax.lax.fori_loop(0, n, body, init)
 
@@ -72,31 +86,14 @@ def _unrolled_fori(n: int, unroll: int, body, init):
     return jax.lax.fori_loop(0, n // unroll, block, init)
 
 
-def _sparse_sdca_kernel(scale_ref,                     # SMEM (1, 1)
-                        c_ref, v_ref,                  # VMEM (B, r_max) tiles
-                        y_ref, a_ref, m_ref,           # VMEM (1, B) tiles
-                        w_ref,                         # VMEM (1, d)
-                        da_out, du_out,                # VMEM (1, nk), (1, d)
-                        da_scr, u_scr,                 # VMEM scratch
-                        *, loss: Loss, block_rows: int, nk: int, r_max: int,
-                        slot_unroll: int = 1):
-    p = pl.program_id(0)
-    b = pl.program_id(1)
-    nb = pl.num_programs(1)
-    npass = pl.num_programs(0)
-    scale = scale_ref[0, 0]
-
-    @pl.when(jnp.logical_and(p == 0, b == 0))
-    def _init():
-        da_scr[...] = jnp.zeros_like(da_scr)
-        u_scr[...] = w_ref[...]
-
-    c_blk = c_ref[...]                                # (block_rows, r_max)
-    v_blk = v_ref[...]
-    y_blk = y_ref[...]                                # (1, block_rows)
-    m_blk = m_ref[...]
-    a_blk = a_ref[...]
-    base = b * block_rows
+def _block_walk(c_blk, v_blk, y_blk, a_blk, m_blk, base, da_scr, u_scr,
+                scale, *, loss: Loss, block_rows: int, r_max: int,
+                slot_unroll: int):
+    """The sequential coordinate walk of one (block_rows, r_max) ELL tile
+    against the persistent u/dalpha scratch. Shared verbatim by the
+    single-buffered and the pipelined kernels -- identical tile values in,
+    bit-for-bit identical scratch updates out, whatever delivered the
+    tile (implicit Pallas pipeline or explicit DMA ring)."""
 
     def step(i, _):
         ci = jax.lax.dynamic_index_in_dim(c_blk, i, axis=0, keepdims=False)
@@ -135,6 +132,99 @@ def _sparse_sdca_kernel(scale_ref,                     # SMEM (1, 1)
 
     jax.lax.fori_loop(0, block_rows, step, 0)
 
+
+def _sparse_sdca_kernel(scale_ref,                     # SMEM (1, 1)
+                        c_ref, v_ref,                  # VMEM (B, r_max) tiles
+                        y_ref, a_ref, m_ref,           # VMEM (1, B) tiles
+                        w_ref,                         # VMEM (1, d)
+                        da_out, du_out,                # VMEM (1, nk), (1, d)
+                        da_scr, u_scr,                 # VMEM scratch
+                        *, loss: Loss, block_rows: int, nk: int, r_max: int,
+                        slot_unroll: int = 1):
+    """Single-buffered (buffer_depth=1) kernel: cols/vals tiles arrive via
+    the implicit Pallas pipeline, one block resident at a time."""
+    p = pl.program_id(0)
+    b = pl.program_id(1)
+    nb = pl.num_programs(1)
+    npass = pl.num_programs(0)
+    scale = scale_ref[0, 0]
+
+    @pl.when(jnp.logical_and(p == 0, b == 0))
+    def _init():
+        da_scr[...] = jnp.zeros_like(da_scr)
+        u_scr[...] = w_ref[...]
+
+    _block_walk(c_ref[...], v_ref[...], y_ref[...], a_ref[...], m_ref[...],
+                b * block_rows, da_scr, u_scr, scale, loss=loss,
+                block_rows=block_rows, r_max=r_max, slot_unroll=slot_unroll)
+
+    @pl.when(jnp.logical_and(p == npass - 1, b == nb - 1))
+    def _emit():
+        da_out[...] = da_scr[...]
+        du_out[...] = u_scr[...] - w_ref[...]
+
+
+def _sparse_sdca_pipelined_kernel(scale_ref,           # SMEM (1, 1)
+                                  c_hbm, v_hbm,        # ANY (nk, r_max)
+                                  y_ref, a_ref, m_ref,  # VMEM (1, B) tiles
+                                  w_ref,               # VMEM (1, d)
+                                  da_out, du_out,      # VMEM (1, nk), (1, d)
+                                  da_scr, u_scr,       # VMEM scratch
+                                  c_buf, v_buf,        # VMEM (depth, B, r_max)
+                                  c_sem, v_sem,        # DMA sems (depth,)
+                                  *, loss: Loss, block_rows: int, nk: int,
+                                  r_max: int, slot_unroll: int,
+                                  buffer_depth: int):
+    """Explicitly multi-buffered kernel: cols/vals stay in HBM and a
+    depth-slot VMEM ring is fed by `make_async_copy` DMAs.
+
+    Chunk c of the flattened schedule (c = pass * nb + block) lands in
+    ring slot c % depth. The warm-up step starts chunks 0..depth-2; every
+    step then starts chunk g+depth-1 (whose slot held chunk g-1, consumed
+    last step), waits on chunk g, and walks the resident tile -- so up to
+    depth-1 fetches are in flight behind each block's compute. The walk
+    itself is `_block_walk`, identical to the single-buffered kernel."""
+    p = pl.program_id(0)
+    b = pl.program_id(1)
+    nb = pl.num_programs(1)
+    npass = pl.num_programs(0)
+    total = npass * nb
+    g = p * nb + b                                     # flattened chunk id
+    scale = scale_ref[0, 0]
+
+    def dma(chunk, slot):
+        blk = jax.lax.rem(jnp.asarray(chunk, jnp.int32), jnp.int32(nb))
+        rows = pl.ds(blk * block_rows, block_rows)
+        return (pltpu.make_async_copy(c_hbm.at[rows, :], c_buf.at[slot],
+                                      c_sem.at[slot]),
+                pltpu.make_async_copy(v_hbm.at[rows, :], v_buf.at[slot],
+                                      v_sem.at[slot]))
+
+    def start(chunk):
+        slot = jax.lax.rem(jnp.asarray(chunk, jnp.int32),
+                           jnp.int32(buffer_depth))
+        for d_ in dma(chunk, slot):
+            d_.start()
+
+    @pl.when(g == 0)
+    def _init():
+        da_scr[...] = jnp.zeros_like(da_scr)
+        u_scr[...] = w_ref[...]
+        for c in range(min(buffer_depth - 1, total)):  # warm the ring
+            start(c)
+
+    @pl.when(g + buffer_depth - 1 < total)
+    def _prefetch():
+        start(g + buffer_depth - 1)
+
+    slot = jax.lax.rem(jnp.asarray(g, jnp.int32), jnp.int32(buffer_depth))
+    for d_ in dma(g, slot):
+        d_.wait()
+
+    _block_walk(c_buf[slot], v_buf[slot], y_ref[...], a_ref[...], m_ref[...],
+                b * block_rows, da_scr, u_scr, scale, loss=loss,
+                block_rows=block_rows, r_max=r_max, slot_unroll=slot_unroll)
+
     @pl.when(jnp.logical_and(p == npass - 1, b == nb - 1))
     def _emit():
         da_out[...] = da_scr[...]
@@ -145,6 +235,7 @@ def sparse_local_sdca(cols: jnp.ndarray, vals: jnp.ndarray, y: jnp.ndarray,
                       alpha: jnp.ndarray, mask: jnp.ndarray, w: jnp.ndarray,
                       scale: jnp.ndarray, *, loss: Loss, n_passes: int = 1,
                       block_rows: int = 128, slot_unroll: int = 1,
+                      buffer_depth: int = 1,
                       vmem_limit_mb: int | None = None,
                       interpret: bool | None = None):
     """Run `n_passes` block-sequential SDCA passes over one ELL shard.
@@ -154,25 +245,27 @@ def sparse_local_sdca(cols: jnp.ndarray, vals: jnp.ndarray, y: jnp.ndarray,
     Returns (dalpha (nk,), du (d,)) with du = scale * A_[k] dalpha.
     nk must be divisible by block_rows (ops.py pads).
 
-    `block_rows` and `slot_unroll` are the autotune knobs (`kernel_bench
-    --autotune`): both preserve the sequential visit order exactly, so
-    any setting returns bit-for-bit identical results. `vmem_limit_mb`
-    raises Mosaic's VMEM ceiling on real TPUs (ignored in interpret
-    mode and on jax builds without `pltpu.TPUCompilerParams`).
+    `block_rows`, `slot_unroll`, and `buffer_depth` are the autotune
+    knobs (`kernel_bench --autotune`): all three preserve the sequential
+    visit order exactly, so any setting returns bit-for-bit identical
+    results. `buffer_depth=1` is the single-buffered kernel (tiles via
+    the implicit Pallas pipeline); >=2 runs the explicitly multi-buffered
+    kernel with a depth-slot DMA prefetch ring over the cols/vals tiles
+    (2 = double, 4 = quad buffering). `vmem_limit_mb` raises Mosaic's
+    VMEM ceiling on real TPUs (ignored in interpret mode and on jax
+    builds without `pltpu.TPUCompilerParams`).
     """
     _check_loss(loss)
     nk, r_max = cols.shape
     d = w.shape[0]
     assert nk % block_rows == 0, (nk, block_rows)
     assert vals.shape == (nk, r_max), (vals.shape, cols.shape)
+    assert buffer_depth >= 1, buffer_depth
     nb = nk // block_rows
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
 
     f32 = jnp.float32
-    kernel = functools.partial(_sparse_sdca_kernel, loss=loss,
-                               block_rows=block_rows, nk=nk, r_max=r_max,
-                               slot_unroll=slot_unroll)
     grid = (n_passes, nb)
     extra = {}
     if vmem_limit_mb and not interpret:
@@ -180,13 +273,41 @@ def sparse_local_sdca(cols: jnp.ndarray, vals: jnp.ndarray, y: jnp.ndarray,
         if params_cls is not None:
             extra["compiler_params"] = params_cls(
                 vmem_limit_bytes=int(vmem_limit_mb) * 2**20)
+
+    scratch = [
+        pltpu.VMEM((1, nk), f32),
+        pltpu.VMEM((1, d), f32),
+    ]
+    if buffer_depth == 1:
+        kernel = functools.partial(_sparse_sdca_kernel, loss=loss,
+                                   block_rows=block_rows, nk=nk,
+                                   r_max=r_max, slot_unroll=slot_unroll)
+        tile_specs = [
+            pl.BlockSpec((block_rows, r_max), lambda p, b: (b, 0)),  # cols
+            pl.BlockSpec((block_rows, r_max), lambda p, b: (b, 0)),  # vals
+        ]
+    else:
+        kernel = functools.partial(_sparse_sdca_pipelined_kernel, loss=loss,
+                                   block_rows=block_rows, nk=nk,
+                                   r_max=r_max, slot_unroll=slot_unroll,
+                                   buffer_depth=buffer_depth)
+        # cols/vals stay in HBM; the kernel DMAs tiles into a VMEM ring
+        tile_specs = [
+            pl.BlockSpec(memory_space=pltpu.ANY),                  # cols
+            pl.BlockSpec(memory_space=pltpu.ANY),                  # vals
+        ]
+        scratch += [
+            pltpu.VMEM((buffer_depth, block_rows, r_max), jnp.int32),
+            pltpu.VMEM((buffer_depth, block_rows, r_max), f32),
+            pltpu.SemaphoreType.DMA((buffer_depth,)),
+            pltpu.SemaphoreType.DMA((buffer_depth,)),
+        ]
     da, du = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),                 # scale
-            pl.BlockSpec((block_rows, r_max), lambda p, b: (b, 0)),  # cols
-            pl.BlockSpec((block_rows, r_max), lambda p, b: (b, 0)),  # vals
+            *tile_specs,
             pl.BlockSpec((1, block_rows), lambda p, b: (0, b)),    # y
             pl.BlockSpec((1, block_rows), lambda p, b: (0, b)),    # alpha
             pl.BlockSpec((1, block_rows), lambda p, b: (0, b)),    # mask
@@ -200,10 +321,7 @@ def sparse_local_sdca(cols: jnp.ndarray, vals: jnp.ndarray, y: jnp.ndarray,
             jax.ShapeDtypeStruct((1, nk), f32),
             jax.ShapeDtypeStruct((1, d), f32),
         ],
-        scratch_shapes=[
-            pltpu.VMEM((1, nk), f32),
-            pltpu.VMEM((1, d), f32),
-        ],
+        scratch_shapes=scratch,
         interpret=interpret,
         **extra,
     )(
@@ -218,10 +336,14 @@ def sparse_local_sdca(cols: jnp.ndarray, vals: jnp.ndarray, y: jnp.ndarray,
     return da[0], du[0]
 
 
-def vmem_budget(nk: int, d: int, r_max: int, block_rows: int = 128) -> dict:
-    """Static VMEM working set of one grid step (f32/int32 = 4 bytes)."""
+def vmem_budget(nk: int, d: int, r_max: int, block_rows: int = 128,
+                buffer_depth: int = 1) -> dict:
+    """Static VMEM working set of one grid step (f32/int32 = 4 bytes).
+
+    At depth >= 2 the cols/vals tile is a depth-slot ring (the DMA
+    prefetch buffers); u/dalpha are depth-independent."""
     f = 4
-    tile = block_rows * r_max * 2 * f            # cols + vals
+    tile = max(1, buffer_depth) * block_rows * r_max * 2 * f  # cols + vals
     u = d * f
     dalpha = nk * f
     total = tile + 2 * u + dalpha + 3 * block_rows * f
@@ -229,4 +351,5 @@ def vmem_budget(nk: int, d: int, r_max: int, block_rows: int = 128) -> dict:
     return dict(ell_tile_kb=tile / 1024, u_kb=u / 1024,
                 dalpha_kb=dalpha / 1024, total_mb=total / 2**20,
                 fits_16mb=total < 16 * 2**20,
-                dense_tile_mb=dense_tile / 2**20)
+                dense_tile_mb=dense_tile / 2**20,
+                buffer_depth=max(1, buffer_depth))

@@ -14,7 +14,13 @@ Verdicts per metric (metrics are seconds -- smaller is better):
     regression        latest > baseline * (1 + noise_band)
     improvement       latest < baseline * (1 - noise_band)
     within-noise      otherwise
-    missing-baseline  metric absent from the baseline file
+    missing-baseline  metric genuinely new (readable baseline lacks it)
+
+A baseline file that is *unreadable* -- missing, truncated, corrupt
+JSON, or without a metrics dict -- is NOT the same as a new metric: it
+means the gate cannot run at all, so it exits 2 (unless `--report-only`)
+instead of silently passing everything as missing-baseline. Re-pin with
+`--update-baseline` to restore the gate.
 
 The default noise band is 0.5 (flag only >1.5x slower): wall-clock on a
 shared CI host jitters tens of percent run-to-run, and the gate's job is
@@ -110,6 +116,25 @@ def format_rows(rows: List[dict], noise_band: float) -> str:
     return "\n".join(out)
 
 
+def read_baseline(path) -> tuple:
+    """(baseline dict, None) when the pinned baseline is usable, else
+    (None, reason). Unreadable covers missing, corrupt/truncated JSON,
+    and a payload without a metrics dict -- each a state in which the
+    gate cannot compare anything, distinct from an individual metric
+    being genuinely new (the per-metric missing-baseline verdict)."""
+    p = pathlib.Path(path)
+    try:
+        payload = json.loads(p.read_text())
+    except OSError:
+        return None, f"no baseline at {p}"
+    except ValueError:
+        return None, f"baseline {p} is corrupt (not valid JSON)"
+    if not isinstance(payload, dict) or \
+            not isinstance(payload.get("metrics"), dict):
+        return None, f"baseline {p} has no metrics dict"
+    return payload, None
+
+
 def write_baseline(path, metrics: Dict[str, float], *, ts: str = "",
                    noise_band: float = DEFAULT_NOISE_BAND) -> pathlib.Path:
     p = pathlib.Path(path)
@@ -165,10 +190,12 @@ def main(argv=None) -> int:
               f"{rec.get('ts', '?')} -> {p}")
         return 0
 
-    try:
-        base = json.loads(baseline_path.read_text())
-    except (OSError, ValueError):
-        base = {}
+    base, problem = read_baseline(baseline_path)
+    if problem is not None:
+        print(f"regress: {problem} -- the perf gate cannot run; re-pin "
+              f"with --update-baseline"
+              + (" [report-only]" if args.report_only else ""))
+        return 0 if args.report_only else 2
     band = (args.noise_band if args.noise_band is not None
             else float(base.get("noise_band", DEFAULT_NOISE_BAND)))
     rows = compare(metrics, base.get("metrics", {}), noise_band=band)

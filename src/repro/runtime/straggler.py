@@ -58,14 +58,32 @@ class ThroughputTracker:
 
     def budgets(self, deadline_s: float, H_max: int,
                 H_min: int = 16) -> jnp.ndarray:
-        b = np.clip((self.rate * deadline_s).astype(np.int64), H_min, H_max)
-        return jnp.asarray(b, jnp.int32)
+        return _clipped_budgets(self.rate, deadline_s, H_max, H_min)
+
+
+def _clipped_budgets(rates, deadline_s: float, H_max: int,
+                     H_min: int) -> jnp.ndarray:
+    """clip(rate * deadline, H_min, H_max) with the two failure modes
+    closed: np.clip with H_max < H_min silently returns H_max everywhere
+    (numpy clips with the upper bound last) -- reject the inverted
+    interval instead; and a non-finite EMA rate (a worker whose first
+    observation divided by ~0, or NaN-poisoned telemetry) cast straight
+    to int64 is garbage (inf -> INT64_MIN on most platforms), so
+    non-finite rates are pinned to the budget bounds *before* the cast:
+    +inf (arbitrarily fast) -> H_max, NaN / -inf (unknown / nonsense) ->
+    the conservative H_min."""
+    if H_max < H_min:
+        raise ValueError(f"H_max ({H_max}) must be >= H_min ({H_min})")
+    raw = np.asarray(rates, float) * float(deadline_s)
+    raw = np.nan_to_num(raw, nan=float(H_min), posinf=float(H_max),
+                        neginf=float(H_min))
+    b = np.clip(raw, H_min, H_max).astype(np.int64)
+    return jnp.asarray(b, jnp.int32)
 
 
 def budget_fn_from_rates(rates, deadline_s: float, H_max: int, H_min: int = 16):
     """Stateless helper: per-round budget function for core.cocoa.solve."""
-    b = np.clip((np.asarray(rates) * deadline_s).astype(np.int64), H_min, H_max)
-    b = jnp.asarray(b, jnp.int32)
+    b = _clipped_budgets(rates, deadline_s, H_max, H_min)
     return lambda t: b
 
 

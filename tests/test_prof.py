@@ -189,17 +189,35 @@ def tmp_cache(tmp_path, monkeypatch):
 def test_cache_roundtrip(tmp_cache):
     c = get_cache()
     c.record("sparse_sdca", "cpu", d=512, r_max=44, density=0.05,
-             config={"block_rows": 64, "slot_unroll": 2}, wall_s=1e-3)
+             config={"block_rows": 64, "slot_unroll": 2, "buffer_depth": 2},
+             wall_s=1e-3)
     # a fresh instance re-reads the persisted file
     c2 = AutotuneCache(tmp_cache)
     hit = c2.lookup("sparse_sdca", "cpu", d=512, r_max=44)
-    assert hit == {"block_rows": 64, "slot_unroll": 2}
-    # re-record same key replaces, not duplicates
+    assert hit == {"block_rows": 64, "slot_unroll": 2, "buffer_depth": 2}
+    # re-record same key replaces, not duplicates; a config missing a
+    # knob records the default for it
     c2.record("sparse_sdca", "cpu", d=512, r_max=44, density=0.05,
               config={"block_rows": 128, "slot_unroll": 1}, wall_s=5e-4)
     assert len(AutotuneCache(tmp_cache).entries()) == 1
-    assert AutotuneCache(tmp_cache).lookup(
-        "sparse_sdca", "cpu", d=512, r_max=44)["block_rows"] == 128
+    hit = AutotuneCache(tmp_cache).lookup("sparse_sdca", "cpu", d=512,
+                                          r_max=44)
+    assert hit == {"block_rows": 128, "slot_unroll": 1, "buffer_depth": 1}
+
+
+def test_cache_reads_v1_schema_with_depth_1(tmp_cache):
+    """A checked-in pre-buffer_depth (schema v1) cache file keeps
+    working: entries read back with buffer_depth=1, the single-buffered
+    kernel they were tuned for."""
+    tmp_cache.write_text(json.dumps({
+        "schema": 1,
+        "entries": [{"kernel": "sparse_sdca", "backend": "cpu", "d": 512,
+                     "r_max": 44, "density": 0.05,
+                     "config": {"block_rows": 64, "slot_unroll": 2},
+                     "wall_s": 1e-3, "written_at": "2026-01-01T00:00:00"}],
+    }))
+    hit = get_cache().lookup("sparse_sdca", "cpu", d=512, r_max=44)
+    assert hit == {"block_rows": 64, "slot_unroll": 2, "buffer_depth": 1}
 
 
 def test_cache_lookup_closest_density_and_misses(tmp_cache):
@@ -224,22 +242,62 @@ def test_cache_corrupt_file_reads_empty(tmp_cache):
 
 def test_resolve_explicit_wins_over_cache(tmp_cache):
     get_cache().record("sparse_sdca", "cpu", d=512, r_max=44, density=0.05,
-                       config={"block_rows": 32, "slot_unroll": 2},
+                       config={"block_rows": 32, "slot_unroll": 2,
+                               "buffer_depth": 2},
                        wall_s=1e-3)
     cfg = resolve_sparse_config(d=512, r_max=44, block_rows=64,
-                                slot_unroll=1, backend="cpu")
-    assert cfg == {"block_rows": 64, "slot_unroll": 1, "source": "explicit"}
+                                slot_unroll=1, buffer_depth=1, backend="cpu")
+    assert cfg == {"block_rows": 64, "slot_unroll": 1, "buffer_depth": 1,
+                   "source": "explicit"}
     cfg = resolve_sparse_config(d=512, r_max=44, block_rows=None,
                                 slot_unroll=None, backend="cpu")
-    assert cfg == {"block_rows": 32, "slot_unroll": 2, "source": "cache"}
-    # partial explicit: named knob wins, the other comes from the cache
+    assert cfg == {"block_rows": 32, "slot_unroll": 2, "buffer_depth": 2,
+                   "source": "cache"}
+    # partial explicit: named knobs win, the rest comes from the cache --
+    # and the source says so (the old label claimed plain "cache"/
+    # "default" even when a knob was explicitly passed)
     cfg = resolve_sparse_config(d=512, r_max=44, block_rows=64,
                                 slot_unroll=None, backend="cpu")
-    assert cfg["block_rows"] == 64 and cfg["slot_unroll"] == 2
-    # miss -> defaults
+    assert cfg == {"block_rows": 64, "slot_unroll": 2, "buffer_depth": 2,
+                   "source": "explicit+cache"}
+    # miss -> defaults, with the same provenance honesty
     cfg = resolve_sparse_config(d=999, r_max=44, block_rows=None,
                                 slot_unroll=None, backend="cpu")
     assert cfg == {**DEFAULT_CONFIG, "source": "default"}
+    cfg = resolve_sparse_config(d=999, r_max=44, block_rows=64,
+                                slot_unroll=None, backend="cpu")
+    assert cfg == {**DEFAULT_CONFIG, "block_rows": 64,
+                   "source": "explicit+default"}
+
+
+def test_resolve_rounds_unroll_to_divisor(tmp_cache):
+    """A cached/explicit slot_unroll that does not divide the slot-walk
+    trip count is rounded *down to a divisor*: `_unrolled_fori` silently
+    runs the rolled loop on a non-divisor, so the old resolve could
+    report an unroll the kernel never executed. r_eff carries the
+    backend's lane padding -- the same cache entry resolves differently
+    on CPU (r_eff = r_max) vs TPU (r_eff padded to 128s)."""
+    get_cache().record("sparse_sdca", "cpu", d=512, r_max=45, density=0.05,
+                       config={"block_rows": 64, "slot_unroll": 4},
+                       wall_s=1e-3)
+    # CPU/interpret: no lane padding, r_eff = 45 -> 4 rounds down to 3
+    cfg = resolve_sparse_config(d=512, r_max=45, block_rows=None,
+                                slot_unroll=None, backend="cpu", r_eff=45)
+    assert cfg["slot_unroll"] == 3
+    # TPU lane padding: r_eff = 128 -> the cached 4 divides and survives
+    cfg = resolve_sparse_config(d=512, r_max=45, block_rows=None,
+                                slot_unroll=None, backend="cpu", r_eff=128)
+    assert cfg["slot_unroll"] == 4
+    # explicit knobs get the same treatment -- the returned config is
+    # always the one the kernel executes
+    cfg = resolve_sparse_config(d=512, r_max=45, block_rows=64,
+                                slot_unroll=6, buffer_depth=1,
+                                backend="cpu", r_eff=45)
+    assert cfg["slot_unroll"] == 5 and cfg["source"] == "explicit"
+    # no r_eff given: fall back to rounding against logical r_max
+    cfg = resolve_sparse_config(d=512, r_max=44, block_rows=64,
+                                slot_unroll=3, buffer_depth=1, backend="cpu")
+    assert cfg["slot_unroll"] == 2
 
 
 def _sparse_problem(nk=192, d=256):
@@ -255,29 +313,66 @@ def _sparse_problem(nk=192, d=256):
 
 def test_dispatch_consults_cache_and_results_invariant(tmp_cache):
     """The acceptance-criterion test: with a cache entry present, the
-    unconfigured ops dispatch resolves the cached launch config -- and
-    because both knobs preserve the visit order, the cached config's
-    results are bit-for-bit those of the default."""
+    unconfigured ops dispatch resolves the cached launch config --
+    including a pipelined buffer_depth=2 -- and because all three knobs
+    preserve the visit order, the cached config's results are
+    bit-for-bit those of the default single-buffered launch. The r_max
+    here is 29 (prime), so the cached slot_unroll=2 must be reported
+    rounded down to the divisor 1 the kernel actually runs."""
     args = _sparse_problem()
     shard = args[0]
     r_default = ops.sparse_local_sdca_block(*args)
-    assert ops.LAST_SPARSE_CONFIG["source"] == "default"
-    assert ops.LAST_SPARSE_CONFIG["block_rows"] == 128
+    assert ops.LAST_SPARSE_CONFIG == {"block_rows": 128, "slot_unroll": 1,
+                                      "buffer_depth": 1, "source": "default",
+                                      "clamped": False}
 
     get_cache().record(
         "sparse_sdca", jax.default_backend(), d=256,
         r_max=int(shard.cols.shape[1]), density=0.05,
-        config={"block_rows": 32, "slot_unroll": 2}, wall_s=1e-3)
+        config={"block_rows": 32, "slot_unroll": 2, "buffer_depth": 2},
+        wall_s=1e-3)
     r_cached = ops.sparse_local_sdca_block(*args)
-    assert ops.LAST_SPARSE_CONFIG == {"block_rows": 32, "slot_unroll": 2,
-                                      "source": "cache"}
+    assert ops.LAST_SPARSE_CONFIG == {"block_rows": 32, "slot_unroll": 1,
+                                      "buffer_depth": 2, "source": "cache",
+                                      "clamped": False}
     assert jnp.array_equal(r_cached.dalpha, r_default.dalpha)
     assert jnp.array_equal(r_cached.du, r_default.du)
 
-    r_exp = ops.sparse_local_sdca_block(*args, block_rows=64, slot_unroll=1)
+    r_exp = ops.sparse_local_sdca_block(*args, block_rows=64, slot_unroll=1,
+                                        buffer_depth=1)
     assert ops.LAST_SPARSE_CONFIG["source"] == "explicit"
     assert ops.LAST_SPARSE_CONFIG["block_rows"] == 64
     assert jnp.array_equal(r_exp.dalpha, r_default.dalpha)
+    # partial explicit: the unnamed knobs fill from the cache and the
+    # provenance label says so
+    r_mix = ops.sparse_local_sdca_block(*args, block_rows=64)
+    assert ops.LAST_SPARSE_CONFIG == {"block_rows": 64, "slot_unroll": 1,
+                                      "buffer_depth": 2,
+                                      "source": "explicit+cache",
+                                      "clamped": False}
+    assert jnp.array_equal(r_mix.dalpha, r_default.dalpha)
+
+
+def test_dispatch_reports_post_clamp_config(tmp_cache):
+    """Small shards clamp the resolved block_rows down to the padded nk;
+    LAST_SPARSE_CONFIG must state the *effective* launch (the old hook
+    echoed the pre-clamp resolution -- a config the kernel never ran)."""
+    args = _sparse_problem(nk=16, d=256)
+    r_small = ops.sparse_local_sdca_block(*args)
+    assert ops.LAST_SPARSE_CONFIG["block_rows"] == 16      # min(128, 16)
+    assert ops.LAST_SPARSE_CONFIG["clamped"] is True
+    # the clamp floor: nk below 8 still launches 8-row blocks (padded)
+    args = _sparse_problem(nk=6, d=256)
+    ops.sparse_local_sdca_block(*args)
+    assert ops.LAST_SPARSE_CONFIG["block_rows"] == 8
+    assert ops.LAST_SPARSE_CONFIG["clamped"] is True
+    # an explicit block_rows that fits is NOT clamped
+    args = _sparse_problem(nk=16, d=256)
+    ops.sparse_local_sdca_block(*args, block_rows=8, slot_unroll=1,
+                                buffer_depth=1)
+    assert ops.LAST_SPARSE_CONFIG["block_rows"] == 8
+    assert ops.LAST_SPARSE_CONFIG["clamped"] is False
+    assert r_small.dalpha.shape == (16,)
 
 
 # ----------------------------------------------------------------------------
@@ -325,6 +420,46 @@ def test_regress_cli_end_to_end(tmp_path):
     assert regress.main(argv) == 1
     assert regress.main(argv + ["--report-only"]) == 0
     assert regress.main(argv + ["--noise-band", "1.5"]) == 0  # wider band
+
+
+def test_regress_unreadable_baseline_fails_closed(tmp_path, capsys):
+    """An unreadable baseline means the gate cannot run -- exit 2, not a
+    silent all-missing-baseline pass (the failure mode that disabled the
+    gate: corrupt baseline -> {} -> every metric 'missing-baseline' ->
+    exit 0). A *genuinely new metric* against a readable baseline still
+    passes -- it asks for a pin, it doesn't gate."""
+    hist = tmp_path / "autotune.jsonl"
+    baseline = tmp_path / "baseline.json"
+    argv = ["--history", str(hist), "--baseline", str(baseline)]
+    _write_history(hist, {"sparse_sdca_wall_s": 1.0})
+
+    # missing baseline file
+    assert regress.main(argv) == 2
+    assert "cannot run" in capsys.readouterr().out
+    assert regress.main(argv + ["--report-only"]) == 0
+
+    # corrupt JSON
+    baseline.write_text("{truncated")
+    assert regress.main(argv) == 2
+    assert "corrupt" in capsys.readouterr().out
+    assert regress.main(argv + ["--report-only"]) == 0
+
+    # valid JSON but no metrics dict
+    baseline.write_text(json.dumps({"schema": 1, "metrics": "oops"}))
+    assert regress.main(argv) == 2
+    assert "no metrics dict" in capsys.readouterr().out
+
+    # readable baseline + a genuinely new metric: verdict only, exit 0
+    assert regress.main(argv + ["--update-baseline"]) == 0
+    _write_history(hist, {"sparse_sdca_wall_s": 1.0,
+                          "sparse_sdca_depth2_wall_s": 1.0})
+    assert regress.main(argv) == 0
+    assert "missing-baseline" in capsys.readouterr().out
+
+    # read_baseline itself reports the distinction
+    payload, problem = regress.read_baseline(baseline)
+    assert problem is None and "metrics" in payload
+    assert regress.read_baseline(tmp_path / "nope.json")[0] is None
 
 
 # ----------------------------------------------------------------------------

@@ -146,6 +146,39 @@ def test_throughput_tracker_updates():
     assert b[3] < b[0]
 
 
+def test_budget_clip_rejects_inverted_interval():
+    """np.clip(x, H_min, H_max) with H_max < H_min silently returns H_max
+    everywhere (numpy applies the upper bound last) -- every worker would
+    get an H *below* the intended floor with no error. Reject instead."""
+    with pytest.raises(ValueError, match="H_max"):
+        straggler.budget_fn_from_rates(np.full(4, 1e4), deadline_s=0.01,
+                                       H_max=16, H_min=256)
+    tr = straggler.ThroughputTracker(4, init_rate=1e4)
+    with pytest.raises(ValueError, match="H_max"):
+        tr.budgets(deadline_s=0.01, H_max=8, H_min=16)
+    # the degenerate-but-valid H_max == H_min pins every budget
+    b = np.asarray(tr.budgets(deadline_s=0.01, H_max=64, H_min=64))
+    assert (b == 64).all()
+
+
+def test_budget_nonfinite_rates_sanitized():
+    """A non-finite EMA rate (first observation divided by ~0, or
+    NaN-poisoned telemetry) cast straight to int64 is platform garbage
+    (inf -> INT64_MIN). Budgets must land inside [H_min, H_max]: +inf
+    means arbitrarily fast -> H_max; NaN/-inf are nonsense -> the
+    conservative H_min."""
+    rates = np.array([1e4, np.inf, np.nan, -np.inf])
+    b = np.asarray(straggler.budget_fn_from_rates(
+        rates, deadline_s=0.01, H_max=256, H_min=16)(0))
+    assert b.tolist() == [100, 256, 16, 16]
+    assert ((b >= 16) & (b <= 256)).all()
+    # same sanitization through the tracker path
+    tr = straggler.ThroughputTracker(4, init_rate=1e4)
+    tr.rate = rates.copy()
+    b = np.asarray(tr.budgets(deadline_s=0.01, H_max=256, H_min=16))
+    assert ((b >= 16) & (b <= 256)).all()
+
+
 def test_throughput_tracker_from_measured_rounds():
     """`observe_round` feeds the EMA from real fenced wall-clock: every
     worker shares the bulk-synchronous round time, and the `slowdown`

@@ -282,6 +282,44 @@ def test_sparse_kernel_bitexact_vs_oracle(loss_name, nk, d, br):
     np.testing.assert_array_equal(np.asarray(du_k), np.asarray(du_r))
 
 
+@pytest.mark.parametrize("depth", [2, 3, 4])
+def test_sparse_kernel_pipelined_bitexact_vs_oracle(depth):
+    """The pipelined kernel (explicit multi-buffered DMA prefetch ring)
+    walks coordinates in the identical order at every buffer_depth, so
+    the pure-jnp oracle pins it bit-for-bit -- depth is a pure schedule
+    knob, never a results knob."""
+    loss = get_loss("hinge")
+    shard, y, a, m, w = _shard(128, 256, density=0.08, seed=384)
+    scale = 4.0 / (1e-3 * 128)
+    da_r, du_r = sparse_local_sdca_ref(shard.cols, shard.vals, y, a, m, w,
+                                       scale, loss=loss, n_passes=1)
+    da_k, du_k = sparse_local_sdca(shard.cols, shard.vals, y, a, m, w, scale,
+                                   loss=loss, n_passes=1, block_rows=32,
+                                   buffer_depth=depth, interpret=True)
+    np.testing.assert_array_equal(np.asarray(da_k), np.asarray(da_r))
+    np.testing.assert_array_equal(np.asarray(du_k), np.asarray(du_r))
+
+
+@pytest.mark.parametrize("loss_name", ["smooth_hinge1", "squared"])
+@pytest.mark.parametrize("br,un,depth", [(32, 1, 2), (64, 2, 2), (128, 1, 4),
+                                         (64, 1, 3), (128, 2, 4)])
+def test_sparse_kernel_pipelined_config_grid(loss_name, br, un, depth):
+    """Every (block_rows, slot_unroll, buffer_depth) launch config --
+    including depth > number of blocks and multi-pass wraparound of the
+    prefetch ring -- returns bit-for-bit the oracle's answer."""
+    loss = get_loss(loss_name)
+    shard, y, a, m, w = _shard(128, 128, density=0.1, seed=23)
+    scale = 2.0 / (1e-3 * 128)
+    da_r, du_r = sparse_local_sdca_ref(shard.cols, shard.vals, y, a, m, w,
+                                       scale, loss=loss, n_passes=2)
+    da_k, du_k = sparse_local_sdca(shard.cols, shard.vals, y, a, m, w, scale,
+                                   loss=loss, n_passes=2, block_rows=br,
+                                   slot_unroll=un, buffer_depth=depth,
+                                   interpret=True)
+    np.testing.assert_array_equal(np.asarray(da_k), np.asarray(da_r))
+    np.testing.assert_array_equal(np.asarray(du_k), np.asarray(du_r))
+
+
 def test_sparse_kernel_bitexact_multipass():
     loss = get_loss("hinge")
     shard, y, a, m, w = _shard(128, 128, density=0.1, seed=7)
@@ -348,6 +386,13 @@ def test_sparse_vmem_budget_production_shape():
     vm = vmem_budget(nk=16384, d=47236, r_max=128)    # rcv1-scale shard
     assert vm["fits_16mb"]
     assert vm["dense_tile_mb"] > 10 * vm["total_mb"]  # the point of the kernel
+    # multi-buffering scales only the cols/vals tile term, linearly in
+    # depth; the rcv1-scale shard still fits double-buffered
+    vm2 = vmem_budget(nk=16384, d=47236, r_max=128, buffer_depth=2)
+    assert vm2["buffer_depth"] == 2 and vm2["fits_16mb"]
+    assert vm2["ell_tile_kb"] == pytest.approx(2 * vm["ell_tile_kb"])
+    assert vm2["total_mb"] - vm["total_mb"] \
+        == pytest.approx(vm["ell_tile_kb"] / 1024)
 
 
 # ----------------------------------------------------------------------------
