@@ -26,14 +26,28 @@ from .placement import WSpec
 from .topology import Hop, Topology
 
 
-def model_hops(wspec: WSpec, K: int, H: int) -> Tuple[Hop, ...]:
-    """The feature-sharded solver's model-axis wire plan: one scalar psum
-    per coordinate step completes each partial gather-dot, i.e. every one
-    of the K*M devices sends H floats per round across the model axis.
-    Empty while w is replicated -- the one place this pricing lives
-    (solve's history, the trainer summary, and the bench all call it)."""
+def model_hops(wspec: WSpec, K: int, H: int,
+               zx_plan: Optional[dict] = None) -> Tuple[Hop, ...]:
+    """The feature-sharded solver's model-axis wire plan. Empty while w
+    is replicated -- the one place this pricing lives (solve's history,
+    the trainer summary, and the bench all call it).
+
+    jnp path (zx_plan None): one scalar psum per coordinate step
+    completes each partial gather-dot, i.e. every one of the K*M devices
+    sends H floats per round across the model axis.
+
+    zx kernel path: the block-batched exchange moves `block_rows` floats
+    per block psum instead -- `zx_plan` is `kernels.ops.sparse_zx_plan`'s
+    dict ({"exchanges", "block_rows"}), so each device sends
+    exchanges * block_rows floats per round (typically ~nk + block_rows
+    vs H when H ~ nk, and batched into nk/block_rows collectives instead
+    of H latency-bound scalar ones)."""
     if not wspec.sharded:
         return ()
+    if zx_plan is not None:
+        return (Hop("model_zx", K * wspec.M,
+                    int(zx_plan["exchanges"]) * int(zx_plan["block_rows"]),
+                    axis="model"),)
     return (Hop("model_z", K * wspec.M, H, axis="model"),)
 
 

@@ -237,16 +237,16 @@ def _resolve_solver(name: str, sparse: bool,
             f"{sorted(set(_SPARSE_SOLVERS))} for SparseShards inputs")
     else:
         resolved = _SPARSE_SOLVERS[name]
-    if feature_sharded and resolved not in ("sdca", "sdca_sparse"):
-        # the per-step partial-dot psum over the model axis lives inside
-        # the solver's coordinate loop; a Pallas kernel (or gd/deadline)
-        # cannot host that collective, so M>1 routes through the jnp
-        # solvers (the kernels stay valid at M=1, where the local shard
-        # IS the full w)
+    if feature_sharded and resolved not in ("sdca", "sdca_sparse",
+                                            "sdca_sparse_kernel"):
+        # the dense kernel (and gd/deadline) cannot host the model-axis
+        # exchange; M>1 routes through the jnp solvers or the sparse
+        # kernel's z-exchange schedule (block-batched partial-dot psums
+        # between per-block kernel invocations)
         raise ValueError(
-            f"solver {resolved!r} cannot run feature-sharded (M>1): the "
-            f"model-axis partial-dot exchange needs the jnp coordinate "
-            f"loop; use 'sdca' (dense) or 'sdca_sparse' (ELL shards)")
+            f"solver {resolved!r} cannot run feature-sharded (M>1): use "
+            f"'sdca' (dense jnp), 'sdca_sparse' (ELL jnp), or "
+            f"'sdca_sparse_kernel' (ELL Pallas, z-exchange schedule)")
     return resolved
 
 
@@ -258,7 +258,7 @@ def _worker_body(X_k, y_k, alpha_k, mask_k, v, rng, *, loss: Loss, lam: float,
     if solver == "sdca_deadline":
         return fn(X_k, y_k, alpha_k, mask_k, v, rng, loss, lam, n, sigma_p, H,
                   budget if budget is not None else jnp.asarray(H), reg=reg)
-    if solver in ("sdca", "sdca_sparse"):
+    if solver in ("sdca", "sdca_sparse", "sdca_sparse_kernel"):
         return fn(X_k, y_k, alpha_k, mask_k, v, rng, loss, lam, n, sigma_p, H,
                   sqnorms=sqnorms, model_axis=model_axis, reg=reg)
     assert model_axis is None, (solver, "has no feature-sharded path")
@@ -656,13 +656,23 @@ def solve(cfg: CoCoAConfig, X, y, mask, *, rounds: int, eps_gap: float = 0.0,
     # (idx, val) sets under compressed gather); feature sharding divides
     # the dense message length to d/M per hop -- Fig-2 claims stay honest
     # under tensor sharding, compression, and multi-hop topologies. The
-    # model-axis tax of the sharded solver (one scalar psum per coordinate
-    # step) is carried as its own hop so per-axis tables add up.
+    # model-axis tax of the sharded solver is carried as its own hop so
+    # per-axis tables add up: one scalar psum per coordinate step on the
+    # jnp path, or the kernel path's block-batched z-exchange (priced from
+    # the same resolve/clamp arithmetic the dispatch launches with).
+    zx_plan = None
+    if wspec.sharded and isinstance(X, FeatureShards) and \
+            _SPARSE_SOLVERS.get(cfg.solver) == "sdca_sparse_kernel":
+        from repro.kernels.ops import sparse_zx_plan
+        zx_plan = sparse_zx_plan(nk, wspec.d_local, cfg.H,
+                                 r_max=int(X.cols.shape[-1]),
+                                 reg_family=getattr(reg, "family", "other"),
+                                 model_shards=wspec.M)
     tracer = comm.CommTracer.for_run(K=K, d_local=topo.d_local(d),
                                      compressor=cfg.compressor(M=wspec.M),
                                      topo=topo, gather=cfg.gather,
-                                     extra_hops=comm.model_hops(wspec, K,
-                                                                cfg.H))
+                                     extra_hops=comm.model_hops(
+                                         wspec, K, cfg.H, zx_plan=zx_plan))
 
     # --- the instrumented round loop -----------------------------------
     # `agg` collects the emitted records; the returned history is its

@@ -56,7 +56,7 @@ to exact Lasso the certificate is (the smoothed optimum is within
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import Callable, Optional
 
 import jax.numpy as jnp
 
@@ -84,6 +84,14 @@ class Regularizer:
     conj_grad: Callable[[jnp.ndarray, float], jnp.ndarray]
     # strong-convexity constant of g (the 1/tau smoothness of g*)
     tau: Callable[[float], float]
+    # scaled-frame prox threshold kappa(lam) when conj_grad is a
+    # soft-threshold at a scalar (0.0 for identity/L2) -- lets the Pallas
+    # kernel fuse the v -> w map per gathered entry instead of hoisting a
+    # once-per-round map. None means "no scalar-threshold form": custom
+    # regularizers fall back to the hoisted (linearized) kernel subproblem.
+    prox_kappa: Optional[Callable[[float], float]] = None
+    # coarse family tag for the autotune-cache key ("l2"/"elastic"/"l1s")
+    family: str = "other"
 
     def __hash__(self):  # allow use as a static jit arg, like Loss
         return hash(self.name)
@@ -103,6 +111,8 @@ L2 = Regularizer(
     conj=lambda v, lam: 0.5 * lam * jnp.dot(v, v),
     conj_grad=lambda v, lam: v,
     tau=lambda lam: lam,
+    prox_kappa=lambda lam: 0.0,
+    family="l2",
 )
 
 
@@ -132,7 +142,9 @@ def make_elastic_net(eta: float) -> Regularizer:
     # so two distinct etas must never collide
     return Regularizer(f"elastic{eta!r}", value, conj,
                        conj_grad=lambda v, lam: soft_threshold(v, kappa),
-                       tau=lambda lam: lam * (1.0 - eta))
+                       tau=lambda lam: lam * (1.0 - eta),
+                       prox_kappa=lambda lam: kappa,
+                       family="elastic")
 
 
 # ----------------------------------------------------------------------------
@@ -156,7 +168,9 @@ def make_smoothed_l1(eps: float) -> Regularizer:
 
     return Regularizer(f"l1s{eps!r}", value, conj,
                        conj_grad=lambda v, lam: soft_threshold(v, lam / eps),
-                       tau=lambda lam: eps)
+                       tau=lambda lam: eps,
+                       prox_kappa=lambda lam: lam / eps,
+                       family="l1s")
 
 
 REGULARIZERS = {"l2": L2}

@@ -19,8 +19,16 @@ tau = lambda, so v_loc IS the old u = w + (sigma'/(lambda n)) A Delta_alpha
 and the emitted jaxpr is bit-for-bit the paper's hard-coded path. For the
 L1 family the map is a soft-threshold, which keeps every z evaluated at the
 *actual* (sparse) primal iterate -- the prox-SDCA flavor of the generalized
-subproblem; the Pallas kernels instead hoist the map to round start (the
-exact linearized CoCoA-general subproblem), see repro.kernels.ops.
+subproblem. The sparse Pallas kernel fuses the same soft-threshold in-kernel
+(static `prox_kappa`, applied per gathered entry -- per-step exact, identical
+to this loop); only the dense kernel and regularizers without the scalar
+threshold form keep the round-start hoisted map (the linearized
+CoCoA-general subproblem), see repro.kernels.ops. Likewise the per-step
+model-axis psum below (feature-sharded mode) has a kernel-path counterpart:
+the block-batched z-exchange schedule in repro.kernels.sparse_sdca
+(`sparse_local_sdca_zx`), which trades per-step scalar collectives for one
+block_rows-sized psum per block at the cost of within-block staleness (a
+Theta-approximation, gap-certified).
 
 This is the hot loop that the Pallas TPU kernel in repro.kernels.local_sdca
 implements; the pure JAX version here is the reference/portable path (and

@@ -13,13 +13,19 @@ visit-order-preserving, see `sparse_sdca`).
 
 Schema v2 added `buffer_depth` to the config; v1 files (and v1 entries
 generally) read back with `buffer_depth=1` -- the single-buffered kernel
-they were tuned for -- so an old checked-in cache keeps working.
+they were tuned for -- so an old checked-in cache keeps working. Schema
+v3 adds two key axes: `reg` (the regularizer *family* -- "l2" /
+"elastic" / "l1s" -- the fused-prox kernel's gather costs differ per
+family) and `model_shards` (M; M>1 is the z-exchange schedule, which
+tunes toward smaller blocks). v1/v2 entries read back as
+(reg="l2", model_shards=1), the only path that existed when they were
+recorded.
 
-Keying: d / r_max / backend are static at dispatch time (they are array
-*shapes*); density is not (nnz is a traced value under jit), so lookup
-matches exactly on (kernel, backend, d, r_max) and picks the recorded
-entry whose density is closest to the caller's estimate (default: the
-ELL upper bound r_max / d).
+Keying: d / r_max / backend / reg family / M are static at dispatch time
+(shapes or config); density is not (nnz is a traced value under jit), so
+lookup matches exactly on (kernel, backend, d, r_max, reg, M) and picks
+the recorded entry whose density is closest to the caller's estimate
+(default: the ELL upper bound r_max / d).
 
 The cache lives next to the kernels (checked in, like the bench
 baselines) at `kernels/autotune_cache.json`; `REPRO_AUTOTUNE_CACHE`
@@ -34,13 +40,19 @@ import pathlib
 import time
 from typing import Dict, List, Optional
 
-AUTOTUNE_SCHEMA_VERSION = 2
-_READABLE_SCHEMAS = (1, 2)          # v1 entries read with buffer_depth=1
+AUTOTUNE_SCHEMA_VERSION = 3
+# v1 entries read with buffer_depth=1; v1/v2 with reg="l2", model_shards=1
+_READABLE_SCHEMAS = (1, 2, 3)
 
 _DEFAULT_PATH = pathlib.Path(__file__).with_name("autotune_cache.json")
 
 # knob defaults used on a cache miss (also the pre-autotune behavior)
 DEFAULT_CONFIG = {"block_rows": 128, "slot_unroll": 1, "buffer_depth": 1}
+
+# cache-miss block default for the M>1 z-exchange schedule: block_rows is
+# the staleness window (and the per-exchange wire size), so it starts an
+# order of magnitude smaller than the sequential kernel's streaming block
+ZX_DEFAULT_BLOCK_ROWS = 16
 
 _CONFIG_KEYS = tuple(sorted(DEFAULT_CONFIG))
 
@@ -74,8 +86,12 @@ class AutotuneCache:
                 self._entries = list(payload.get("entries", []))
                 for e in self._entries:
                     # pre-buffer_depth (v1) entries were tuned for the
-                    # single-buffered kernel: read them as depth 1
+                    # single-buffered kernel: read them as depth 1;
+                    # pre-v3 entries predate the fused-prox and zx
+                    # schedules, i.e. they were tuned on the L2 M=1 path
                     e.setdefault("config", {}).setdefault("buffer_depth", 1)
+                    e.setdefault("reg", "l2")
+                    e.setdefault("model_shards", 1)
         except (OSError, ValueError):
             pass
         return self._entries
@@ -90,37 +106,44 @@ class AutotuneCache:
 
     @staticmethod
     def _key(kernel: str, backend: str, d: int, r_max: int,
-             density: float) -> tuple:
-        return (kernel, backend, int(d), int(r_max), round(float(density), 6))
+             density: float, reg: str = "l2", model_shards: int = 1) -> tuple:
+        return (kernel, backend, int(d), int(r_max),
+                round(float(density), 6), str(reg), int(model_shards))
 
     def record(self, kernel: str, backend: str, *, d: int, r_max: int,
-               density: float, config: Dict, wall_s: float) -> Dict:
+               density: float, config: Dict, wall_s: float,
+               reg: str = "l2", model_shards: int = 1) -> Dict:
         """Insert/replace the winner for one swept shape and persist."""
         entry = {
             "kernel": kernel, "backend": backend, "d": int(d),
             "r_max": int(r_max), "density": round(float(density), 6),
+            "reg": str(reg), "model_shards": int(model_shards),
             "config": {k: int(config.get(k, DEFAULT_CONFIG[k]))
                        for k in _CONFIG_KEYS},
             "wall_s": float(wall_s),
             "written_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
         }
-        key = self._key(kernel, backend, d, r_max, density)
+        key = self._key(kernel, backend, d, r_max, density, reg,
+                        model_shards)
         entries = self._load()
         self._entries = [e for e in entries
                          if self._key(e["kernel"], e["backend"], e["d"],
-                                      e["r_max"], e["density"]) != key]
+                                      e["r_max"], e["density"], e["reg"],
+                                      e["model_shards"]) != key]
         self._entries.append(entry)
         self._save()
         return entry
 
     def lookup(self, kernel: str, backend: str, *, d: int, r_max: int,
-               density: Optional[float] = None) -> Optional[Dict]:
+               density: Optional[float] = None, reg: str = "l2",
+               model_shards: int = 1) -> Optional[Dict]:
         """Winning config for this shape, or None.
 
-        Exact match on (kernel, backend, d, r_max); among those, the
-        entry whose recorded density is closest to `density` (defaults
-        to the ELL upper bound r_max / d -- the only density visible at
-        dispatch time, where nnz is traced)."""
+        Exact match on (kernel, backend, d, r_max, reg family,
+        model_shards); among those, the entry whose recorded density is
+        closest to `density` (defaults to the ELL upper bound r_max / d
+        -- the only density visible at dispatch time, where nnz is
+        traced)."""
         if density is None:
             density = r_max / max(d, 1)
         best, best_gap = None, float("inf")
@@ -128,6 +151,9 @@ class AutotuneCache:
             if (e["kernel"], e["backend"]) != (kernel, backend):
                 continue
             if (e["d"], e["r_max"]) != (int(d), int(r_max)):
+                continue
+            if (e["reg"], e["model_shards"]) != (str(reg),
+                                                 int(model_shards)):
                 continue
             gap = abs(e["density"] - density)
             if gap < best_gap:
@@ -169,7 +195,9 @@ def resolve_sparse_config(*, d: int, r_max: int,
                           slot_unroll: Optional[int],
                           buffer_depth: Optional[int] = None,
                           backend: Optional[str] = None,
-                          r_eff: Optional[int] = None) -> Dict:
+                          r_eff: Optional[int] = None,
+                          reg_family: str = "l2",
+                          model_shards: int = 1) -> Dict:
     """The dispatch-time merge: explicit knob > cache hit > default.
 
     Returns {"block_rows", "slot_unroll", "buffer_depth", "source"} where
@@ -177,6 +205,12 @@ def resolve_sparse_config(*, d: int, r_max: int,
     named), "cache" / "default" (none named), or the mixed
     "explicit+cache" / "explicit+default" (for observability -- `ops`
     exposes the last resolution, post-clamp, as `LAST_SPARSE_CONFIG`).
+
+    `reg_family` / `model_shards` extend the cache key (v3): the
+    fused-prox gather and the z-exchange schedule tune differently. On a
+    cache miss at model_shards > 1 the default block drops to
+    `ZX_DEFAULT_BLOCK_ROWS` -- block_rows is the zx staleness window,
+    not just a streaming tile.
 
     `slot_unroll` is rounded *down to a divisor* of the slot-walk trip
     count `r_eff` (the post-lane-padding r_max the kernel actually runs
@@ -195,8 +229,15 @@ def resolve_sparse_config(*, d: int, r_max: int,
         if backend is None:
             import jax
             backend = jax.default_backend()
-        hit = get_cache().lookup("sparse_sdca", backend, d=d, r_max=r_max)
-        base = dict(hit) if hit else dict(DEFAULT_CONFIG)
+        hit = get_cache().lookup("sparse_sdca", backend, d=d, r_max=r_max,
+                                 reg=reg_family,
+                                 model_shards=model_shards)
+        if hit:
+            base = dict(hit)
+        else:
+            base = dict(DEFAULT_CONFIG)
+            if int(model_shards) > 1:
+                base["block_rows"] = ZX_DEFAULT_BLOCK_ROWS
         filled = "cache" if hit else "default"
         source = f"explicit+{filled}" if explicit else filled
     base.update({k: int(v) for k, v in explicit.items()})

@@ -42,14 +42,18 @@ def local_sdca_ref(X, y, alpha, mask, w, scale, *, loss: Loss,
 
 
 def sparse_local_sdca_ref(cols, vals, y, alpha, mask, w, scale, *,
-                          loss: Loss, n_passes: int = 1):
+                          loss: Loss, n_passes: int = 1,
+                          prox_kappa: float | None = None):
     """Reference for kernels.sparse_sdca.sparse_local_sdca.
 
     Replays the kernel's exact op sequence -- scalar-indexed gather dot
     (accumulated in row-slot order), scale * jnp.sum(v*v) row norm, and
     sequential per-slot scatter-axpy -- so the comparison is bit-for-bit in
     interpret mode, including rows with duplicate columns. Padding slots
-    (col 0, val 0.0) are exact no-ops, as in the kernel."""
+    (col 0, val 0.0) are exact no-ops, as in the kernel. `prox_kappa`
+    mirrors the kernel's fused conjugate map: the same scalar
+    soft-threshold (sign(u) * max(|u| - kappa, 0)) applied to each
+    gathered u entry, with the scatter still updating raw (v-space) u."""
     nk, r_max = cols.shape
     cols = cols.astype(jnp.int32)
     vals = vals.astype(jnp.float32)
@@ -57,6 +61,13 @@ def sparse_local_sdca_ref(cols, vals, y, alpha, mask, w, scale, *,
     alpha = alpha.astype(jnp.float32)
     mask = mask.astype(jnp.float32)
     scale = jnp.asarray(scale, jnp.float32)
+
+    def prox(uv):
+        if prox_kappa is None:
+            return uv
+        kap = jnp.float32(prox_kappa)
+        return jnp.sign(uv) * jnp.maximum(jnp.abs(uv) - kap,
+                                          jnp.float32(0.0))
 
     def body(h, carry):
         dalpha, u = carry
@@ -68,7 +79,7 @@ def sparse_local_sdca_ref(cols, vals, y, alpha, mask, w, scale, *,
             c = jax.lax.dynamic_index_in_dim(ci, r, keepdims=False)
             uv = jax.lax.dynamic_index_in_dim(u, c, keepdims=False)
             vv = jax.lax.dynamic_index_in_dim(vi, r, keepdims=False)
-            return z + uv * vv
+            return z + prox(uv) * vv
 
         z = jax.lax.fori_loop(0, r_max, gather_dot, jnp.float32(0.0))
         q = scale * jnp.sum(vi * vi)

@@ -38,20 +38,42 @@ depth 4 keeps three -- deeper rings absorb burstier DMA latency). Both
 kernels run the identical `_block_walk` on identical tile values, so
 every depth is bit-for-bit the depth-1 kernel, which the oracle pins.
 
+Fused prox (`prox_kappa`): the generalized-objective solvers apply the
+v -> w conjugate map `reg.conj_grad` at every gather (per-step-exact
+subproblem). When the map is a scalar soft-threshold -- L2 (kappa 0),
+elastic-net (eta/(1-eta)), smoothed-L1 (lam/eps) -- the kernel applies it
+*inside* `gather_dot` on only the r_max gathered u entries, in-register
+(zero extra VMEM), instead of the once-per-round hoisted map that made
+the kernel solve a linearized subproblem (and cost ~3x the rounds on
+elastic-net). `prox_kappa=None` is a static Python branch, so the L2 /
+legacy path emits today's jaxpr unchanged -- bit-for-bit with the PR-8
+kernel. The caller passes w = v (the scaled dual state) when fusing; u
+then lives in v-space and du = u - v is still scale * A_[k] dalpha.
+
 VMEM budget (f32): depth*B*r_max*8 bytes (cols+vals tile ring) + nk +
 2*d + 3*B floats -- at rcv1_sparse production shapes (d 47k, r_max ~128)
 well under 1 MiB even quad-buffered, vs ~24 MiB for the dense tile at
 the same d. On real TPUs r_max and d should be multiples of 128 (ops.py
-pads); interpret=True is shape-agnostic.
+pads); interpret=True is shape-agnostic. `vmem_budget` prices every
+schedule (including the zx exchange buffers) and the entry points REJECT
+configs over the limit instead of leaning on the compiler clamp.
 
-Placement: `w` here is whatever shard the caller hands in -- the kernel's
-gather-dot/scatter-axpy are coordinate-frame-agnostic, so under the 2-D
-(data, model) mesh a device's local w slice with shard-local ELL ids
-(data.sparse.FeatureShards) satisfies the same contract with d = d_local
-(keep ceil(d/M) lane-aligned). What the kernel cannot do is the per-step
-partial-dot psum across model shards, so M>1 rounds run the jnp
-core.solvers loop; at M=1 (local shard == full w) this kernel is the
-production path unchanged.
+Placement / M>1 (`sparse_local_sdca_zx`): `w` here is whatever shard the
+caller hands in -- gather-dot/scatter-axpy are coordinate-frame-agnostic,
+so under the 2-D (data, model) mesh a device's local w slice with
+shard-local ELL ids (data.sparse.FeatureShards) satisfies the same
+contract with d = d_local. The per-step partial-dot psum the jnp solver
+does is what a single kernel launch cannot -- so the zx schedule
+restructures the walk into block-batched partial-dot exchanges: each
+invocation walks one `block_rows` block using *exchanged* z dots (psum'd
+over `model_axis` between invocations, block_rows floats per hop instead
+of one scalar per step), then computes the local partial gather-dots for
+the next block at the updated u into a z-buffer output. Within a block
+the z dots are stale (computed before the block's own updates) -- that
+staleness, dialed by block_rows, is exactly the Theta-approximation
+Ma et al. 1512.04039 licenses, certified by `gap_at_v`; every shard sees
+identical (z, q, y, alpha, dalpha) so the delta decisions -- and the
+replicated dalpha -- stay identical across model shards by construction.
 """
 from __future__ import annotations
 
@@ -86,14 +108,28 @@ def _unrolled_fori(n: int, unroll: int, body, init):
     return jax.lax.fori_loop(0, n // unroll, block, init)
 
 
+def _prox(uv, prox_kappa):
+    """In-register scalar soft-threshold: the fused `reg.conj_grad` map
+    applied to one gathered u entry. `prox_kappa` is a *static* Python
+    float (or None), so the None path adds no ops to the jaxpr -- the
+    L2 / hoisted-map kernels stay bit-for-bit with PR 8."""
+    if prox_kappa is None:
+        return uv
+    kap = jnp.float32(prox_kappa)
+    return jnp.sign(uv) * jnp.maximum(jnp.abs(uv) - kap, jnp.float32(0.0))
+
+
 def _block_walk(c_blk, v_blk, y_blk, a_blk, m_blk, base, da_scr, u_scr,
                 scale, *, loss: Loss, block_rows: int, r_max: int,
-                slot_unroll: int):
+                slot_unroll: int, prox_kappa: float | None = None):
     """The sequential coordinate walk of one (block_rows, r_max) ELL tile
     against the persistent u/dalpha scratch. Shared verbatim by the
     single-buffered and the pipelined kernels -- identical tile values in,
     bit-for-bit identical scratch updates out, whatever delivered the
-    tile (implicit Pallas pipeline or explicit DMA ring)."""
+    tile (implicit Pallas pipeline or explicit DMA ring). With
+    `prox_kappa` set, each gathered u entry passes through the
+    soft-threshold conjugate map before the dot -- the per-step-exact
+    generalized subproblem; the scatter still updates raw (v-space) u."""
 
     def step(i, _):
         ci = jax.lax.dynamic_index_in_dim(c_blk, i, axis=0, keepdims=False)
@@ -104,7 +140,7 @@ def _block_walk(c_blk, v_blk, y_blk, a_blk, m_blk, base, da_scr, u_scr,
             c = jax.lax.dynamic_index_in_dim(ci, r, keepdims=False)
             uv = jax.lax.dynamic_index_in_dim(u, c, keepdims=False)
             vv = jax.lax.dynamic_index_in_dim(vi, r, keepdims=False)
-            return z + uv * vv
+            return z + _prox(uv, prox_kappa) * vv
 
         z = _unrolled_fori(r_max, slot_unroll, gather_dot, jnp.float32(0.0))
         q = scale * jnp.sum(vi * vi)
@@ -140,7 +176,8 @@ def _sparse_sdca_kernel(scale_ref,                     # SMEM (1, 1)
                         da_out, du_out,                # VMEM (1, nk), (1, d)
                         da_scr, u_scr,                 # VMEM scratch
                         *, loss: Loss, block_rows: int, nk: int, r_max: int,
-                        slot_unroll: int = 1):
+                        slot_unroll: int = 1,
+                        prox_kappa: float | None = None):
     """Single-buffered (buffer_depth=1) kernel: cols/vals tiles arrive via
     the implicit Pallas pipeline, one block resident at a time."""
     p = pl.program_id(0)
@@ -156,7 +193,8 @@ def _sparse_sdca_kernel(scale_ref,                     # SMEM (1, 1)
 
     _block_walk(c_ref[...], v_ref[...], y_ref[...], a_ref[...], m_ref[...],
                 b * block_rows, da_scr, u_scr, scale, loss=loss,
-                block_rows=block_rows, r_max=r_max, slot_unroll=slot_unroll)
+                block_rows=block_rows, r_max=r_max, slot_unroll=slot_unroll,
+                prox_kappa=prox_kappa)
 
     @pl.when(jnp.logical_and(p == npass - 1, b == nb - 1))
     def _emit():
@@ -174,7 +212,8 @@ def _sparse_sdca_pipelined_kernel(scale_ref,           # SMEM (1, 1)
                                   c_sem, v_sem,        # DMA sems (depth,)
                                   *, loss: Loss, block_rows: int, nk: int,
                                   r_max: int, slot_unroll: int,
-                                  buffer_depth: int):
+                                  buffer_depth: int,
+                                  prox_kappa: float | None = None):
     """Explicitly multi-buffered kernel: cols/vals stay in HBM and a
     depth-slot VMEM ring is fed by `make_async_copy` DMAs.
 
@@ -223,7 +262,8 @@ def _sparse_sdca_pipelined_kernel(scale_ref,           # SMEM (1, 1)
 
     _block_walk(c_buf[slot], v_buf[slot], y_ref[...], a_ref[...], m_ref[...],
                 b * block_rows, da_scr, u_scr, scale, loss=loss,
-                block_rows=block_rows, r_max=r_max, slot_unroll=slot_unroll)
+                block_rows=block_rows, r_max=r_max, slot_unroll=slot_unroll,
+                prox_kappa=prox_kappa)
 
     @pl.when(jnp.logical_and(p == npass - 1, b == nb - 1))
     def _emit():
@@ -236,6 +276,7 @@ def sparse_local_sdca(cols: jnp.ndarray, vals: jnp.ndarray, y: jnp.ndarray,
                       scale: jnp.ndarray, *, loss: Loss, n_passes: int = 1,
                       block_rows: int = 128, slot_unroll: int = 1,
                       buffer_depth: int = 1,
+                      prox_kappa: float | None = None,
                       vmem_limit_mb: int | None = None,
                       interpret: bool | None = None):
     """Run `n_passes` block-sequential SDCA passes over one ELL shard.
@@ -251,9 +292,16 @@ def sparse_local_sdca(cols: jnp.ndarray, vals: jnp.ndarray, y: jnp.ndarray,
     results. `buffer_depth=1` is the single-buffered kernel (tiles via
     the implicit Pallas pipeline); >=2 runs the explicitly multi-buffered
     kernel with a depth-slot DMA prefetch ring over the cols/vals tiles
-    (2 = double, 4 = quad buffering). `vmem_limit_mb` raises Mosaic's
-    VMEM ceiling on real TPUs (ignored in interpret mode and on jax
-    builds without `pltpu.TPUCompilerParams`).
+    (2 = double, 4 = quad buffering).
+
+    `prox_kappa` (static float, None = off) fuses the soft-threshold
+    conjugate map into every gather -- pass w = v (scaled dual state)
+    when set. None emits exactly the PR-8 jaxpr.
+
+    `vmem_limit_mb` both raises Mosaic's VMEM ceiling on real TPUs and
+    is the budget `vmem_budget` is enforced against (default 16 MiB) --
+    configs that blow it raise ValueError instead of relying on the
+    compiler clamp.
     """
     _check_loss(loss)
     nk, r_max = cols.shape
@@ -264,6 +312,11 @@ def sparse_local_sdca(cols: jnp.ndarray, vals: jnp.ndarray, y: jnp.ndarray,
     nb = nk // block_rows
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
+    _enforce_vmem(vmem_budget(nk=nk, d=d, r_max=r_max,
+                              block_rows=block_rows,
+                              buffer_depth=buffer_depth,
+                              prox_fused=prox_kappa is not None),
+                  vmem_limit_mb, where="sparse_local_sdca")
 
     f32 = jnp.float32
     grid = (n_passes, nb)
@@ -281,7 +334,8 @@ def sparse_local_sdca(cols: jnp.ndarray, vals: jnp.ndarray, y: jnp.ndarray,
     if buffer_depth == 1:
         kernel = functools.partial(_sparse_sdca_kernel, loss=loss,
                                    block_rows=block_rows, nk=nk,
-                                   r_max=r_max, slot_unroll=slot_unroll)
+                                   r_max=r_max, slot_unroll=slot_unroll,
+                                   prox_kappa=prox_kappa)
         tile_specs = [
             pl.BlockSpec((block_rows, r_max), lambda p, b: (b, 0)),  # cols
             pl.BlockSpec((block_rows, r_max), lambda p, b: (b, 0)),  # vals
@@ -290,7 +344,8 @@ def sparse_local_sdca(cols: jnp.ndarray, vals: jnp.ndarray, y: jnp.ndarray,
         kernel = functools.partial(_sparse_sdca_pipelined_kernel, loss=loss,
                                    block_rows=block_rows, nk=nk,
                                    r_max=r_max, slot_unroll=slot_unroll,
-                                   buffer_depth=buffer_depth)
+                                   buffer_depth=buffer_depth,
+                                   prox_kappa=prox_kappa)
         # cols/vals stay in HBM; the kernel DMAs tiles into a VMEM ring
         tile_specs = [
             pl.BlockSpec(memory_space=pltpu.ANY),                  # cols
@@ -336,20 +391,263 @@ def sparse_local_sdca(cols: jnp.ndarray, vals: jnp.ndarray, y: jnp.ndarray,
     return da[0], du[0]
 
 
+def _sparse_sdca_zx_kernel(scale_ref,                  # SMEM (1, 1)
+                           c_ref, v_ref,               # VMEM (B, r_max) walk
+                           cn_ref, vn_ref,             # VMEM (B, r_max) next
+                           z_ref,                      # VMEM (1, B) exchanged
+                           y_ref, a_ref, m_ref,        # VMEM (1, B)
+                           sq_ref,                     # VMEM (1, B) global q
+                           da_ref,                     # VMEM (1, B) dalpha in
+                           u_ref,                      # VMEM (1, d) u in
+                           u_out, da_out, zn_out,      # (1,d), (1,B), (1,B)
+                           *, loss: Loss, block_rows: int, r_max: int,
+                           slot_unroll: int, prox_kappa: float | None):
+    """One block of the z-exchange (M>1) schedule.
+
+    Walks the resident block's rows consuming the *exchanged* z dots
+    (z_ref -- already psum'd over the model axis by the driver; within
+    the block they are stale w.r.t. this block's own updates, the Theta
+    knob), with q from the global row sqnorms input, then computes the
+    local partial gather-dots of the *next* block at the updated u into
+    zn_out for the driver to psum. Every input that feeds a delta
+    decision (z, q, y, alpha, dalpha, mask, scale) is identical on all
+    model shards, so the emitted dalpha is replicated by construction;
+    only the u scatter touches shard-local columns."""
+    scale = scale_ref[0, 0]
+    u_out[...] = u_ref[...]
+    da_out[...] = da_ref[...]
+
+    def step(i, _):
+        ci = jax.lax.dynamic_index_in_dim(c_ref[...], i, axis=0,
+                                          keepdims=False)
+        vi = jax.lax.dynamic_index_in_dim(v_ref[...], i, axis=0,
+                                          keepdims=False)
+        z = jax.lax.dynamic_slice_in_dim(z_ref[...], i, 1, axis=1)[0, 0]
+        q = scale * jax.lax.dynamic_slice_in_dim(sq_ref[...], i, 1,
+                                                 axis=1)[0, 0]
+        yi = jax.lax.dynamic_slice_in_dim(y_ref[...], i, 1, axis=1)[0, 0]
+        mi = jax.lax.dynamic_slice_in_dim(m_ref[...], i, 1, axis=1)[0, 0]
+        ai = jax.lax.dynamic_slice_in_dim(a_ref[...], i, 1, axis=1)[0, 0]
+        dai = jax.lax.dynamic_slice_in_dim(da_out[...], i, 1, axis=1)[0, 0]
+        abar = ai + dai
+        delta = loss.cd_update(abar, z, q, yi) * mi
+        da_out[...] = jax.lax.dynamic_update_slice_in_dim(
+            da_out[...], (dai + delta)[None, None], i, axis=1)
+        coef = scale * delta
+        u = u_out[...][0]
+
+        def scatter_axpy(r, u):
+            c = jax.lax.dynamic_index_in_dim(ci, r, keepdims=False)
+            uv = jax.lax.dynamic_index_in_dim(u, c, keepdims=False)
+            vv = jax.lax.dynamic_index_in_dim(vi, r, keepdims=False)
+            return jax.lax.dynamic_update_index_in_dim(
+                u, uv + coef * vv, c, axis=0)
+
+        u_out[...] = _unrolled_fori(r_max, slot_unroll, scatter_axpy,
+                                    u)[None]
+        return 0
+
+    jax.lax.fori_loop(0, block_rows, step, 0)
+
+    # local partial gather-dots for the next block at the updated u --
+    # same ascending slot order as _block_walk's gather, prox fused
+    u = u_out[...][0]
+
+    def next_dot(i, _):
+        ci = jax.lax.dynamic_index_in_dim(cn_ref[...], i, axis=0,
+                                          keepdims=False)
+        vi = jax.lax.dynamic_index_in_dim(vn_ref[...], i, axis=0,
+                                          keepdims=False)
+
+        def gather_dot(r, z):
+            c = jax.lax.dynamic_index_in_dim(ci, r, keepdims=False)
+            uv = jax.lax.dynamic_index_in_dim(u, c, keepdims=False)
+            vv = jax.lax.dynamic_index_in_dim(vi, r, keepdims=False)
+            return z + _prox(uv, prox_kappa) * vv
+
+        z = _unrolled_fori(r_max, slot_unroll, gather_dot, jnp.float32(0.0))
+        zn_out[...] = jax.lax.dynamic_update_slice_in_dim(
+            zn_out[...], z[None, None], i, axis=1)
+        return 0
+
+    jax.lax.fori_loop(0, block_rows, next_dot, 0)
+
+
+def sparse_local_sdca_zx(cols: jnp.ndarray, vals: jnp.ndarray,
+                         y: jnp.ndarray, alpha: jnp.ndarray,
+                         mask: jnp.ndarray, w: jnp.ndarray,
+                         scale: jnp.ndarray, sqnorms: jnp.ndarray, *,
+                         loss: Loss, n_passes: int = 1,
+                         block_rows: int = 16, slot_unroll: int = 1,
+                         prox_kappa: float | None = None,
+                         model_axis: str | None = None,
+                         vmem_limit_mb: int | None = None,
+                         interpret: bool | None = None):
+    """`n_passes` SDCA passes via the block-batched z-exchange schedule.
+
+    Same contract as `sparse_local_sdca` plus `sqnorms` (nk,), the
+    *global* row squared norms (psum'd over model shards by the caller
+    when M>1 -- the subproblem's quadratic coefficient must see the full
+    row). cols/vals hold shard-local column ids and w the matching local
+    slice; `model_axis` names the mesh axis to psum the block_rows-sized
+    z buffer over between kernel invocations (None = single shard, same
+    schedule, no collective -- the bench/test harness path).
+
+    The scan carries (u, dalpha, z_ex): invocation g walks block g % nb
+    with z_ex and emits the next block's local partial dots, which the
+    psum turns into the next z_ex -- n_passes*nb + 1 exchanges of
+    block_rows floats per round (the +1 is the prologue priming block
+    0's dots at u = w), vs one scalar psum per coordinate step in the
+    jnp path.
+    """
+    _check_loss(loss)
+    nk, r_max = cols.shape
+    d = w.shape[0]
+    B = block_rows
+    assert nk % B == 0, (nk, B)
+    assert vals.shape == (nk, r_max), (vals.shape, cols.shape)
+    assert sqnorms.shape == (nk,), sqnorms.shape
+    nb = nk // B
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    _enforce_vmem(vmem_budget(nk=nk, d=d, r_max=r_max, block_rows=B,
+                              buffer_depth=1,
+                              prox_fused=prox_kappa is not None, zx=True),
+                  vmem_limit_mb, where="sparse_local_sdca_zx")
+
+    f32 = jnp.float32
+    cols = cols.astype(jnp.int32)
+    vals = vals.astype(f32)
+    y = y.astype(f32)
+    alpha = alpha.astype(f32)
+    mask = mask.astype(f32)
+    w = w.astype(f32)
+    sq = sqnorms.astype(f32)
+    scale = jnp.asarray(scale, f32)
+
+    extra = {}
+    if vmem_limit_mb and not interpret:
+        params_cls = getattr(pltpu, "TPUCompilerParams", None)
+        if params_cls is not None:
+            extra["compiler_params"] = params_cls(
+                vmem_limit_bytes=int(vmem_limit_mb) * 2**20)
+
+    kernel = functools.partial(_sparse_sdca_zx_kernel, loss=loss,
+                               block_rows=B, r_max=r_max,
+                               slot_unroll=slot_unroll,
+                               prox_kappa=prox_kappa)
+    grid = (1,)
+    tile = pl.BlockSpec((B, r_max), lambda g: (0, 0))
+    vec = pl.BlockSpec((1, B), lambda g: (0, 0))
+    zx_call = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM),
+                  tile, tile, tile, tile, vec, vec, vec, vec, vec, vec,
+                  pl.BlockSpec((1, d), lambda g: (0, 0))],
+        out_specs=[pl.BlockSpec((1, d), lambda g: (0, 0)),
+                   vec, vec],
+        out_shape=[jax.ShapeDtypeStruct((1, d), f32),
+                   jax.ShapeDtypeStruct((1, B), f32),
+                   jax.ShapeDtypeStruct((1, B), f32)],
+        interpret=interpret,
+        **extra,
+    )
+
+    def partial_dots(u, c_blk, v_blk):
+        # per-row accumulation in ascending slot order -- the same
+        # sequence the kernel's gather loop walks
+        def body(r, z):
+            return z + _prox(u[c_blk[:, r]], prox_kappa) * v_blk[:, r]
+
+        return jax.lax.fori_loop(0, r_max, body, jnp.zeros(B, f32))
+
+    def exchange(z):
+        return jax.lax.psum(z, model_axis) if model_axis else z
+
+    z0 = exchange(partial_dots(w, cols[:B], vals[:B]))
+
+    def body(carry, g):
+        u, dal, z_ex = carry
+        blk = g % nb
+        nxt = (g + 1) % nb
+        sl = lambda arr, at: jax.lax.dynamic_slice_in_dim(  # noqa: E731
+            arr, at * B, B, axis=0)
+        u2, da2, zn = zx_call(
+            scale.reshape(1, 1), sl(cols, blk), sl(vals, blk),
+            sl(cols, nxt), sl(vals, nxt), z_ex.reshape(1, B),
+            sl(y, blk).reshape(1, B), sl(alpha, blk).reshape(1, B),
+            sl(mask, blk).reshape(1, B), sl(sq, blk).reshape(1, B),
+            sl(dal, blk).reshape(1, B), u.reshape(1, d))
+        dal = jax.lax.dynamic_update_slice_in_dim(dal, da2[0], blk * B,
+                                                  axis=0)
+        return (u2[0], dal, exchange(zn[0])), None
+
+    (u, dalpha, _), _ = jax.lax.scan(
+        body, (w, jnp.zeros(nk, f32), z0),
+        jnp.arange(n_passes * nb, dtype=jnp.int32))
+    return dalpha, u - w
+
+
+def zx_exchanges(nk: int, block_rows: int, n_passes: int = 1) -> int:
+    """Number of block_rows-sized z psums one zx round performs: one per
+    scheduled block plus the prologue priming block 0 at u = w."""
+    return n_passes * (nk // block_rows) + 1
+
+
 def vmem_budget(nk: int, d: int, r_max: int, block_rows: int = 128,
-                buffer_depth: int = 1) -> dict:
+                buffer_depth: int = 1, prox_fused: bool = False,
+                model_shards: int = 1, zx: bool | None = None) -> dict:
     """Static VMEM working set of one grid step (f32/int32 = 4 bytes).
 
     At depth >= 2 the cols/vals tile is a depth-slot ring (the DMA
-    prefetch buffers); u/dalpha are depth-independent."""
+    prefetch buffers); u/dalpha are depth-independent. The fused prox
+    is applied in-register on each gathered scalar -- zero extra VMEM
+    (prox_kb stays 0; the flag is recorded so callers can see which
+    schedule was priced). `zx` prices the z-exchange kernel instead
+    (defaults on when model_shards > 1): two (B, r_max) cols+vals tile
+    pairs (walk + next block), u resident twice (in + out), eight
+    B-sized lane vectors (z/y/alpha/mask/sqnorms/dalpha-in/out/zn) --
+    and no full-nk dalpha, which lives outside the kernel in the scan
+    carry. `zx_exchange_kb` is the psum'd wire buffer (block_rows
+    floats)."""
     f = 4
-    tile = max(1, buffer_depth) * block_rows * r_max * 2 * f  # cols + vals
-    u = d * f
-    dalpha = nk * f
-    total = tile + 2 * u + dalpha + 3 * block_rows * f
-    dense_tile = block_rows * d * f
+    B = block_rows
+    if zx is None:
+        zx = model_shards > 1
+    depth = max(1, buffer_depth)
+    dense_tile = B * d * f
+    if zx:
+        tile = 2 * B * r_max * 2 * f           # walk + next (cols + vals)
+        u = d * f
+        dalpha = B * f                         # in-kernel slice only
+        total = tile + 2 * u + 8 * B * f
+    else:
+        tile = depth * B * r_max * 2 * f       # cols + vals ring
+        u = d * f
+        dalpha = nk * f
+        total = tile + 2 * u + dalpha + 3 * B * f
     return dict(ell_tile_kb=tile / 1024, u_kb=u / 1024,
                 dalpha_kb=dalpha / 1024, total_mb=total / 2**20,
                 fits_16mb=total < 16 * 2**20,
                 dense_tile_mb=dense_tile / 2**20,
-                buffer_depth=max(1, buffer_depth))
+                buffer_depth=depth, prox_fused=bool(prox_fused),
+                prox_kb=0.0, zx=bool(zx),
+                zx_exchange_kb=(B * f / 1024 if zx else 0.0),
+                model_shards=max(1, model_shards))
+
+
+def _enforce_vmem(budget: dict, vmem_limit_mb: int | None, *,
+                  where: str) -> None:
+    """Reject launch configs whose priced working set exceeds the VMEM
+    limit (default 16 MiB) -- a loud ValueError at dispatch beats the
+    compiler silently clamping/spilling (or interpret mode hiding it)."""
+    limit = float(vmem_limit_mb) if vmem_limit_mb else 16.0
+    if budget["total_mb"] > limit:
+        raise ValueError(
+            f"{where}: priced VMEM working set {budget['total_mb']:.2f} "
+            f"MiB exceeds the {limit:.0f} MiB limit "
+            f"(block_rows x r_max tile ring {budget['ell_tile_kb']:.0f} "
+            f"KiB, u {budget['u_kb']:.0f} KiB, dalpha "
+            f"{budget['dalpha_kb']:.0f} KiB, zx={budget['zx']}); shrink "
+            f"block_rows/buffer_depth or raise vmem_limit_mb")

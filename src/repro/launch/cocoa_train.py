@@ -54,7 +54,8 @@ import numpy as np
 from repro import comm
 from repro.checkpoint import CheckpointManager
 from repro.core import CoCoAConfig, solve
-from repro.core.cocoa import CoCoAState, init_state, reshard_w_state
+from repro.core.cocoa import (_SPARSE_SOLVERS, CoCoAState, init_state,
+                              reshard_w_state)
 from repro.core.regularizers import get_regularizer
 from repro.data import DATASETS, load, partition
 from repro.data.sparse import (FeatureShards, SparseShards, partition_sparse,
@@ -411,11 +412,22 @@ def main():
     # that could drift from what the records/JSONL say)
     print(agg.format_summary())
     topo = comm.Topology.simulated(K, topology=args.topology)
+    # price the model hop the way the run actually paid it: the kernel
+    # path exchanges block-batched partial dots (zx plan), the jnp path
+    # one scalar psum per coordinate step
+    zx_plan = None
+    if wspec.sharded and isinstance(Xp, FeatureShards) and \
+            _SPARSE_SOLVERS.get(args.solver) == "sdca_sparse_kernel":
+        from repro.kernels.ops import sparse_zx_plan
+        zx_plan = sparse_zx_plan(Xp.cols.shape[2], wspec.d_local, args.H,
+                                 r_max=int(Xp.cols.shape[-1]),
+                                 reg_family=getattr(reg, "family", "other"),
+                                 model_shards=M)
     tr = comm.CommTracer.for_run(K=K, d_local=wspec.d_local,
                                  compressor=cfg.compressor(M=M),
                                  topo=topo, gather=args.gather,
-                                 extra_hops=comm.model_hops(wspec, K,
-                                                            args.H))
+                                 extra_hops=comm.model_hops(wspec, K, args.H,
+                                                            zx_plan=zx_plan))
     pr = tr.per_round()
     dense_floats = K * d_dim
     print(f"comm[{args.topology}{'+gather' if args.gather else ''}"

@@ -49,6 +49,23 @@ def test_wspec_column_map_roundtrip():
                                       np.asarray(cols))
 
 
+def test_model_hops_zx_plan_prices_block_exchange():
+    """The kernel path's model-axis hop: `exchanges * block_rows` floats
+    per device per round -- block-granular psums, NOT the jnp path's H
+    scalar psums and NOT d/M-sized messages."""
+    ws = comm.WSpec(d=100, M=2, model_axis="model")
+    (h,) = comm.model_hops(ws, 3, 256)
+    assert (h.name, h.axis) == ("model_z", "model")
+    assert h.messages == 6 and h.floats_per_message == 256
+    plan = dict(block_rows=16, exchanges=9)       # 8 blocks + prologue
+    (hz,) = comm.model_hops(ws, 3, 256, zx_plan=plan)
+    assert (hz.name, hz.axis) == ("model_zx", "model")
+    assert hz.messages == 6 and hz.floats_per_message == 9 * 16
+    assert hz.floats == 6 * 9 * 16
+    # replicated w: no model hop, zx or not
+    assert comm.model_hops(comm.WSpec(d=100), 3, 256, zx_plan=plan) == ()
+
+
 def test_wspec_pad_unpad():
     ws = comm.WSpec(d=10, M=4, model_axis="model")
     w = jnp.arange(10, dtype=jnp.float32)
@@ -493,9 +510,13 @@ def test_feature_sharded_solver_guards():
     with pytest.raises(ValueError, match="feature-sharded"):
         cocoa._resolve_solver("sdca_kernel", sparse=False,
                               feature_sharded=True)
-    with pytest.raises(ValueError, match="feature-sharded"):
-        cocoa._resolve_solver("sdca_sparse_kernel", sparse=True,
-                              feature_sharded=True)
+    # the sparse kernel runs M>1 natively via the z-exchange schedule
+    assert cocoa._resolve_solver(
+        "sdca_sparse_kernel", sparse=True,
+        feature_sharded=True) == "sdca_sparse_kernel"
+    assert cocoa._resolve_solver(
+        "sdca_kernel", sparse=True,
+        feature_sharded=True) == "sdca_sparse_kernel"
     assert cocoa._resolve_solver("sdca", sparse=True,
                                  feature_sharded=True) == "sdca_sparse"
     from repro.core.solvers import local_sdca, local_sdca_sparse
@@ -721,3 +742,76 @@ def test_cocoa_2d_history_tracks_per_axis_volume():
         print("2D WIRE ACCOUNTING OK")
     """, devices=4)
     assert "2D WIRE ACCOUNTING OK" in out
+
+
+def test_cocoa_2d_sparse_kernel_path_parity():
+    """Acceptance: CoCoAConfig(solver="sdca_kernel") on a (2, 2) mesh
+    runs the sparse kernel's z-exchange schedule -- no jnp fallback,
+    LAST_SPARSE_CONFIG pins the launch (model_shards=2, zx, fused prox)
+    -- and its final certified gap (duality.gap_at_v inside solve) lands
+    within 1e-5 of the jnp sharded path's at equal rounds. Bit-equality
+    is NOT the contract here: the zx schedule's within-block stale z is
+    a Theta-approximation knob (Ma et al. 1512.04039); the duality gap
+    is the certificate."""
+    out = _run("""
+        import jax, numpy as np
+        from repro.core import CoCoAConfig, solve
+        from repro.data.sparse import make_sparse_classification, \\
+            partition_sparse, shard_features
+        from repro.kernels import ops
+        csr, y = make_sparse_classification(256, 512, density=0.02, seed=0)
+        sh, yp, mk = partition_sparse(csr, y, 2, seed=1)
+        fs = shard_features(sh, 2)
+        mesh = jax.make_mesh((2, 2), ("data", "model"))
+        kw = dict(loss="smooth_hinge", lam=1e-3, H=256, reg="elastic:0.5",
+                  backend="shard_map", model_axis="model")
+        rounds = 40
+        rj = solve(CoCoAConfig.adding(2, solver="sdca", **kw), fs, yp, mk,
+                   rounds=rounds, gap_every=rounds, seed=2, mesh=mesh)
+        rk = solve(CoCoAConfig.adding(2, solver="sdca_kernel", **kw),
+                   fs, yp, mk, rounds=rounds, gap_every=rounds, seed=2,
+                   mesh=mesh)
+        cfgd = ops.LAST_SPARSE_CONFIG
+        assert cfgd["zx"] is True and cfgd["model_shards"] == 2, cfgd
+        assert cfgd["prox_fused"] is True, cfgd
+        gj, gk = rj.history["gap"][-1], rk.history["gap"][-1]
+        assert gk >= -1e-7, gk                 # certified nonneg
+        assert abs(gj - gk) < 1e-5, (gj, gk)
+        print("2D KERNEL PATH OK", gj, gk)
+    """, devices=4)
+    assert "2D KERNEL PATH OK" in out
+
+
+def test_cocoa_2d_kernel_history_prices_zx_wire():
+    """The kernel path's model-axis hop is the z-exchange, not the jnp
+    per-step scalar psum: history must price K*M devices each moving
+    `exchanges * block_rows` floats per round -- the same resolve/clamp
+    arithmetic the dispatch launches with (sparse_zx_plan), asserted
+    against the analytic n_passes * blocks + 1 prologue."""
+    out = _run("""
+        import jax
+        from repro.core import CoCoAConfig, solve
+        from repro.data.sparse import make_sparse_classification, \\
+            partition_sparse, shard_features
+        from repro.kernels.ops import sparse_zx_plan
+        csr, y = make_sparse_classification(128, 50, density=0.1, seed=0)
+        sh, yp, mk = partition_sparse(csr, y, 2, seed=0)
+        K, M, H, d = 2, 2, 32, 50
+        fs = shard_features(sh, M)
+        mesh = jax.make_mesh((K, M), ("data", "model"))
+        r = solve(CoCoAConfig.adding(K, backend="shard_map",
+                                     model_axis="model", loss="hinge",
+                                     lam=1e-3, H=H, solver="sdca_kernel"),
+                  fs, yp, mk, rounds=2, gap_every=1, mesh=mesh)
+        nk, r_max = fs.cols.shape[2], fs.cols.shape[3]
+        d_loc = -(-d // M)
+        plan = sparse_zx_plan(nk, d_loc, H, r_max=r_max, reg_family="l2",
+                              model_shards=M)
+        assert plan["exchanges"] == plan["n_passes"] * plan["blocks"] + 1
+        per_round = K * d_loc \\
+            + K * M * plan["exchanges"] * plan["block_rows"]
+        assert r.history["comm_floats"] == [per_round, 2 * per_round], \\
+            (r.history["comm_floats"], per_round, plan)
+        print("2D ZX WIRE OK")
+    """, devices=4)
+    assert "2D ZX WIRE OK" in out

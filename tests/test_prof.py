@@ -324,7 +324,8 @@ def test_dispatch_consults_cache_and_results_invariant(tmp_cache):
     r_default = ops.sparse_local_sdca_block(*args)
     assert ops.LAST_SPARSE_CONFIG == {"block_rows": 128, "slot_unroll": 1,
                                       "buffer_depth": 1, "source": "default",
-                                      "clamped": False}
+                                      "clamped": False, "model_shards": 1,
+                                      "prox_fused": False, "zx": False}
 
     get_cache().record(
         "sparse_sdca", jax.default_backend(), d=256,
@@ -334,7 +335,8 @@ def test_dispatch_consults_cache_and_results_invariant(tmp_cache):
     r_cached = ops.sparse_local_sdca_block(*args)
     assert ops.LAST_SPARSE_CONFIG == {"block_rows": 32, "slot_unroll": 1,
                                       "buffer_depth": 2, "source": "cache",
-                                      "clamped": False}
+                                      "clamped": False, "model_shards": 1,
+                                      "prox_fused": False, "zx": False}
     assert jnp.array_equal(r_cached.dalpha, r_default.dalpha)
     assert jnp.array_equal(r_cached.du, r_default.du)
 
@@ -349,7 +351,8 @@ def test_dispatch_consults_cache_and_results_invariant(tmp_cache):
     assert ops.LAST_SPARSE_CONFIG == {"block_rows": 64, "slot_unroll": 1,
                                       "buffer_depth": 2,
                                       "source": "explicit+cache",
-                                      "clamped": False}
+                                      "clamped": False, "model_shards": 1,
+                                      "prox_fused": False, "zx": False}
     assert jnp.array_equal(r_mix.dalpha, r_default.dalpha)
 
 

@@ -447,6 +447,212 @@ def test_cocoa_sparse_comm_floats_accounting():
 
 
 # ----------------------------------------------------------------------------
+# fused in-kernel prox (prox_kappa) + z-exchange schedule
+# ----------------------------------------------------------------------------
+
+def _kappa(reg_spec, lam=1e-3):
+    from repro.core import get_regularizer
+    from repro.kernels.ops import _prox_kappa_of
+    return _prox_kappa_of(get_regularizer(reg_spec), lam)
+
+
+def test_prox_kappa_resolution():
+    """kappa=0 (L2) and regularizers without the scalar-threshold form
+    resolve to None -- the not-fused hoisted-map path; elastic / smoothed
+    L1 resolve to their scaled-frame thresholds."""
+    from dataclasses import replace
+
+    from repro.core import get_regularizer
+    from repro.kernels.ops import _prox_kappa_of
+    assert _kappa("l2") is None
+    assert _kappa("elastic:0.5") == pytest.approx(1.0)
+    assert _kappa("l1s:0.01") == pytest.approx(0.1)        # lam/eps
+    legacy = replace(get_regularizer("elastic:0.5"), prox_kappa=None)
+    assert _prox_kappa_of(legacy, 1e-3) is None
+
+
+@pytest.mark.parametrize("reg_spec", ["elastic:0.5", "l1s:0.01"])
+@pytest.mark.parametrize("br,un,depth", [(32, 1, 1), (64, 2, 2),
+                                         (128, 1, 4)])
+def test_sparse_kernel_fused_prox_bitexact_vs_oracle(reg_spec, br, un,
+                                                     depth):
+    """The conjugate map fused into the kernel -- the scalar
+    soft-threshold applied to each gathered u entry -- against the
+    prox-aware jnp oracle replaying the identical op order: bitwise at
+    every launch config, multi-pass, exactly like the L2 grid."""
+    loss = get_loss("smooth_hinge1")
+    shard, y, a, m, w = _shard(128, 128, density=0.1, seed=37)
+    kap = _kappa(reg_spec)
+    scale = 2.0 / (1e-3 * 128)
+    da_r, du_r = sparse_local_sdca_ref(shard.cols, shard.vals, y, a, m, w,
+                                       scale, loss=loss, n_passes=2,
+                                       prox_kappa=kap)
+    da_k, du_k = sparse_local_sdca(shard.cols, shard.vals, y, a, m, w,
+                                   scale, loss=loss, n_passes=2,
+                                   block_rows=br, slot_unroll=un,
+                                   buffer_depth=depth, prox_kappa=kap,
+                                   interpret=True)
+    np.testing.assert_array_equal(np.asarray(da_k), np.asarray(da_r))
+    np.testing.assert_array_equal(np.asarray(du_k), np.asarray(du_r))
+
+
+def test_sparse_dispatch_l2_not_fused_elastic_fused():
+    """reg='l2' must NOT fuse (kappa 0 == identity map): the dispatch
+    reports prox_fused=False and returns byte-identical results to a
+    reg-less call -- the PR-8 L2 jaxpr is untouched. An elastic reg on
+    the same inputs reports prox_fused=True."""
+    from repro.core import get_regularizer
+    from repro.kernels import ops
+    loss = get_loss("hinge")
+    shard, y, a, m, w = _shard(100, 130, density=0.1, seed=41)
+    args = (shard, y, a, m, w, jax.random.PRNGKey(0), loss, 1e-3, 100.0,
+            4.0, 200)
+    r_plain = sparse_local_sdca_block(*args, interpret=True)
+    r_l2 = sparse_local_sdca_block(*args, interpret=True,
+                                   reg=get_regularizer("l2"))
+    assert ops.LAST_SPARSE_CONFIG["prox_fused"] is False
+    assert ops.LAST_SPARSE_CONFIG["model_shards"] == 1
+    assert ops.LAST_SPARSE_CONFIG["zx"] is False
+    np.testing.assert_array_equal(np.asarray(r_l2.dalpha),
+                                  np.asarray(r_plain.dalpha))
+    np.testing.assert_array_equal(np.asarray(r_l2.du),
+                                  np.asarray(r_plain.du))
+    sparse_local_sdca_block(*args, interpret=True,
+                            reg=get_regularizer("elastic:0.5"))
+    assert ops.LAST_SPARSE_CONFIG["prox_fused"] is True
+
+
+def test_cocoa_fused_prox_rounds_to_gap_regression():
+    """Acceptance: the fused-prox kernel path reaches gap <= 1e-4 on
+    elastic-net tiny_sparse in at most 1.25x the jnp solver's rounds --
+    the old hoisted-map path needed ~3x. Both runs share the rng stream,
+    and both gaps are certified at the carried v (duality.gap_at_v
+    inside solve's gap evaluation)."""
+    from repro.data.synthetic import load
+
+    csr, y = load("tiny_sparse")
+    sh, yp, mk = sp.partition_sparse(csr, y, 4, seed=0)
+    eps = 1e-4
+    rounds = dict()
+    for solver in ("sdca", "sdca_kernel"):
+        cfg = CoCoAConfig.adding(4, loss="smooth_hinge", lam=1e-3, H=256,
+                                 solver=solver, reg="elastic:0.5")
+        r = solve(cfg, sh, yp, mk, rounds=64, eps_gap=eps, gap_every=1,
+                  seed=5)
+        assert r.history["gap"][-1] <= eps, (solver, r.history["gap"])
+        rounds[solver] = r.history["round"][-1]
+    assert rounds["sdca_kernel"] <= 1.25 * rounds["sdca"] + 1, rounds
+
+
+def test_sparse_zx_block1_bitexact_vs_fused_sequential():
+    """The z-exchange schedule at block_rows=1 *is* sequential SDCA --
+    every row's z is exchanged fresh, the staleness window is empty --
+    so it must reproduce the fused sequential kernel bit for bit. This
+    anchors the schedule's arithmetic: only the staleness (block_rows >
+    1) may ever change a result, never the exchange plumbing."""
+    from repro.kernels.sparse_sdca import sparse_local_sdca_zx
+    loss = get_loss("hinge")
+    shard, y, a, m, w = _shard(48, 96, density=0.1, seed=43)
+    kap = _kappa("elastic:0.5")
+    scale = 4.0 / (1e-3 * 48)
+    sq = jnp.sum(shard.vals * shard.vals, axis=1)
+    da_z, du_z = sparse_local_sdca_zx(shard.cols, shard.vals, y, a, m, w,
+                                      scale, sq, loss=loss, n_passes=2,
+                                      block_rows=1, prox_kappa=kap,
+                                      interpret=True)
+    da_s, du_s = sparse_local_sdca(shard.cols, shard.vals, y, a, m, w,
+                                   scale, loss=loss, n_passes=2,
+                                   block_rows=1, prox_kappa=kap,
+                                   interpret=True)
+    np.testing.assert_array_equal(np.asarray(da_z), np.asarray(da_s))
+    np.testing.assert_array_equal(np.asarray(du_z), np.asarray(du_s))
+
+
+def test_sparse_zx_multiblock_keeps_du_contract():
+    """At block_rows > 1 the schedule runs each block against a stale z
+    (the Theta knob) -- the trajectory may differ from sequential SDCA,
+    but du == scale * A^T dalpha must hold exactly as for every other
+    solver path (the scatter updates raw u through the same axpy)."""
+    from repro.kernels.sparse_sdca import sparse_local_sdca_zx
+    loss = get_loss("smooth_hinge1")
+    shard, y, a, m, w = _shard(96, 64, density=0.15, seed=47)
+    scale = 4.0 / (1e-3 * 96)
+    sq = jnp.sum(shard.vals * shard.vals, axis=1)
+    da, du = sparse_local_sdca_zx(shard.cols, shard.vals, y, a, m, w,
+                                  scale, sq, loss=loss, n_passes=1,
+                                  block_rows=16, prox_kappa=None,
+                                  interpret=True)
+    Xd = np.asarray(sp.densify(shard))
+    ref = scale * (Xd.T @ np.asarray(da))
+    np.testing.assert_allclose(np.asarray(du), ref, rtol=2e-4, atol=1e-4)
+    assert float(jnp.max(jnp.abs(da))) > 0.0
+
+
+def test_sparse_zx_dispatch_forced_single_shard():
+    """zx=True forces the z-exchange schedule without a mesh (the bench
+    path); the dispatch reports it and the SDCAResult contract holds.
+    zx=False under a model_axis is invalid."""
+    from repro.kernels import ops
+    loss = get_loss("hinge")
+    shard, y, a, m, w = _shard(100, 130, density=0.1, seed=53)
+    res = sparse_local_sdca_block(shard, y, a, m, w, jax.random.PRNGKey(0),
+                                  loss, 1e-3, 100.0, 4.0, 200,
+                                  interpret=True, zx=True)
+    assert ops.LAST_SPARSE_CONFIG["zx"] is True
+    assert ops.LAST_SPARSE_CONFIG["model_shards"] == 1
+    scale = 4.0 / (1e-3 * 100)
+    Xd = np.asarray(sp.densify(shard))
+    ref = scale * (Xd.T @ np.asarray(res.dalpha))
+    np.testing.assert_allclose(np.asarray(res.du), ref, rtol=2e-4,
+                               atol=1e-4)
+    with pytest.raises(ValueError, match="zx=False"):
+        sparse_local_sdca_block(shard, y, a, m, w, jax.random.PRNGKey(0),
+                                loss, 1e-3, 100.0, 4.0, 200,
+                                interpret=True, model_axis="model",
+                                zx=False)
+
+
+def test_sparse_zx_exchanges_and_vmem_pricing():
+    """zx wire arithmetic (n_passes * blocks + 1 prologue) and the
+    priced z-exchange buffer / scratch in vmem_budget; the zx working
+    set is block-sized, not shard-sized, so production shapes that fit
+    sequentially fit the schedule with room to spare."""
+    from repro.kernels.sparse_sdca import zx_exchanges
+    assert zx_exchanges(128, 16) == 9                  # 8 blocks + prologue
+    assert zx_exchanges(128, 16, n_passes=3) == 25
+    vm = vmem_budget(nk=16384, d=47236, r_max=128, block_rows=16,
+                     model_shards=2)
+    assert vm["zx"] is True and vm["model_shards"] == 2
+    assert vm["zx_exchange_kb"] == pytest.approx(16 * 4 / 1024)
+    assert vm["fits_16mb"]
+    vm1 = vmem_budget(nk=16384, d=47236, r_max=128)
+    assert vm1["zx"] is False and vm1["zx_exchange_kb"] == 0.0
+    assert vm1["prox_fused"] is False
+
+
+def test_sparse_vmem_rejection():
+    """Over-budget configs are rejected at dispatch, not silently
+    launched: the priced working set names the limit it exceeds, and an
+    explicit vmem_limit_mb raises the ceiling."""
+    loss = get_loss("hinge")
+    cols = jnp.zeros((1024, 1024), jnp.int32)
+    vals = jnp.zeros((1024, 1024))
+    one = jnp.ones(1024)
+    w_big = jnp.zeros(2_000_000)
+    with pytest.raises(ValueError, match="exceeds"):
+        sparse_local_sdca(cols, vals, one, jnp.zeros(1024), one, w_big,
+                          1.0, loss=loss, block_rows=1024, buffer_depth=4,
+                          interpret=True)
+    # same config under a raised explicit limit prices fine
+    from repro.kernels.sparse_sdca import _enforce_vmem
+    b = vmem_budget(nk=1024, d=2_000_000, r_max=1024, block_rows=1024,
+                    buffer_depth=4)
+    _enforce_vmem(b, 64, where="test")                  # no raise
+    with pytest.raises(ValueError, match="test"):
+        _enforce_vmem(b, 16, where="test")
+
+
+# ----------------------------------------------------------------------------
 # streaming shard ingest: chunks -> per-shard FeatureShards, no global array
 # ----------------------------------------------------------------------------
 
