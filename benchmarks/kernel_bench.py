@@ -584,6 +584,79 @@ def reg_sweep(reg_spec="elastic:0.5", quick=True, K=4, n=512, d=2048,
     return rows
 
 
+def accel_sweep(quick=True, schedules=("nesterov:16", "catalyst:20")):
+    """Accelerated-outer-rounds sweep -> `accel_sweep` in BENCH_cocoa.json
+    plus the `accel` regression trajectory (history/accel.jsonl, gated by
+    `python -m repro.obs.regress --name accel`).
+
+    Runs the pinned ill-conditioned regression problem (data.synthetic
+    "illcond" family: cond=100, Gram condition ~1e4 -- the regime where
+    plain rounds crawl and outer momentum pays) at identical (loss, lam,
+    H, aggregator) under accel=none and each momentum schedule, and
+    records rounds-to-1e-4-gap. Fewer rounds is the cheapest bandwidth:
+    momentum moves ZERO extra floats per round (tests/test_accel.py
+    asserts it against the tracer), so the rounds ratio IS the wire
+    ratio. The run asserts the suite-wide >= 1.3x win (measured ~2.8x:
+    none = 125, nesterov:16 = 45, catalyst:20 = 45) so CI smoke catches
+    a broken schedule, and the regress gate catches a slow drift.
+
+    The problem is solver-deterministic (seeded), so quick and full run
+    the SAME config -- the gated metrics must stay comparable to the
+    pinned baseline across modes."""
+    del quick  # deterministic metric: one config for CI smoke and full
+    from repro.core import CoCoAConfig, solve
+    from repro.data import make_classification, partition
+
+    from .common import Timer, save, save_updated
+
+    n, d, K, rounds, eps = 2048, 128, 8, 300, 1e-4
+    X, y = make_classification(n, d, seed=0, cond=100.0)
+    Xp, yp, mk = partition(X, y, K, seed=0)
+    kw = dict(loss="squared", lam=5e-4, H=128, solver="sdca",
+              aggregator="add")
+
+    rows = []
+    for accel in ("none",) + tuple(schedules):
+        cfg = CoCoAConfig(accel=accel, **kw)
+        with Timer() as t:
+            r = solve(cfg, Xp, yp, mk, rounds=rounds, eps_gap=eps,
+                      gap_every=1, seed=0)
+        gaps = r.history["gap"]
+        assert gaps[-1] <= eps, (accel, gaps[-1])   # everyone must certify
+        rows.append(dict(accel=accel, rounds=r.history["round"][-1],
+                         gap=gaps[-1], wall_s=t.s,
+                         floats_per_round=(r.history["comm_floats"][-1]
+                                           // r.history["round"][-1]),
+                         gap_vs_round=gaps))
+        print(f"cocoa,accel_sweep,accel={accel},rounds={rows[-1]['rounds']},"
+              f"gap={gaps[-1]:.3e},wall_s={t.s:.2f}")
+    r_none = rows[0]["rounds"]
+    for row in rows[1:]:
+        assert r_none >= 1.3 * row["rounds"], (row["accel"], row["rounds"],
+                                               r_none)
+        # zero extra wire: identical per-round floats
+        assert row["floats_per_round"] == rows[0]["floats_per_round"], row
+
+    save_updated("BENCH_cocoa", {"accel_sweep": dict(
+        n=n, d=d, K=K, cond=100.0, eps_gap=eps, config=kw,
+        rows=[{k: v for k, v in r.items() if k != "gap_vs_round"}
+              for r in rows],
+        gap_vs_round={r["accel"]: r["gap_vs_round"] for r in rows})})
+    # separate regress trajectory: rounds are deterministic (smaller is
+    # better, same comparator as the wall-clock metrics)
+    metrics = {"rounds_to_gap_none": float(r_none),
+               "rounds_to_gap_accel": float(min(r["rounds"]
+                                                for r in rows[1:]))}
+    for row in rows[1:]:
+        key = row["accel"].replace(":", "_")
+        metrics[f"rounds_to_gap_{key}"] = float(row["rounds"])
+    save("accel", dict(n=n, d=d, K=K, cond=100.0, eps_gap=eps, config=kw,
+                       metrics=metrics))
+    print(f"cocoa,accel_sweep,saved=BENCH_cocoa.json+accel.json,"
+          f"none={r_none},best_accel={metrics['rounds_to_gap_accel']:.0f}")
+    return rows
+
+
 def obs_quick(quick=True, K=4, rounds=None):
     """Small end-to-end CoCoA+ solve through the obs pipeline -> the
     wall-clock fields in BENCH_cocoa.json (compile/execute/certify split,
@@ -692,8 +765,16 @@ def main():
                          "schedule), persist the winners to the autotune "
                          "cache, and append a profiled run record to "
                          "results/history/ for the repro.obs.regress gate")
+    ap.add_argument("--accel", action="store_true",
+                    help="run the accelerated-outer-rounds sweep (none vs "
+                         "nesterov:16 vs catalyst:20 rounds-to-gap on the "
+                         "ill-conditioned pin) -> accel_sweep in "
+                         "BENCH_cocoa.json + the accel regress trajectory "
+                         "(gate: python -m repro.obs.regress --name accel)")
     args = ap.parse_args()
-    if args.autotune:
+    if args.accel:
+        accel_sweep(quick=not args.full)
+    elif args.autotune:
         autotune_sweep(quick=not args.full,
                        reg_spec=args.reg or "elastic:0.5")
     elif args.reg:

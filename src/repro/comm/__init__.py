@@ -30,4 +30,4 @@ from .compress import (Compressor, Int8, NoCompression, RandK, SparseMessage,
 from .compress import resolve as resolve_compressor
 from .placement import WSpec
 from .topology import Hop, Topology, parse_reduce
-from .tracer import CommTracer, model_hops
+from .tracer import CommTracer, accel_hops, model_hops

@@ -51,6 +51,20 @@ def model_hops(wspec: WSpec, K: int, H: int,
     return (Hop("model_z", K * wspec.M, H, axis="model"),)
 
 
+def accel_hops(accel: str = "none") -> Tuple[Hop, ...]:
+    """Outer-momentum's wire plan: EMPTY, for every scheme. The priced
+    statement that acceleration is free on the wire -- the extrapolation
+    v_md = v + beta (v - v_prev) is elementwise on each device's own
+    w-shard, v_prev inherits v's placement, and the alpha-recursion
+    scalar is carried locally, so no scheme adds a message, a float, or
+    a collective to any hop (tests/test_accel.py asserts tracer totals
+    are identical with and without momentum). Lives here, next to
+    `model_hops`, so any future scheme that DOES move state (e.g. a
+    gossip-averaged momentum buffer) has exactly one place to declare
+    its cost."""
+    return ()
+
+
 @dataclasses.dataclass
 class CommTracer:
     """Counts rounds and converts them to wire volume via the hop plan.

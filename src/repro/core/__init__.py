@@ -4,13 +4,21 @@ Public API:
     CoCoAConfig, CoCoAState, solve, init_state    -- Algorithm 1 driver
     losses.get_loss / LOSSES                      -- l, l*, coordinate updates
     regularizers.get_regularizer / REGULARIZERS   -- g, g*, the v -> w map
+    solvers.{LocalSolver, register_solver, ...}   -- Theta-approx. local
+                                                     solver registry
+    accel.{AccelSpec, parse_accel, wrap_round}    -- outer momentum over
+                                                     the round operator
     duality.{primal, dual, duality_gap}           -- certificates (eq. 4)
     sigma.{sigma_k, sigma_total, sigma_prime_min} -- partition difficulty
     baselines                                     -- minibatch SGD/CD, one-shot
 """
+from .accel import AccelSpec, parse_accel, wrap_round
 from .cocoa import (CoCoAConfig, CoCoAState, SolveResult, init_state,
                     primal_w, solve)
 from .losses import LOSSES, get_loss
 from .regularizers import (L2, REGULARIZERS, Regularizer, get_regularizer,
                            make_elastic_net, make_smoothed_l1)
-from . import baselines, duality, regularizers, sigma, solvers, subproblem
+from .solvers import (SOLVERS, LocalSolver, get_solver, register_solver,
+                      sparse_counterpart)
+from . import accel, baselines, duality, regularizers, sigma, solvers, \
+    subproblem

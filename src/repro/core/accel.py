@@ -1,0 +1,248 @@
+"""Accelerated outer rounds: momentum wrapped around the CoCoA+ round
+operator (Ma et al. 1711.05305; ROADMAP direction 3).
+
+The round operator `R` maps the carried primal-dual pair -- the shared
+v-frame vector (CoCoAState.w, v = A alpha / (tau n)) and the
+partitioned duals alpha -- one communication round forward: every
+worker solves its sigma'-damped local subproblem Theta-approximately at
+the point it was handed, and one Delta-v reduce lands the update.
+Momentum composes OUTSIDE that operator, extrapolating the pair in the
+v-frame (iterate extrapolation, the accelerated-coordinate-ascent
+pattern of APPROX / accelerated SDCA):
+
+    v_md     = v_t + beta_t (v_t - v_{t-1})       (extrapolate both ...)
+    alpha_md = alpha_t + beta_t (alpha_t - alpha_{t-1})
+    v_{t+1}, alpha_{t+1} = R(v_md, alpha_md)      (one ordinary round)
+
+Extrapolating BOTH legs with one beta is what keeps the carried state
+self-consistent: v(alpha) is linear in alpha, so v_t = v(alpha_t) and
+v_{t-1} = v(alpha_{t-1}) give v_md = v(alpha_md) exactly, and the round
+preserves the invariant -- the drift a v-only extrapolation would
+accumulate (e_{t+1} = e_t + beta (v_t - v_{t-1}), a non-vanishing
+offset that stalls the gap) is identically zero. The local solvers,
+both backends (vmap / shard_map), the Pallas kernel bodies, 2-D
+feature-sharded meshes, and the whole comm stack are untouched -- they
+never learn the point they were handed was extrapolated. Workers
+compute updates *at* the look-ahead point (the accelerated-gradient
+pattern); error-feedback compression likewise runs its residual loop
+against the extrapolated exchange point, the only v the round ever
+sees. Extrapolated alpha_md can transiently overshoot the conjugate's
+feasible set (each coordinate by at most beta times its own last move;
+the next cd_update clips it back) -- the certificate handles that by
+projecting (below), the iterates need no projection of their own.
+
+Two momentum schedules, selected by `CoCoAConfig.accel`:
+
+  "nesterov[:R]"   beta_t = t / (t + 3), the universal parameter-free
+                   schedule for the non-strongly-convex rate. t is the
+                   state's global round counter, so a resumed run
+                   continues its schedule. The optional ":R" restarts
+                   the schedule every R rounds (t mod R) -- the
+                   fixed-interval restart that recovers near-linear
+                   convergence on strongly convex problems, where the
+                   un-restarted beta -> 1 schedule over-shoots and
+                   oscillates (pick R ~ the square root of the round
+                   operator's effective condition number; R = 16 is a
+                   robust default on the illcond benchmark).
+  "catalyst:<k>"   Catalyst-style coefficients (Lin et al. 2015) with
+                   q = 1 / (1 + kappa): the alpha-recursion
+                       a_t^2 = (1 - a_t) a_{t-1}^2 + q a_t,  a_0 = sqrt(q)
+                       beta_t = a_{t-1} (1 - a_{t-1}) / (a_{t-1}^2 + a_t)
+                   whose beta_t -> (1 - sqrt(q)) / (1 + sqrt(q)) -- the
+                   constant momentum matched to kappa-conditioned
+                   problems. Honesty note: Catalyst proper re-solves a
+                   kappa-regularized proximal subproblem each outer
+                   step; here the inexact prox oracle is the CoCoA+
+                   round itself (the sigma'-damped subproblem already
+                   carries the quadratic damping that makes the local
+                   solves Theta-inexact), and kappa enters only through
+                   the momentum schedule. Pick kappa ~ cond(A)/n so the
+                   limit momentum matches the problem's conditioning.
+
+State rides in OPTIONAL CoCoAState leaves with None defaults
+(`v_prev`, `alpha_prev`, `accel_a`), so checkpoints and jit signatures
+of non-accelerated runs are unchanged -- the exact contract the `wire`
+leaf established. All leaves are shard-local (v_prev inherits v's
+WSpec placement, alpha_prev its worker partition; accel_a is a
+scalar), and the extrapolation is elementwise, so acceleration moves
+ZERO extra floats per round -- `comm.accel_hops` is the priced (empty)
+statement of that, and tests/test_accel.py asserts it against the
+tracer.
+
+Certification: `solve` certifies with `duality.gap_at_v` at the
+state's carried, NON-extrapolated iterate (v_{t+1}, alpha_{t+1}) --
+never at the transient look-ahead point -- with alpha passed through
+`loss.project` first: the extrapolated coordinates may sit a whisker
+outside the conjugate's domain, where l* is +inf and the raw dual
+would read -inf. P(w(v)) - D(proj(alpha)) is a true gap bound by weak
+duality at any primal point and any FEASIBLE dual point, and the
+projection residual vanishes as the iterates converge.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AccelSpec:
+    """Parsed `CoCoAConfig.accel` gate. `kind` is "none" | "nesterov" |
+    "catalyst"; `kappa` is the Catalyst prox-smoothing weight and
+    `restart` the Nesterov fixed restart interval in rounds (0 = never;
+    each is unused by the other scheme)."""
+    kind: str = "none"
+    kappa: float = 0.0
+    restart: int = 0
+
+    @property
+    def enabled(self) -> bool:
+        return self.kind != "none"
+
+    @property
+    def q(self) -> float:
+        """Catalyst's effective strong-convexity ratio q = 1/(1+kappa)."""
+        return 1.0 / (1.0 + self.kappa)
+
+    @property
+    def a0(self) -> float:
+        """Initial alpha-recursion value (sqrt(q) for catalyst; the
+        carried scalar is inert for nesterov)."""
+        return math.sqrt(self.q) if self.kind == "catalyst" else 0.0
+
+    def beta_limit(self) -> float:
+        """The schedule's limiting momentum: 1 for nesterov's t/(t+3)
+        as t -> inf, (1-sqrt(q))/(1+sqrt(q)) for catalyst."""
+        if self.kind == "catalyst":
+            sq = math.sqrt(self.q)
+            return (1.0 - sq) / (1.0 + sq)
+        return 1.0 if self.kind == "nesterov" else 0.0
+
+
+def parse_accel(s: Optional[str]) -> AccelSpec:
+    """Parse the config gate:
+    "none" | "nesterov[:<restart>]" | "catalyst:<kappa>"."""
+    if s is None or s in ("", "none"):
+        return AccelSpec("none")
+    if s.startswith("nesterov"):
+        _, _, arg = s.partition(":")
+        restart = int(arg) if arg else 0
+        if restart < 0 or (arg and restart == 0):
+            raise ValueError(
+                f"nesterov restart interval must be a positive round "
+                f"count, got {arg!r} (plain 'nesterov' never restarts)")
+        return AccelSpec("nesterov", restart=restart)
+    if s.startswith("catalyst"):
+        _, _, arg = s.partition(":")
+        if not arg:
+            raise ValueError(
+                "catalyst needs its prox weight: accel='catalyst:<kappa>' "
+                "(e.g. 'catalyst:10')")
+        kappa = float(arg)
+        if kappa <= 0:
+            raise ValueError(f"catalyst kappa must be > 0, got {kappa}")
+        return AccelSpec("catalyst", kappa)
+    raise ValueError(f"unknown accel scheme {s!r}; expected 'none', "
+                     f"'nesterov[:<restart>]', or 'catalyst:<kappa>'")
+
+
+def nesterov_beta(t):
+    """beta_t = t/(t+3): zero at t=0 (first round is plain), approaching
+    1. Traced-friendly (t may be the state's int32 round counter)."""
+    tf = jnp.asarray(t, jnp.float32)
+    return tf / (tf + 3.0)
+
+
+def catalyst_step(a_prev, q: float):
+    """One alpha-recursion step: returns (a_new, beta_t).
+
+    a_new is the positive root of  a^2 + (a_prev^2 - q) a - a_prev^2 = 0,
+    i.e. of Catalyst's  a_t^2 = (1 - a_t) a_{t-1}^2 + q a_t.  Both the
+    root and beta are closed-form and traced-friendly (a_prev may be the
+    carried scalar leaf)."""
+    a_prev = jnp.asarray(a_prev, jnp.float32)
+    b = a_prev * a_prev - q
+    a_new = 0.5 * (-b + jnp.sqrt(b * b + 4.0 * a_prev * a_prev))
+    beta = a_prev * (1.0 - a_prev) / (a_prev * a_prev + a_new)
+    return a_new, beta
+
+
+def momentum_coeffs(spec: AccelSpec, t, a_prev):
+    """(a_new, beta_t) for round t under `spec`. For nesterov the carried
+    scalar passes through untouched and the schedule restarts every
+    spec.restart rounds (when set); for catalyst it advances one
+    alpha-recursion step and t is ignored."""
+    if spec.kind == "catalyst":
+        return catalyst_step(a_prev, spec.q)
+    if spec.restart:
+        t = jnp.mod(jnp.asarray(t), spec.restart)
+    return a_prev, nesterov_beta(t)
+
+
+def wrap_round(round_fn: Callable, spec: AccelSpec) -> Callable:
+    """Lift a backend round function to its accelerated version.
+
+    `round_fn(state, *args, **kwargs) -> state` is either backend's round
+    (core.cocoa.make_round_vmap / make_round_sharded). With spec disabled
+    this returns `round_fn` ITSELF -- accel="none" is bit-for-bit the
+    plain path, not a wrapped identity. Otherwise the wrapper:
+
+      1. reads (v, alpha, v_prev, alpha_prev, a) off the state's
+         momentum leaves (which `solve` initializes before the loop so
+         the pytree structure is jit-stable -- prev=current on round one
+         means beta multiplies a zero difference and the first round is
+         exactly a plain round),
+      2. extrapolates the PAIR elementwise with one beta_t --
+         v_md = v + beta (v - v_prev), alpha_md likewise -- which keeps
+         v_md = v(alpha_md) exactly (linearity; module docstring), and
+         is shard-local under any WSpec placement: zero wire,
+      3. runs the ordinary round AT the look-ahead pair,
+      4. re-attaches the momentum leaves the round's positional state
+         rebuild dropped: v_prev <- v_t, alpha_prev <- alpha_t,
+         accel_a <- a_new.
+
+    The round's own rng split / round-counter / EF semantics are
+    untouched; composition order (wrap, then jit) keeps everything one
+    compiled computation."""
+    if not spec.enabled:
+        return round_fn
+
+    def accel_round(state, *args, **kwargs):
+        v, alpha = state.w, state.alpha
+        if state.v_prev is None or state.alpha_prev is None \
+                or state.accel_a is None:
+            raise ValueError(
+                "accelerated round needs the momentum leaves initialized: "
+                "core.accel.init_accel_state(state, spec) before the loop "
+                "(core.cocoa.solve does this)")
+        a_new, beta = momentum_coeffs(spec, state.rounds, state.accel_a)
+        b = beta.astype(v.dtype)
+        v_md = v + b * (v - state.v_prev)
+        alpha_md = alpha + b * (alpha - state.alpha_prev)
+        inner = round_fn(state._replace(w=v_md, alpha=alpha_md),
+                         *args, **kwargs)
+        # the backends rebuild CoCoAState positionally, dropping optional
+        # leaves -- re-attach the momentum triple here
+        return inner._replace(v_prev=v, alpha_prev=alpha, accel_a=a_new)
+
+    return accel_round
+
+
+def init_accel_state(state, spec: AccelSpec):
+    """Attach the momentum leaves (idempotently) so the accelerated round
+    has a jit-stable pytree structure: (v_prev, alpha_prev) start AT the
+    current pair (first round is plain) and the alpha-recursion scalar at
+    spec.a0. A checkpoint saved mid-accelerated-run restores with these
+    leaves present; one saved from a plain run restores without them and
+    momentum simply restarts here."""
+    if not spec.enabled:
+        return state
+    if state.v_prev is None:
+        state = state._replace(v_prev=state.w)
+    if state.alpha_prev is None:
+        state = state._replace(alpha_prev=state.alpha)
+    if state.accel_a is None:
+        state = state._replace(accel_a=jnp.asarray(spec.a0, jnp.float32))
+    return state

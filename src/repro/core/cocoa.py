@@ -64,9 +64,11 @@ from repro.obs.events import Aggregator, EventBus
 from repro.obs.metrics import RoundRecord, aot_compile, fenced_call
 
 from . import duality
+from .accel import AccelSpec, init_accel_state, parse_accel, wrap_round
 from .losses import Loss, get_loss
 from .regularizers import L2, Regularizer, get_regularizer
-from .solvers import SOLVERS, SDCAResult
+from .solvers import (LocalSolver, SDCAResult, SOLVERS, get_solver,
+                      sparse_counterpart)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,6 +92,9 @@ class CoCoAConfig:
                                        # moves (idx, val) sets, ~2kK floats
     reg: str = "l2"                    # regularizer g(w): "l2" |
                                        # "elastic:<eta>" | "l1s:<eps>"
+    accel: str = "none"                # outer momentum over the round
+                                       # operator (core.accel): "none" |
+                                       # "nesterov" | "catalyst:<kappa>"
 
     def resolved_sigma(self, K: int) -> float:
         return self.agg_params(K).sigma_prime
@@ -102,6 +107,10 @@ class CoCoAConfig:
     def regularizer(self) -> Regularizer:
         """The Regularizer instance this config's rounds evaluate."""
         return get_regularizer(self.reg)
+
+    def accel_spec(self) -> AccelSpec:
+        """The parsed outer-momentum schedule this config runs with."""
+        return parse_accel(self.accel)
 
     def compressor(self, M: int = 1) -> comm.Compressor:
         """The wire compressor; under compressed gather on a feature-
@@ -151,6 +160,20 @@ class CoCoAState(NamedTuple):
                           # last round (hier compressed gather only; None
                           # elsewhere -- not a pytree leaf then, so legacy
                           # checkpoints and jit signatures are unchanged)
+    v_prev: Optional[jnp.ndarray] = None
+                          # outer momentum: last round's v (core.accel;
+                          # inherits w's placement so the extrapolation is
+                          # shard-local). None while accel="none" -- same
+                          # not-a-leaf contract as `wire`, so legacy
+                          # checkpoints and plain-run jit signatures are
+                          # byte-identical
+    alpha_prev: Optional[jnp.ndarray] = None
+                          # outer momentum: last round's duals; the pair
+                          # extrapolates together so v(alpha) consistency
+                          # is exact (core.accel module docstring)
+    accel_a: Optional[jnp.ndarray] = None
+                          # catalyst alpha-recursion scalar (carried inert
+                          # under nesterov; None while accel="none")
 
 
 def init_state(d: int, K: int, nk: int, seed: int = 0,
@@ -202,67 +225,59 @@ def _scoped(name: str, fn):
     return wrapped
 
 
-def _solver_fn(name: str):
-    if name == "sdca_kernel":
-        from repro.kernels import ops as kernel_ops
-        return kernel_ops.local_sdca_block
-    if name == "sdca_sparse_kernel":
-        from repro.kernels import ops as kernel_ops
-        return kernel_ops.sparse_local_sdca_block
-    return SOLVERS[name]
-
-
-# dense solver name -> its ELL-shard counterpart (used when round inputs are
-# SparseShards; solvers without a sparse path raise below)
-_SPARSE_SOLVERS = {
-    "sdca": "sdca_sparse",
-    "sdca_sparse": "sdca_sparse",
-    "sdca_kernel": "sdca_sparse_kernel",
-    "sdca_sparse_kernel": "sdca_sparse_kernel",
-}
-
-
-def _resolve_solver(name: str, sparse: bool,
-                    feature_sharded: bool = False) -> str:
+def _resolve_solver(name, sparse: bool,
+                    feature_sharded: bool = False) -> LocalSolver:
+    """Resolve a registry key (or descriptor) against the round's input
+    format and mesh shape, purely through LocalSolver capability flags --
+    an externally `register_solver`-ed solver with the right flags
+    dispatches through here with no framework edit. Dense inputs require
+    `dense`; SparseShards inputs map through `sparse_counterpart` (the
+    descriptor's declared ELL twin, identity when already sparse); a
+    feature-sharded mesh (M>1) additionally requires `model_axis`."""
+    ls = get_solver(name)
     if not sparse:
-        if name in ("sdca_sparse", "sdca_sparse_kernel"):
+        if not ls.dense:
             raise ValueError(
-                f"solver {name!r} needs SparseShards inputs; dense arrays "
+                f"solver {ls.name!r} needs SparseShards inputs; dense arrays "
                 f"take 'sdca' / 'sdca_kernel' (mapped automatically when the "
                 f"data is sparse)")
-        resolved = name
-    elif name not in _SPARSE_SOLVERS:
-        raise ValueError(
-            f"solver {name!r} has no sparse path; pick one of "
-            f"{sorted(set(_SPARSE_SOLVERS))} for SparseShards inputs")
+        resolved = ls
     else:
-        resolved = _SPARSE_SOLVERS[name]
-    if feature_sharded and resolved not in ("sdca", "sdca_sparse",
-                                            "sdca_sparse_kernel"):
-        # the dense kernel (and gd/deadline) cannot host the model-axis
-        # exchange; M>1 routes through the jnp solvers or the sparse
-        # kernel's z-exchange schedule (block-batched partial-dot psums
-        # between per-block kernel invocations)
+        twin = sparse_counterpart(ls)
+        if twin is None:
+            raise ValueError(
+                f"solver {ls.name!r} has no sparse path; pick one of "
+                f"{sorted(n for n in SOLVERS if sparse_counterpart(n))} "
+                f"for SparseShards inputs")
+        resolved = get_solver(twin)
+    if feature_sharded and not resolved.model_axis:
+        # e.g. the dense kernel (a pallas body cannot host the per-step
+        # model-axis collective) and gd/deadline; M>1 routes through the
+        # jnp solvers or the sparse kernel's z-exchange schedule
+        # (block-batched partial-dot psums between kernel invocations)
         raise ValueError(
-            f"solver {resolved!r} cannot run feature-sharded (M>1): use "
-            f"'sdca' (dense jnp), 'sdca_sparse' (ELL jnp), or "
+            f"solver {resolved.name!r} cannot run feature-sharded (M>1): "
+            f"use 'sdca' (dense jnp), 'sdca_sparse' (ELL jnp), or "
             f"'sdca_sparse_kernel' (ELL Pallas, z-exchange schedule)")
     return resolved
 
 
 def _worker_body(X_k, y_k, alpha_k, mask_k, v, rng, *, loss: Loss, lam: float,
-                 n, sigma_p: float, H: int, solver: str,
+                 n, sigma_p: float, H: int, solver: LocalSolver,
                  budget=None, sqnorms=None, model_axis=None,
                  reg: Regularizer = L2) -> SDCAResult:
-    fn = _solver_fn(solver)
-    if solver == "sdca_deadline":
+    """One worker's Theta-approximate local solve, dispatched through the
+    LocalSolver descriptor's capability flags (never its name)."""
+    fn = solver.fn
+    if solver.deadline:
         return fn(X_k, y_k, alpha_k, mask_k, v, rng, loss, lam, n, sigma_p, H,
-                  budget if budget is not None else jnp.asarray(H), reg=reg)
-    if solver in ("sdca", "sdca_sparse", "sdca_sparse_kernel"):
+                  budget if budget is not None else jnp.asarray(H),
+                  sqnorms=sqnorms, reg=reg)
+    if solver.model_axis:
         return fn(X_k, y_k, alpha_k, mask_k, v, rng, loss, lam, n, sigma_p, H,
                   sqnorms=sqnorms, model_axis=model_axis, reg=reg)
-    assert model_axis is None, (solver, "has no feature-sharded path")
-    if solver == "sdca_importance":
+    assert model_axis is None, (solver.name, "has no feature-sharded path")
+    if solver.sqnorms:
         return fn(X_k, y_k, alpha_k, mask_k, v, rng, loss, lam, n, sigma_p, H,
                   sqnorms=sqnorms, reg=reg)
     return fn(X_k, y_k, alpha_k, mask_k, v, rng, loss, lam, n, sigma_p, H,
@@ -623,7 +638,7 @@ def solve(cfg: CoCoAConfig, X, y, mask, *, rounds: int, eps_gap: float = 0.0,
         if wspec.sharded and not isinstance(X, (FeatureShards,
                                                 SparseShards)):
             X = jnp.pad(X, ((0, 0), (0, 0), (0, wspec.d_padded - d)))
-        round_fn = jax.jit(make_round_sharded(cfg, mesh))
+        base_round_fn = make_round_sharded(cfg, mesh)
     else:
         topo = Topology.simulated(K, topology=cfg.topology)
         wspec = topo.wspec(d)
@@ -631,7 +646,12 @@ def solve(cfg: CoCoAConfig, X, y, mask, *, rounds: int, eps_gap: float = 0.0,
             raise ValueError("FeatureShards need the shard_map backend on "
                              "a 2-D mesh; the vmap reference runs on "
                              "SparseShards with the global column ids")
-        round_fn = jax.jit(make_round_vmap(cfg, K))
+        base_round_fn = make_round_vmap(cfg, K)
+    # outer momentum lifts the round operator BEFORE jit, so extrapolate +
+    # solve + exchange compile as one computation; accel="none" returns
+    # the base round itself (bit-for-bit the plain path, not a wrapper)
+    aspec = cfg.accel_spec()
+    round_fn = jax.jit(wrap_round(base_round_fn, aspec))
     if state is None:
         state = init_state(wspec.d_padded, K, nk, seed, dtype)
     if cfg.gather and topo.reduce == "hier" and state.wire is None:
@@ -639,12 +659,19 @@ def solve(cfg: CoCoAConfig, X, y, mask, *, rounds: int, eps_gap: float = 0.0,
         # it a stable leaf up front so round 1 and round 2 share one jit
         # signature (None -> array would retrace the whole round)
         state = state._replace(wire=jnp.zeros((), jnp.int32))
+    # same stable-leaf contract for the momentum pair (v_prev = w makes
+    # the first accelerated round exactly a plain round); a checkpoint
+    # from a plain run restores leafless and momentum simply starts here
+    state = init_accel_state(state, aspec)
 
     compressed = cfg.compress not in (None, "none", "")
-    if compressed:
-        # with lossy messages the state's v drifts from v(alpha); certify
-        # the primal point w = grad g*(tau v) the algorithm actually
-        # carries (still >= D by weak duality)
+    # lossy messages AND extrapolated exchange points both make the
+    # carried v drift from v(alpha) -- either way the certificate must
+    # price the iterate the algorithm actually holds
+    drifted = compressed or aspec.enabled
+    if drifted:
+        # certify the primal point w = grad g*(tau v) at the state's
+        # carried (NON-extrapolated) v (still >= D by weak duality)
         gap_fn = jax.jit(_scoped("cocoa/certificate", functools.partial(
             duality.gap_at_v, loss=loss, lam=cfg.lam, reg=reg)))
     else:
@@ -662,17 +689,19 @@ def solve(cfg: CoCoAConfig, X, y, mask, *, rounds: int, eps_gap: float = 0.0,
     # the same resolve/clamp arithmetic the dispatch launches with).
     zx_plan = None
     if wspec.sharded and isinstance(X, FeatureShards) and \
-            _SPARSE_SOLVERS.get(cfg.solver) == "sdca_sparse_kernel":
+            sparse_counterpart(cfg.solver) == "sdca_sparse_kernel":
         from repro.kernels.ops import sparse_zx_plan
         zx_plan = sparse_zx_plan(nk, wspec.d_local, cfg.H,
                                  r_max=int(X.cols.shape[-1]),
                                  reg_family=getattr(reg, "family", "other"),
                                  model_shards=wspec.M)
-    tracer = comm.CommTracer.for_run(K=K, d_local=topo.d_local(d),
-                                     compressor=cfg.compressor(M=wspec.M),
-                                     topo=topo, gather=cfg.gather,
-                                     extra_hops=comm.model_hops(
-                                         wspec, K, cfg.H, zx_plan=zx_plan))
+    tracer = comm.CommTracer.for_run(
+        K=K, d_local=topo.d_local(d),
+        compressor=cfg.compressor(M=wspec.M),
+        topo=topo, gather=cfg.gather,
+        extra_hops=comm.model_hops(wspec, K, cfg.H, zx_plan=zx_plan)
+        # momentum's priced (empty) wire plan -- asserts zero extra floats
+        + comm.accel_hops(cfg.accel))
 
     # --- the instrumented round loop -----------------------------------
     # `agg` collects the emitted records; the returned history is its
@@ -726,7 +755,14 @@ def solve(cfg: CoCoAConfig, X, y, mask, *, rounds: int, eps_gap: float = 0.0,
             alpha_eval = state.alpha
             if cfg.average_iterates:
                 alpha_eval = state.alpha_bar / jnp.maximum(state.rounds, 1)
-            gargs = ((state.w, alpha_eval, X, y, mask) if compressed
+            if aspec.enabled and loss.project is not None:
+                # extrapolated coordinates can sit a whisker outside the
+                # conjugate's domain (where l* = +inf would read the dual
+                # as -inf); certify a feasible dual point instead -- still
+                # a true bound by weak duality, and the projection
+                # residual vanishes as the iterates converge
+                alpha_eval = loss.project(alpha_eval, y)
+            gargs = ((state.w, alpha_eval, X, y, mask) if drifted
                      else (alpha_eval, X, y, mask))
             if gap_run is None:
                 gap_run, dtc = aot_compile(gap_fn, *gargs)

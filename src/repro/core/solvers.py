@@ -1,5 +1,18 @@
 """Local solvers for the CoCoA+ subproblem (Assumption 1: any Theta < 1 works).
 
+Every solver is registered as a frozen `LocalSolver` descriptor (callable +
+capability flags), mirroring the `Regularizer` refactor: the framework
+driver (`core.cocoa`) picks solvers by contract -- can it consume padded-ELL
+shards, can it complete a feature-sharded partial dot over `model_axis`,
+does it take a per-round step `budget` -- instead of string-matching names.
+Registration is open (`register_solver`): an external solver satisfies the
+paper's Assumption 1 by contract (return a Theta-approximate `SDCAResult`
+whose `du` is the sigma'-scaled v-space delta and whose `steps` honestly
+reports the inner work done) and plugs into both backends, the comm layer,
+and the accelerated outer loop (`core.accel`) unchanged.
+`tests/test_solver_conformance.py` runs the contract over every registered
+descriptor.
+
 LOCALSDCA (Algorithm 2): H steps of single-coordinate exact maximization of
 G_k^{sigma'}, using the closed forms from losses.py. The solver carries the
 local *scaled dual-side* estimate
@@ -43,11 +56,13 @@ vmap (simulation) and shard_map (production).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import NamedTuple
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .losses import Loss
 from .regularizers import L2, Regularizer
@@ -133,37 +148,60 @@ def local_sdca(X_k: jnp.ndarray, y_k: jnp.ndarray, alpha_k: jnp.ndarray,
 
 
 def local_sdca_deadline(X_k, y_k, alpha_k, mask_k, v, rng, loss, lam, n,
-                        sigma_p: float, H: int, budget: jnp.ndarray,
+                        sigma_p: float, H: int, budget, sqnorms=None,
                         reg: Regularizer = L2) -> SDCAResult:
     """Straggler-tolerant variant: runs min(H, budget) steps.
 
-    `budget` is a traced per-worker scalar (steps affordable before the round
+    `budget` is a per-worker scalar (steps affordable before the round
     deadline, e.g. measured throughput x remaining time). Theta degrades, the
     round never blocks: this is the paper's Assumption-1 knob used as
     straggler mitigation (DESIGN.md section 8).
-    """
+
+    `sqnorms`: optional precomputed ||x_i||^2, hoisted exactly like
+    `local_sdca`'s (they are round-invariant; recomputing streams the whole
+    shard once per round for nothing).
+
+    A *static* (plain Python/NumPy int) `budget` bounds the `fori_loop`
+    itself at min(H, budget) -- a concrete small budget no longer pays the
+    full H iterations of dead masked steps. A traced `budget` keeps the
+    fixed-H loop with the `where` mask (the trip count must be static under
+    jit). Both paths draw the same (H,) index stream and take identical
+    coordinate steps, so the returned `SDCAResult` is bit-for-bit the same
+    (tests/test_runtime.py pins it)."""
     nk = X_k.shape[0]
-    sqnorms = jnp.sum(X_k * X_k, axis=-1) * mask_k
+    if sqnorms is None:
+        sqnorms = jnp.sum(X_k * X_k, axis=-1) * mask_k
     scale = sigma_p / (reg.tau(lam) * n)
     idxs = jax.random.randint(rng, (H,), 0, nk)
-    hmax = jnp.minimum(jnp.asarray(H), budget)
+    static_budget = isinstance(budget, (int, np.integer))
+    hmax = (min(int(H), int(budget)) if static_budget
+            else jnp.minimum(jnp.asarray(H), budget))
 
     def body(h, carry):
         dalpha, u = carry
-        live = h < hmax
         i = idxs[h]
-        x = X_k[i]
+        # same barrier as local_sdca: x feeds two consumers (dot + axpy);
+        # without it XLA duplicates the row gather per consumer (2x row
+        # traffic -- measured in EXPERIMENTS.md section Perf, iteration C3)
+        x = jax.lax.optimization_barrier(X_k[i])
         z = jnp.dot(x, reg.conj_grad(u, lam))
         abar = alpha_k[i] + dalpha[i]
         q = scale * sqnorms[i]
-        delta = jnp.where(live, loss.cd_update(abar, z, q, y_k[i]) * mask_k[i], 0.0)
+        delta = loss.cd_update(abar, z, q, y_k[i]) * mask_k[i]
+        if not static_budget:
+            # dead (past-deadline) steps are exact no-ops: delta 0 leaves
+            # both dalpha and u untouched, so the masked fixed-H loop and
+            # the bounded static loop take identical live steps
+            delta = jnp.where(h < hmax, delta, 0.0)
         dalpha = dalpha.at[i].add(delta)
         u = u + (scale * delta) * x
         return dalpha, u
 
     dalpha0 = jnp.zeros(nk, X_k.dtype)
-    dalpha, u = jax.lax.fori_loop(0, H, body, (dalpha0, v.astype(X_k.dtype)))
-    return SDCAResult(dalpha, u - v, hmax)
+    trip = hmax if static_budget else H
+    dalpha, u = jax.lax.fori_loop(0, trip, body,
+                                  (dalpha0, v.astype(X_k.dtype)))
+    return SDCAResult(dalpha, u - v, jnp.asarray(hmax))
 
 
 def local_gd(X_k, y_k, alpha_k, mask_k, v, rng, loss, lam, n,
@@ -222,7 +260,8 @@ def local_sdca_importance(X_k, y_k, alpha_k, mask_k, v, rng, loss, lam, n,
     def body(h, carry):
         dalpha, u = carry
         i = idxs[h]
-        x = X_k[i]
+        # same two-consumer row gather as local_sdca -- barrier dedups it
+        x = jax.lax.optimization_barrier(X_k[i])
         z = jnp.dot(x, reg.conj_grad(u, lam))
         abar = alpha_k[i] + dalpha[i]
         q = scale * sqnorms[i]
@@ -293,10 +332,130 @@ def local_sdca_sparse(shard, y_k, alpha_k, mask_k, v, rng, loss: Loss,
     return SDCAResult(dalpha, u - v, jnp.asarray(H))
 
 
-SOLVERS = {
-    "sdca": local_sdca,
-    "sdca_deadline": local_sdca_deadline,
-    "sdca_importance": local_sdca_importance,
-    "sdca_sparse": local_sdca_sparse,
-    "gd": local_gd,
-}
+# ----------------------------------------------------------------------------
+# The LocalSolver registry: frozen descriptors + open registration
+# ----------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LocalSolver:
+    """A Theta-approximate local subproblem solver, by contract.
+
+    `fn` has the shared solver signature
+        fn(X_k, y_k, alpha_k, mask_k, v, rng, loss, lam, n, sigma_p, H,
+           [budget,] [sqnorms=, model_axis=,] reg=) -> SDCAResult
+    where `X_k` is a dense (nk, d) block when `dense`, a padded-ELL
+    `SparseShards` when `sparse`. Capability flags tell the framework
+    driver what the callable can host; `core.cocoa` dispatches purely on
+    them (no name matching), so an externally registered solver with the
+    right flags runs under both backends, every reduce topology, and the
+    accelerated outer loop without touching the framework:
+
+        sparse       consumes padded-ELL SparseShards (cols/vals (nk, r))
+        dense        consumes dense (nk, d) row blocks
+        model_axis   completes feature-sharded partial dots over a named
+                     mesh axis (takes `model_axis=` and requires *global*
+                     `sqnorms` when sharded) -- 2-D mesh capable
+        deadline     takes a per-round step `budget` operand (straggler /
+                     Assumption-1 Theta knob); static budgets bound the
+                     inner loop itself
+        sqnorms      accepts hoisted round-invariant ||x_i||^2
+        theta_steps  `SDCAResult.steps` honestly reports the inner steps
+                     executed (the Theta accounting the conformance suite
+                     checks); every built-in reports honestly
+        sparse_name  registry key of the padded-ELL counterpart the driver
+                     transparently maps to when round inputs are sparse
+    """
+    name: str
+    fn: Callable[..., SDCAResult]
+    dense: bool = True
+    sparse: bool = False
+    model_axis: bool = False
+    deadline: bool = False
+    sqnorms: bool = False
+    theta_steps: bool = True
+    sparse_name: Optional[str] = None
+
+    def __hash__(self):  # usable as a static jit arg, like Loss/Regularizer
+        return hash(self.name)
+
+    def __eq__(self, other):
+        # name-keyed equality, including against the bare registry key
+        # (consistent with __hash__, so dicts accept either form)
+        if isinstance(other, str):
+            return self.name == other
+        return isinstance(other, LocalSolver) and self.name == other.name
+
+
+SOLVERS: dict = {}
+
+
+def register_solver(solver: LocalSolver, *,
+                    overwrite: bool = False) -> LocalSolver:
+    """Register a LocalSolver descriptor under its name. External solvers
+    satisfy Assumption 1 by contract: return an `SDCAResult` whose `du` is
+    the sigma'-scaled v-space delta (sigma'/(tau n)) A dalpha restricted
+    to the local shard, zero `dalpha` on masked (padding) rows, and an
+    honest `steps` count. Registration is open -- plugging in a new solver
+    is one call, not a framework edit."""
+    if not isinstance(solver, LocalSolver):
+        raise TypeError(f"register_solver wants a LocalSolver descriptor, "
+                        f"got {type(solver).__name__}")
+    if solver.name in SOLVERS and not overwrite:
+        raise ValueError(f"solver {solver.name!r} is already registered; "
+                         f"pass overwrite=True to replace it")
+    SOLVERS[solver.name] = solver
+    return solver
+
+
+def get_solver(name) -> LocalSolver:
+    """LocalSolver descriptor by registry key (instances pass through)."""
+    if isinstance(name, LocalSolver):
+        return name
+    try:
+        return SOLVERS[name]
+    except KeyError:
+        raise KeyError(f"unknown solver {name!r}; registered: "
+                       f"{sorted(SOLVERS)}") from None
+
+
+def _lazy_kernel(attr: str) -> Callable[..., SDCAResult]:
+    """Import-cycle-free binding for the Pallas kernel entry points
+    (repro.kernels.ops imports SDCAResult from here). The indirection is
+    one Python call per round trace -- free under jit."""
+    def call(*args, **kwargs):
+        from repro.kernels import ops as kernel_ops
+        return getattr(kernel_ops, attr)(*args, **kwargs)
+    call.__name__ = attr
+    return call
+
+
+register_solver(LocalSolver(
+    "sdca", local_sdca, model_axis=True, sqnorms=True,
+    sparse_name="sdca_sparse"))
+register_solver(LocalSolver(
+    "sdca_deadline", local_sdca_deadline, deadline=True, sqnorms=True))
+register_solver(LocalSolver(
+    "sdca_importance", local_sdca_importance, sqnorms=True))
+register_solver(LocalSolver(
+    "sdca_sparse", local_sdca_sparse, dense=False, sparse=True,
+    model_axis=True, sqnorms=True))
+register_solver(LocalSolver("gd", local_gd))
+# Pallas kernel paths: the dense kernel is M=1-only (a pallas body cannot
+# host the per-step model-axis collective); the sparse kernel runs M>1
+# natively via the block-batched z-exchange schedule.
+register_solver(LocalSolver(
+    "sdca_kernel", _lazy_kernel("local_sdca_block"),
+    sparse_name="sdca_sparse_kernel"))
+register_solver(LocalSolver(
+    "sdca_sparse_kernel", _lazy_kernel("sparse_local_sdca_block"),
+    dense=False, sparse=True, model_axis=True, sqnorms=True))
+
+
+def sparse_counterpart(name) -> Optional[str]:
+    """Registry key of the padded-ELL solver `name` resolves to on sparse
+    round inputs (itself when already sparse), or None when it has no
+    sparse path."""
+    ls = get_solver(name)
+    if ls.sparse:
+        return ls.name
+    return ls.sparse_name

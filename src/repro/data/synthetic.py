@@ -22,14 +22,35 @@ def _normalize_rows(X: np.ndarray) -> np.ndarray:
 
 
 def make_classification(n: int, d: int, *, seed: int = 0, noise: float = 0.1,
-                        sparsity: float = 0.0) -> Tuple[np.ndarray, np.ndarray]:
-    """Linearly separable-ish binary labels in {-1, +1}, rows ||x||<=1."""
+                        sparsity: float = 0.0,
+                        cond: float = 1.0) -> Tuple[np.ndarray, np.ndarray]:
+    """Linearly separable-ish binary labels in {-1, +1}, rows ||x||<=1.
+
+    `cond` > 1 ill-conditions the design: column j is scaled by the
+    geometric spectrum s_j = cond^(-j/(d-1)) (s_0 = 1 down to s_{d-1} =
+    1/cond), giving the Gram matrix an expected condition number ~cond^2.
+    To keep Remark 7's ||x_i|| <= 1 without destroying the spectrum, the
+    whole matrix is then scaled by one GLOBAL constant (the max row norm)
+    instead of per-row normalization -- per-row scaling is exactly the
+    Jacobi preconditioner that would undo the conditioning being asked
+    for. These are the datasets where accelerated outer rounds earn
+    their momentum (core.accel; tests/test_accel.py pins it)."""
     rng = np.random.default_rng(seed)
     X = rng.standard_normal((n, d)).astype(np.float32)
     if sparsity > 0:
         X *= (rng.random((n, d)) > sparsity)
-    X = _normalize_rows(X)
+    if cond > 1.0:
+        spectrum = (cond ** (-np.arange(d) / max(d - 1, 1))).astype(
+            np.float32)
+        X *= spectrum
+        X /= max(float(np.linalg.norm(X, axis=1).max()), 1e-12)
+    else:
+        X = _normalize_rows(X)
     w_star = rng.standard_normal(d).astype(np.float32)
+    if cond > 1.0:
+        # weight on the *scaled* columns so the label signal lives across
+        # the whole spectrum, not only in the few surviving directions
+        w_star /= np.maximum(spectrum, 1e-6)
     margin = X @ w_star
     flip = rng.random(n) < noise
     yv = np.sign(margin) * np.where(flip, -1.0, 1.0)
@@ -98,6 +119,9 @@ class DatasetSpec:
     sparsity: float = 0.0          # dense format: fraction of zeroed entries
     format: str = "dense"          # "dense" -> (n, d) array; "sparse" -> CSR
     density: float = 0.0           # sparse format: true nnz / (n * d)
+    cond: float = 1.0              # dense format: geometric column-spectrum
+                                   # knob (Gram condition ~cond^2); the
+                                   # accel benchmarks run on "illcond"
 
 
 # Offline stand-ins matched (scaled-down) to paper Table 2 aspect ratios.
@@ -116,6 +140,10 @@ DATASETS = {
                                 format="sparse", density=0.0005),
     "tiny_sparse":  DatasetSpec("tiny_sparse", n=1_024, d=512,
                                 format="sparse", density=0.05),
+    # ill-conditioned stand-in (Gram condition ~1e4): the regime where
+    # accelerated outer rounds (CoCoAConfig.accel) beat plain add --
+    # kernel_bench --accel and the pinned accel regression run here
+    "illcond":      DatasetSpec("illcond", n=4_096, d=256, cond=100.0),
 }
 
 
@@ -127,5 +155,5 @@ def load(spec_name: str, *, seed: int = 0):
             spec.n, spec.d, density=spec.density, seed=seed)
     if spec.kind == "classification":
         return make_classification(spec.n, spec.d, seed=seed,
-                                   sparsity=spec.sparsity)
+                                   sparsity=spec.sparsity, cond=spec.cond)
     return make_regression(spec.n, spec.d, seed=seed)

@@ -54,8 +54,8 @@ import numpy as np
 from repro import comm
 from repro.checkpoint import CheckpointManager
 from repro.core import CoCoAConfig, solve
-from repro.core.cocoa import (_SPARSE_SOLVERS, CoCoAState, init_state,
-                              reshard_w_state)
+from repro.core.cocoa import CoCoAState, init_state, reshard_w_state
+from repro.core.solvers import sparse_counterpart
 from repro.core.regularizers import get_regularizer
 from repro.data import DATASETS, load, partition
 from repro.data.sparse import (FeatureShards, SparseShards, partition_sparse,
@@ -97,6 +97,10 @@ def main():
     ap.add_argument("--solver", default="sdca",
                     choices=["sdca", "sdca_kernel", "sdca_sparse",
                              "sdca_sparse_kernel", "gd", "sdca_deadline"])
+    ap.add_argument("--accel", default="none",
+                    help="outer momentum over the round operator: none | "
+                         "nesterov[:<restart>] | catalyst:<kappa> -- fewer "
+                         "rounds at zero extra wire floats (core.accel)")
     ap.add_argument("--backend", default="vmap", choices=["vmap", "shard_map"])
     ap.add_argument("--mesh", default="",
                     help="'KxM' 2-D (data x model) mesh: K workers, w "
@@ -193,7 +197,7 @@ def main():
     mk_cfg = dict(loss=args.loss, lam=args.lam, H=args.H, solver=args.solver,
                   backend=args.backend, compress=args.compress,
                   compress_k=args.compress_k, topology=args.topology,
-                  gather=args.gather, reg=args.reg,
+                  gather=args.gather, reg=args.reg, accel=args.accel,
                   model_axis="model" if M > 1 else None)
 
     def make_cfg(K):
@@ -417,7 +421,7 @@ def main():
     # one scalar psum per coordinate step
     zx_plan = None
     if wspec.sharded and isinstance(Xp, FeatureShards) and \
-            _SPARSE_SOLVERS.get(args.solver) == "sdca_sparse_kernel":
+            sparse_counterpart(args.solver) == "sdca_sparse_kernel":
         from repro.kernels.ops import sparse_zx_plan
         zx_plan = sparse_zx_plan(Xp.cols.shape[2], wspec.d_local, args.H,
                                  r_max=int(Xp.cols.shape[-1]),
@@ -427,7 +431,8 @@ def main():
                                  compressor=cfg.compressor(M=M),
                                  topo=topo, gather=args.gather,
                                  extra_hops=comm.model_hops(wspec, K, args.H,
-                                                            zx_plan=zx_plan))
+                                                            zx_plan=zx_plan)
+                                 + comm.accel_hops(args.accel))
     pr = tr.per_round()
     dense_floats = K * d_dim
     print(f"comm[{args.topology}{'+gather' if args.gather else ''}"
